@@ -1,0 +1,61 @@
+"""Shared benchmark infrastructure.
+
+All Table-1/Fig-4/Fig-6 numbers come from the same simulation matrix
+(4 edge-model deployments × {stable, fluctuating} × 4 schedulers), computed
+once and cached; Fig 5 runs its own saturation sweep. `BENCH_N` scales the
+workload (default 6000 services; the paper uses 10000 — set BENCH_N=10000
+for the full run).
+"""
+from __future__ import annotations
+
+import copy
+import functools
+import os
+import time
+from typing import Dict, List, Tuple
+
+from repro.cluster import (
+    BandwidthModel, SimResult, Simulator, generate_workload, paper_testbed,
+)
+from repro.core import PerLLMScheduler, make_baselines
+
+EDGE_MODELS = ("yi-6b", "llama2-7b", "llama3-8b", "yi-9b")
+METHODS = ("PerLLM", "FineInfer", "AGOD", "RewardlessGuidance")
+BENCH_N = int(os.environ.get("BENCH_N", "6000"))
+SIM_SEED = 42
+BW_SEED = 1
+
+
+def make_scheduler(name: str, n_servers: int):
+    if name == "PerLLM":
+        return PerLLMScheduler(n_servers)
+    for b in make_baselines(n_servers):
+        if b.name == name:
+            return b
+    raise KeyError(name)
+
+
+@functools.lru_cache(maxsize=None)
+def run_cell(edge_model: str, fluctuating: bool, method: str,
+             n: int = BENCH_N) -> Tuple[SimResult, float]:
+    """One (deployment × bandwidth × scheduler) simulation. Returns
+    (result, wall_seconds)."""
+    specs = paper_testbed(edge_model)
+    services = generate_workload(n, seed=0)
+    sim = Simulator(specs, BandwidthModel(fluctuating=fluctuating,
+                                          seed=BW_SEED), seed=SIM_SEED)
+    sched = make_scheduler(method, len(specs))
+    t0 = time.time()
+    res = sim.run([copy.copy(s) for s in services], sched)
+    return res, time.time() - t0
+
+
+def matrix(fluctuating: bool) -> Dict[str, Dict[str, SimResult]]:
+    out = {}
+    for em in EDGE_MODELS:
+        out[em] = {m: run_cell(em, fluctuating, m)[0] for m in METHODS}
+    return out
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

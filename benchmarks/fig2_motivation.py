@@ -1,0 +1,60 @@
+"""Figure 2 (motivation): single-server processing time & energy vs load.
+
+Reproduces the observation that drove PerLLM: as concurrent services grow,
+the cloud's processing time and energy surge (uplink congestion) while the
+edge degrades gracefully (compute-bound, local link).
+"""
+from __future__ import annotations
+
+import copy
+import time
+
+from benchmarks.common import csv_row
+from repro.cluster import BandwidthModel, Simulator, generate_workload, paper_testbed
+from repro.cluster.simulator import SchedulerBase
+
+
+class _FixedTier(SchedulerBase):
+    """All traffic to one tier: the cloud, or round-robin over the edges."""
+
+    def __init__(self, servers, name):
+        self.servers = list(servers)
+        self.name = name
+        self._i = 0
+
+    def schedule(self, arrivals, view, t):
+        out = []
+        for r in arrivals:
+            j = self.servers[self._i % len(self.servers)]
+            self._i += 1
+            view.commit(r, j)
+            out.append(j)
+        return out
+
+
+def run() -> str:
+    t0 = time.time()
+    specs = paper_testbed("llama2-7b")
+    cloud = [len(specs) - 1]
+    edges = list(range(len(specs) - 1))
+    lines = ["# Fig 2: per-service time (s) and energy (J) vs concurrency",
+             f"{'n_concurrent':>12s} {'cloud_t':>8s} {'edge_t':>8s} "
+             f"{'cloud_J':>9s} {'edge_J':>9s}"]
+    crossover = None
+    for n in (10, 40, 80, 160, 320):
+        # n services arriving within one second = n-way concurrency
+        services = generate_workload(n, rate=float(n), seed=3)
+        row = {}
+        for servers, name in ((cloud, "cloud"), (edges, "edge")):
+            sim = Simulator(specs, BandwidthModel(False, seed=1), seed=7)
+            res = sim.run([copy.copy(s) for s in services],
+                          _FixedTier(servers, name))
+            row[name] = (res.avg_processing_time,
+                         (res.e_tx + res.e_infer) / n)
+        lines.append(f"{n:12d} {row['cloud'][0]:8.2f} {row['edge'][0]:8.2f} "
+                     f"{row['cloud'][1]:9.1f} {row['edge'][1]:9.1f}")
+        if crossover is None and row["cloud"][0] > row["edge"][0]:
+            crossover = n
+    print("\n".join(lines))
+    return csv_row("fig2_motivation", (time.time() - t0) * 1e6,
+                   f"cloud_slower_beyond_n={crossover}")

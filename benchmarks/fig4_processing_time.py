@@ -1,0 +1,27 @@
+"""Figure 4: average processing time per service under each method."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import EDGE_MODELS, METHODS, csv_row, matrix
+
+
+def run() -> str:
+    t0 = time.time()
+    lines = []
+    for fluct in (False, True):
+        tag = "fluctuating" if fluct else "stable"
+        m = matrix(fluct)
+        lines.append(f"# Fig 4: avg processing time, s ({tag})")
+        lines.append(f"{'model':12s} "
+                     + " ".join(f"{x:>20s}" for x in METHODS))
+        for em in EDGE_MODELS:
+            lines.append(f"{em:12s} " + " ".join(
+                f"{m[em][x].avg_processing_time:20.2f}" for x in METHODS))
+    m = matrix(False)
+    speedup = min(m[em]["FineInfer"].avg_processing_time
+                  / m[em]["PerLLM"].avg_processing_time
+                  for em in EDGE_MODELS)
+    print("\n".join(lines))
+    return csv_row("fig4_processing_time", (time.time() - t0) * 1e6,
+                   f"min_time_speedup_vs_fineinfer={speedup:.2f}x")

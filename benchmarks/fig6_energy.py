@@ -1,0 +1,36 @@
+"""Figure 6: energy cost (transmission / inference / idle) per method."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import EDGE_MODELS, METHODS, csv_row, matrix
+
+
+def run() -> str:
+    t0 = time.time()
+    lines = []
+    for fluct in (False, True):
+        tag = "fluctuating" if fluct else "stable"
+        m = matrix(fluct)
+        lines.append(f"# Fig 6: total energy, kJ (tx/infer/idle) ({tag})")
+        lines.append(f"{'model':12s} "
+                     + " ".join(f"{x:>26s}" for x in METHODS))
+        for em in EDGE_MODELS:
+            cells = []
+            for x in METHODS:
+                r = m[em][x]
+                cells.append(f"{r.total_energy/1e3:8.0f}"
+                             f"({r.e_tx/1e3:.0f}/{r.e_infer/1e3:.0f}"
+                             f"/{r.e_idle/1e3:.0f})")
+            lines.append(f"{em:12s} " + " ".join(f"{c:>26s}" for c in cells))
+    m = matrix(False)
+    red_fine = min(1 - m[em]["PerLLM"].total_energy
+                   / m[em]["FineInfer"].total_energy for em in EDGE_MODELS)
+    red_avg = min(
+        1 - m[em]["PerLLM"].total_energy
+        / (sum(m[em][x].total_energy for x in METHODS if x != "PerLLM") / 3)
+        for em in EDGE_MODELS)
+    print("\n".join(lines))
+    derived = (f"energy_cut_vs_fineinfer={red_fine*100:.0f}%;"
+               f"vs_baseline_avg={red_avg*100:.0f}%")
+    return csv_row("fig6_energy", (time.time() - t0) * 1e6, derived)

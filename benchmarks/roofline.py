@@ -1,0 +1,101 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch × shape) on the single-pod 16×16 mesh:
+  compute term    = FLOPs / (chips × 197 TF/s bf16)
+  memory term     = bytes / (chips × 819 GB/s HBM)
+  collective term = collective bytes / (chips × 50 GB/s ICI link)
+
+FLOPs/bytes come from the loop-aware jaxpr cost model (global, ÷chips);
+collective bytes come from the compiled per-device HLO. MODEL_FLOPS is
+6·N_active·D for training and 2·N_active·D for prefill/decode — the
+MODEL/HLO ratio flags dispatch/remat waste. The memory term uses *unfused*
+bytes, an upper bound (XLA fusion reduces real HBM traffic).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import csv_row
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12        # bf16 per v5e chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+SUGGEST = {
+    "compute": ("drop non-useful FLOPs (capacity-based MoE dispatch, less "
+                "remat, fused attention kernel)"),
+    "memory": ("improve fusion/layout: Pallas flash kernels remove the "
+               "unfused attention traffic; bigger microbatch raises "
+               "arithmetic intensity"),
+    "collective": ("re-shard to cut gathers: wider data axis, expert "
+                   "parallelism for MoE, overlap collectives with compute"),
+}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch    # decode: one token per sequence
+
+
+def load_reports(path: str = "dryrun_single.jsonl"):
+    if not os.path.exists(path):
+        return []
+    rows = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("error") or r.get("skipped"):
+            continue
+        rows[(r["arch"], r["shape"])] = r   # keep latest per pair
+    return list(rows.values())
+
+
+def terms(r: dict) -> dict:
+    chips = r["n_devices"]
+    compute = r["global_flops"] / chips / PEAK_FLOPS
+    memory = r["global_bytes_unfused"] / chips / HBM_BW
+    collective = r["collective_bytes"]["total"] / LINK_BW  # already per-chip
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    mf = model_flops(r["arch"], r["shape"])
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / r["global_flops"] if r["global_flops"] else 0.0,
+        "suggestion": SUGGEST[dominant],
+    }
+
+
+def run(path: str = "dryrun_single.jsonl") -> str:
+    t0 = time.time()
+    reports = load_reports(path)
+    if not reports:
+        print(f"# roofline: no dry-run artifacts at {path} — run "
+              "`python -m repro.launch.dryrun --all --json {path}` first")
+        return csv_row("roofline", 0.0, "missing_dryrun_artifacts")
+    lines = ["# Roofline terms per (arch × shape), single-pod 16×16",
+             f"{'arch':18s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
+             f" {'coll_s':>10s} {'bound':>10s} {'useful':>7s}"]
+    worst = None
+    for r in sorted(reports, key=lambda x: (x["arch"], x["shape"])):
+        t = terms(r)
+        lines.append(
+            f"{r['arch']:18s} {r['shape']:12s} {t['compute_s']:10.4f} "
+            f"{t['memory_s']:10.4f} {t['collective_s']:10.4f} "
+            f"{t['dominant']:>10s} {t['useful_ratio']:7.2f}")
+        if worst is None or t["useful_ratio"] < worst[1]:
+            worst = (f"{r['arch']}/{r['shape']}", t["useful_ratio"])
+    lines.append("# suggestion per dominant term: "
+                 + "; ".join(f"{k}: {v}" for k, v in SUGGEST.items()))
+    print("\n".join(lines))
+    return csv_row("roofline", (time.time() - t0) * 1e6,
+                   f"worst_useful_ratio={worst[0]}:{worst[1]:.3f}")

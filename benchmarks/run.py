@@ -1,0 +1,49 @@
+"""Benchmark driver — one experiment per paper table/figure.
+
+Prints each experiment's human-readable table, then a final CSV block:
+``name,us_per_call,derived``.
+
+  BENCH_N=10000 PYTHONPATH=src python -m benchmarks.run        # paper scale
+  PYTHONPATH=src python -m benchmarks.run                      # default 6000
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        ablation_csucb, fig2_motivation, fig4_processing_time,
+        fig5_throughput, fig6_energy, hetero_edges, regret_bound, roofline,
+        table1_success_rate, tpu_cloud,
+    )
+    experiments = [
+        ("fig2_motivation", fig2_motivation.run),
+        ("table1_success_rate", table1_success_rate.run),
+        ("fig4_processing_time", fig4_processing_time.run),
+        ("fig5_throughput", fig5_throughput.run),
+        ("fig6_energy", fig6_energy.run),
+        ("regret_bound", regret_bound.run),
+        ("ablation_csucb", ablation_csucb.run),
+        ("tpu_cloud", tpu_cloud.run),
+        ("hetero_edges", hetero_edges.run),
+        ("roofline", roofline.run),
+    ]
+    rows = []
+    for name, fn in experiments:
+        print(f"\n===== {name} =====")
+        try:
+            rows.append(fn())
+        except Exception:  # noqa: BLE001 — keep the suite running
+            traceback.print_exc()
+            rows.append(f"{name},0.0,ERROR")
+    print("\n# name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    if any(r.endswith("ERROR") for r in rows):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Table 1: average success rates for meeting processing-time requirements.
+
+Paper: PerLLM ≥ 97–99%; baselines 58–77%.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import EDGE_MODELS, METHODS, csv_row, matrix, run_cell
+
+
+def run() -> str:
+    t0 = time.time()
+    lines = []
+    for fluct in (False, True):
+        tag = "fluctuating" if fluct else "stable"
+        m = matrix(fluct)
+        lines.append(f"# Table 1 ({tag} bandwidth)")
+        header = f"{'model':12s} " + " ".join(f"{x:>20s}" for x in METHODS)
+        lines.append(header)
+        for em in EDGE_MODELS:
+            row = f"{em:12s} " + " ".join(
+                f"{m[em][x].success_rate*100:19.1f}%" for x in METHODS)
+            lines.append(row)
+    per_min = min(matrix(False)[em]["PerLLM"].success_rate
+                  for em in EDGE_MODELS)
+    wall = (time.time() - t0) * 1e6
+    derived = f"perllm_min_success={per_min*100:.1f}%"
+    print("\n".join(lines))
+    return csv_row("table1_success_rate", wall, derived)

@@ -1,0 +1,47 @@
+"""Architecture zoo tour: one forward + one decode step per assigned arch.
+
+    PYTHONPATH=src python examples/arch_zoo.py [--arch mixtral-8x7b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import (
+    cpu_context, decode_step, dummy_batch, forward, init_cache, init_params,
+    prefill,
+)
+
+
+def tour(arch: str):
+    cfg = get_config(arch).reduced()
+    ctx = cpu_context(remat=False)
+    key = jax.random.key(0)
+    params = init_params(key, cfg)
+    batch = dummy_batch(key, cfg, 2, 32, "prefill")
+    t0 = time.time()
+    cache = init_cache(cfg, 2, 64)
+    last, cache = prefill(params, batch, cache, cfg=cfg, ctx=ctx)
+    tok = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    extras = {"audio_frames": batch["audio_frames"]} if cfg.enc_dec else None
+    logits, cache = decode_step(params, tok, cache, jnp.int32(32), cfg=cfg,
+                                ctx=ctx, batch_extras=extras)
+    dt = time.time() - t0
+    full = get_config(arch)
+    print(f"{arch:20s} [{cfg.family:6s}] full={full.param_count()/1e9:6.2f}B "
+          f"reduced={cfg.param_count()/1e6:6.1f}M  prefill+decode {dt:5.2f}s "
+          f"logits={tuple(logits.shape)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ASSIGNED_ARCHS))
+    args = ap.parse_args()
+    for arch in ([args.arch] if args.arch else ASSIGNED_ARCHS):
+        tour(arch)
+
+
+if __name__ == "__main__":
+    main()

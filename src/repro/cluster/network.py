@@ -1,0 +1,24 @@
+"""Bandwidth models: stable and ±20%-fluctuating links (paper §4.1)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class BandwidthModel:
+    """Per-slot multiplicative bandwidth factor for each server link."""
+
+    def __init__(self, fluctuating: bool = False, amplitude: float = 0.2,
+                 seed: int = 0):
+        self.fluctuating = fluctuating
+        self.amplitude = amplitude
+        self._rng = np.random.default_rng(seed)
+
+    def factor(self, t_slot: int, server_idx: int) -> float:
+        if not self.fluctuating:
+            return 1.0
+        # smooth-ish fluctuation: sinusoid + noise, clipped to ±amplitude
+        base = np.sin(0.37 * t_slot + 2.1 * server_idx)
+        noise = self._rng.uniform(-1.0, 1.0)
+        f = 1.0 + self.amplitude * float(np.clip(0.6 * base + 0.4 * noise,
+                                                 -1.0, 1.0))
+        return f

@@ -1,0 +1,94 @@
+"""Edge/cloud server model with an analytic LLM cost model.
+
+The per-request cost model is derived from the deployed model's config
+(`repro.configs`):  prefill is compute-bound (2·N_active FLOPs/token), decode
+is the max of the compute and weight-streaming (memory-bandwidth) terms — the
+same roofline logic used for the TPU dry-run, applied to the cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs import get_config
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerSpec:
+    name: str
+    kind: str                 # "edge" | "cloud"
+    arch_id: str              # deployed model
+    flops: float              # sustained FLOP/s for LLM inference
+    mem_bw: float             # bytes/s effective weight-streaming bandwidth
+    power_active: float       # W while computing
+    power_idle: float         # W on standby
+    tx_power: float           # W attributable to an active transfer
+    bandwidth: float          # bits/s uplink capacity
+    max_concurrency: int      # batch lanes
+    weight_bytes_per_param: float = 1.0   # int8 deployment
+
+    # ------------------------------------------------------------------
+    def model_cfg(self):
+        return get_config(self.arch_id)
+
+    def active_params(self) -> float:
+        return float(self.model_cfg().active_param_count())
+
+    def prefill_time(self, prompt_tokens: int) -> float:
+        fl = 2.0 * self.active_params() * prompt_tokens
+        return fl / self.flops
+
+    def decode_step_time(self, batch: int = 1) -> float:
+        """Seconds per decode step for a batch (memory- vs compute-bound)."""
+        weight_stream = (self.active_params() * self.weight_bytes_per_param
+                         / self.mem_bw)
+        compute = batch * 2.0 * self.active_params() / self.flops
+        return max(weight_stream, compute)
+
+    def decode_time(self, output_tokens: int, batch: int = 1) -> float:
+        return output_tokens * self.decode_step_time(batch)
+
+    def service_time(self, prompt_tokens: int, output_tokens: int,
+                     batch: int = 1) -> float:
+        return self.prefill_time(prompt_tokens) + self.decode_time(
+            output_tokens, batch)
+
+    def tx_time(self, payload_bytes: float, share: float = 1.0) -> float:
+        """share: fraction of the uplink granted to this transfer."""
+        return payload_bytes * 8.0 / (self.bandwidth * max(share, 1e-9))
+
+
+@dataclasses.dataclass
+class ServerState:
+    """Mutable per-simulation server bookkeeping."""
+
+    spec: ServerSpec
+    busy_until: float = 0.0
+    uplink_free_at: float = 0.0
+    queued: int = 0
+    # accounting
+    e_infer: float = 0.0
+    e_tx: float = 0.0
+    e_idle: float = 0.0
+    busy_time: float = 0.0
+    tx_busy_time: float = 0.0
+    tokens_out: int = 0
+    served: int = 0
+
+    def reset(self) -> None:
+        self.busy_until = 0.0
+        self.uplink_free_at = 0.0
+        self.queued = 0
+        self.e_infer = self.e_tx = self.e_idle = 0.0
+        self.busy_time = self.tx_busy_time = 0.0
+        self.tokens_out = 0
+        self.served = 0
+
+    def finalize_idle(self, horizon: float) -> None:
+        # standby power is a constant baseline over the whole run; dynamic
+        # (inference) power is accounted separately in e_infer
+        self.e_idle = horizon * self.spec.power_idle
+
+    @property
+    def total_energy(self) -> float:
+        return self.e_infer + self.e_tx + self.e_idle

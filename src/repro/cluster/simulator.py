@@ -1,0 +1,246 @@
+"""Time-slotted discrete-event simulator for edge-cloud LLM serving.
+
+Faithful to the paper's evaluation protocol (§4): services arrive in real
+time, are scheduled to a server, upload over that server's (shared, possibly
+fluctuating) uplink, then occupy a batch lane for prefill+decode. Processing
+time = transmission + queue + inference; energy = transmission + inference +
+idle (idle accrues over the run's makespan).
+
+Servers have *hidden* efficiency factors and per-request noise — schedulers
+only observe realized outcomes, which is what makes the bandit formulation
+meaningful (and is how the real testbed behaves).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.network import BandwidthModel
+from repro.cluster.server import ServerSpec, ServerState
+from repro.cluster.workload import ServiceRequest, classify
+
+
+@dataclasses.dataclass
+class Outcome:
+    server: int
+    tx_time: float
+    queue_time: float
+    infer_time: float
+    finish: float
+    processing_time: float
+    success: bool
+    energy: float               # incremental (tx + active-infer) energy
+
+
+@dataclasses.dataclass
+class SlotView:
+    """What a scheduler may observe when assigning one slot's arrivals.
+
+    Mutable residuals (`uplink_free_at`, `lane_free`) let the scheduler
+    account for its *own* within-slot assignments (the combinatorial part of
+    the super-arm). Hidden simulator state (efficiency, noise) is NOT here.
+    """
+
+    t: float
+    specs: Sequence[ServerSpec]
+    bw_factor: List[float]
+    uplink_free_at: List[float]
+    lane_free: List[List[float]]
+
+    # ---------------- nominal predictors (no hidden factors) -------------
+    def predict_tx(self, req: ServiceRequest, j: int) -> float:
+        spec = self.specs[j]
+        start = max(self.t, self.uplink_free_at[j])
+        dur = req.payload_bytes * 8.0 / (spec.bandwidth * self.bw_factor[j])
+        return (start - self.t) + dur
+
+    def predict_queue(self, req: ServiceRequest, j: int) -> float:
+        ready = self.t + self.predict_tx(req, j)
+        lane = min(self.lane_free[j])
+        return max(lane - ready, 0.0)
+
+    def predict_infer(self, req: ServiceRequest, j: int) -> float:
+        return self.specs[j].service_time(req.prompt_tokens,
+                                          req.output_tokens)
+
+    def predict_total(self, req: ServiceRequest, j: int) -> float:
+        return (self.predict_tx(req, j) + self.predict_queue(req, j)
+                + self.predict_infer(req, j))
+
+    def commit(self, req: ServiceRequest, j: int,
+               infer_scale: float = 1.0) -> None:
+        """Update residuals as if req were placed on j.
+
+        `infer_scale` lets a learning scheduler correct the nominal
+        inference-time model for the server's (hidden) efficiency."""
+        spec = self.specs[j]
+        start = max(self.t, self.uplink_free_at[j])
+        dur = req.payload_bytes * 8.0 / (spec.bandwidth * self.bw_factor[j])
+        self.uplink_free_at[j] = start + dur
+        ready = start + dur
+        lanes = self.lane_free[j]
+        li = int(np.argmin(lanes))
+        begin = max(ready, lanes[li])
+        lanes[li] = begin + self.predict_infer(req, j) * infer_scale
+
+
+class SchedulerBase:
+    name = "base"
+
+    def schedule(self, arrivals: List[ServiceRequest], view: SlotView,
+                 t_slot: int) -> List[int]:
+        raise NotImplementedError
+
+    def observe(self, req: ServiceRequest, outcome: Outcome) -> None:
+        pass
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    n_services: int
+    success_rate: float
+    avg_processing_time: float
+    p95_processing_time: float
+    throughput_tokens_per_s: float
+    makespan: float
+    e_tx: float
+    e_infer: float
+    e_idle: float
+    per_server_served: List[int]
+
+    @property
+    def total_energy(self) -> float:
+        return self.e_tx + self.e_infer + self.e_idle
+
+    def row(self) -> str:
+        return (f"{self.name:22s} succ={self.success_rate*100:5.1f}% "
+                f"time={self.avg_processing_time:6.2f}s "
+                f"thpt={self.throughput_tokens_per_s:8.1f} tok/s "
+                f"energy={self.total_energy/1e3:8.1f} kJ "
+                f"(tx={self.e_tx/1e3:.1f} inf={self.e_infer/1e3:.1f} "
+                f"idle={self.e_idle/1e3:.1f})")
+
+
+class Simulator:
+    def __init__(self, specs: Sequence[ServerSpec],
+                 bandwidth: Optional[BandwidthModel] = None,
+                 slot: float = 0.5, seed: int = 0):
+        self.specs = list(specs)
+        self.bandwidth = bandwidth or BandwidthModel()
+        self.slot = slot
+        rng = np.random.default_rng(seed)
+        # hidden per-(service-class, server) efficiency (unknown to
+        # schedulers): the paper's "diversity of task requirements" — e.g.
+        # long-context classes stress small-RAM edges, chatty classes hit
+        # cloud batching pathologies. Only per-class learners can adapt.
+        from repro.cluster.workload import N_CLASSES
+        self.efficiency = rng.uniform(0.7, 1.0, (N_CLASSES, len(specs)))
+        self.noise_rng = np.random.default_rng(seed + 1)
+
+    def run(self, services: List[ServiceRequest],
+            scheduler: SchedulerBase) -> SimResult:
+        specs = self.specs
+        states = [ServerState(spec=s) for s in specs]
+        lane_free = [[0.0] * s.max_concurrency for s in specs]
+        outcomes: List[Outcome] = []
+
+        services = sorted(services, key=lambda r: r.arrival)
+        for r in services:
+            r.class_id = classify(r)
+            r.finish = -1.0
+            r.server = -1
+        horizon_slots = int(math.ceil(services[-1].arrival / self.slot)) + 1
+
+        idx = 0
+        for ts in range(horizon_slots):
+            t0 = ts * self.slot
+            t1 = t0 + self.slot
+            arrivals = []
+            while idx < len(services) and services[idx].arrival < t1:
+                arrivals.append(services[idx])
+                idx += 1
+            if not arrivals:
+                continue
+            factors = [self.bandwidth.factor(ts, j)
+                       for j in range(len(specs))]
+            view = SlotView(
+                t=t0, specs=specs, bw_factor=list(factors),
+                uplink_free_at=[st.uplink_free_at for st in states],
+                lane_free=[list(lf) for lf in lane_free],
+            )
+            choices = scheduler.schedule(arrivals, view, ts)
+            assert len(choices) == len(arrivals)
+            for req, j in zip(arrivals, choices):
+                out = self._realize(req, j, states, lane_free, factors)
+                outcomes.append(out)
+                scheduler.observe(req, out)
+
+        makespan = max(o.finish for o in outcomes)
+        for st in states:
+            st.finalize_idle(makespan)
+
+        times = np.array([o.processing_time for o in outcomes])
+        succ = np.array([o.success for o in outcomes])
+        tokens = sum(r.prompt_tokens + r.output_tokens for r in services)
+        return SimResult(
+            name=scheduler.name,
+            n_services=len(services),
+            success_rate=float(np.mean(succ)),
+            avg_processing_time=float(np.mean(times)),
+            p95_processing_time=float(np.percentile(times, 95)),
+            throughput_tokens_per_s=tokens / makespan,
+            makespan=float(makespan),
+            e_tx=sum(st.e_tx for st in states),
+            e_infer=sum(st.e_infer for st in states),
+            e_idle=sum(st.e_idle for st in states),
+            per_server_served=[st.served for st in states],
+        )
+
+    # ------------------------------------------------------------------
+    def _realize(self, req: ServiceRequest, j: int,
+                 states: List[ServerState], lane_free: List[List[float]],
+                 factors: List[float]) -> Outcome:
+        spec = self.specs[j]
+        st = states[j]
+        # upload over the shared FIFO uplink (schedulers may defer dispatch,
+        # e.g. FineInfer's deferred batching windows)
+        dispatch = max(req.arrival, getattr(req, "defer_until", 0.0))
+        tx_start = max(dispatch, st.uplink_free_at)
+        tx_dur = req.payload_bytes * 8.0 / (spec.bandwidth * factors[j])
+        st.uplink_free_at = tx_start + tx_dur
+        ready = tx_start + tx_dur
+        # transmission energy accrues over the whole transfer window,
+        # including the congestion queue — "network congestion causes cloud
+        # servers to incur unnecessary energy costs" (paper §2.3)
+        st.e_tx += (ready - req.arrival) * spec.tx_power
+        st.tx_busy_time += tx_dur
+
+        # batch lane with hidden efficiency + noise
+        lanes = lane_free[j]
+        li = int(np.argmin(lanes))
+        begin = max(ready, lanes[li])
+        noise = float(self.noise_rng.lognormal(0.0, 0.08))
+        t_inf = (spec.service_time(req.prompt_tokens, req.output_tokens)
+                 / self.efficiency[req.class_id, j]) * noise
+        finish = begin + t_inf
+        lanes[li] = finish
+        st.busy_time += t_inf / spec.max_concurrency
+        st.e_infer += ((spec.power_active - spec.power_idle)
+                       / spec.max_concurrency) * t_inf
+        st.tokens_out += req.output_tokens
+        st.served += 1
+
+        req.finish = finish
+        req.server = j
+        proc = finish - req.arrival
+        return Outcome(
+            server=j, tx_time=(ready - req.arrival), queue_time=max(
+                begin - ready, 0.0), infer_time=t_inf, finish=finish,
+            processing_time=proc, success=proc <= req.deadline,
+            energy=tx_dur * spec.tx_power
+            + ((spec.power_active - spec.power_idle)
+               / spec.max_concurrency) * t_inf)

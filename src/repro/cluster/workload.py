@@ -1,0 +1,72 @@
+"""Diverse LLM service workload generator (paper §4.2).
+
+10,000 services, deadlines ~ U[2s, 6s], heterogeneous prompt/output lengths
+and payload sizes (services carry context documents; the payload term is what
+creates cloud uplink congestion, the paper's Fig. 2 observation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServiceRequest:
+    sid: int
+    arrival: float           # s
+    prompt_tokens: int
+    output_tokens: int
+    deadline: float          # max acceptable processing time D^Δ (s)
+    payload_bytes: float     # uplink payload (prompt + context attachments)
+    class_id: int = -1
+
+    # filled by the simulator
+    finish: float = -1.0
+    server: int = -1
+
+    @property
+    def processing_time(self) -> float:
+        return self.finish - self.arrival if self.finish >= 0 else float("inf")
+
+    @property
+    def success(self) -> bool:
+        return self.finish >= 0 and self.processing_time <= self.deadline
+
+
+def generate_workload(n_services: int = 10_000, rate: float = 10.0,
+                      seed: int = 0) -> List[ServiceRequest]:
+    """Poisson arrivals at `rate` req/s with diverse requirements."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_services)
+    arrivals = np.cumsum(gaps)
+    prompt = np.clip(rng.lognormal(5.0, 0.8, n_services), 32, 2048).astype(int)
+    out = np.clip(rng.lognormal(2.8, 0.6, n_services), 4, 96).astype(int)
+    deadline = rng.uniform(2.0, 6.0, n_services)
+    payload = rng.uniform(0.7e6, 6.7e6, n_services)  # 0.7–6.7 MB context docs
+    return [
+        ServiceRequest(sid=i, arrival=float(arrivals[i]),
+                       prompt_tokens=int(prompt[i]),
+                       output_tokens=int(out[i]),
+                       deadline=float(deadline[i]),
+                       payload_bytes=float(payload[i]))
+        for i in range(n_services)
+    ]
+
+
+# --------------------------------------------------------------------------
+# Service classes — PerLLM is *personalized*: the bandit learns per class.
+# --------------------------------------------------------------------------
+
+_PROMPT_EDGES = (128, 512)
+_DEADLINE_EDGES = (3.0, 4.5)
+
+
+def classify(req: ServiceRequest) -> int:
+    p = sum(req.prompt_tokens > e for e in _PROMPT_EDGES)
+    d = sum(req.deadline > e for e in _DEADLINE_EDGES)
+    return p * (len(_DEADLINE_EDGES) + 1) + d
+
+
+N_CLASSES = (len(_PROMPT_EDGES) + 1) * (len(_DEADLINE_EDGES) + 1)

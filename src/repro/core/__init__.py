@@ -1,0 +1,12 @@
+"""The paper's primary contribution: CS-UCB scheduling with edge-cloud
+collaboration (PerLLM, Alg. 1) plus the compared baselines."""
+from repro.core.bandit import CSUCB, CSUCBParams
+from repro.core.baselines import AGOD, FineInfer, RewardlessGuidance, make_baselines
+from repro.core.constraints import ConstraintSlacks, evaluate_constraints
+from repro.core.scheduler import PerLLMScheduler
+
+__all__ = [
+    "AGOD", "CSUCB", "CSUCBParams", "ConstraintSlacks", "FineInfer",
+    "PerLLMScheduler", "RewardlessGuidance", "evaluate_constraints",
+    "make_baselines",
+]

@@ -1,0 +1,105 @@
+"""CS-UCB: Constraint-Satisfaction Upper Confidence Bound (paper Alg. 1).
+
+Combinatorial MAB view (§3.2): the per-slot assignment of all arriving
+services is a *super arm*; each base action a = (service class, server).
+The algorithm keeps, per base action:
+
+    R̄(a)     — running mean of the shaped reward (Eq. 4)
+    L(a, t)  — pull count
+    V̄(a)     — running mean violation severity (drives the penalty P(t))
+
+and selects, among constraint-satisfying actions,
+
+    a_t = argmax R̄(a) + δ·sqrt(ln t / L(a,t)) + θ·P(a,t)      (Eq. 6)
+
+with P(a,t) = −V̄(a) (penalty proportional to the observed degree of
+violation, §3.3). The approximate regret (Eq. 5) is tracked against the
+best-in-hindsight arm per class with approximation coefficients α, β < 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSUCBParams:
+    lam: float = 1.0        # λ — weight of f(y) inside the reward (Eq. 4)
+    alpha: float = 0.9      # α — approximation coefficient (Eq. 5)
+    beta: float = 0.95      # β — approximation coefficient (Eq. 5)
+    delta: float = 0.35     # δ — exploration strength (Eq. 6)
+    theta: float = 1.0      # θ — penalty weight (Eq. 6 / Eq. 7)
+    optimistic_init: float = 0.5
+
+
+class CSUCB:
+    """Per-(class, server) UCB statistics with constraint shaping."""
+
+    def __init__(self, n_classes: int, n_servers: int,
+                 params: Optional[CSUCBParams] = None, seed: int = 0):
+        self.p = params or CSUCBParams()
+        self.n_classes = n_classes
+        self.n_servers = n_servers
+        self.mean = np.full((n_classes, n_servers),
+                            self.p.optimistic_init, np.float64)
+        self.count = np.zeros((n_classes, n_servers), np.int64)
+        self.violation = np.zeros((n_classes, n_servers), np.float64)
+        self.t = 0
+        # regret accounting (Eq. 5)
+        self.cum_reward = 0.0
+        self.cum_best = 0.0
+        self.regret_trace: List[float] = []
+
+    # ------------------------------------------------------------------
+    def ucb(self, cls: int, feasible_mask: np.ndarray) -> np.ndarray:
+        """Eq. 6 scores for one service class; −inf outside the mask."""
+        self.t += 1
+        logt = math.log(max(self.t, 2))
+        cnt = np.maximum(self.count[cls], 1)
+        explore = self.p.delta * np.sqrt(logt / cnt)
+        bonus = np.where(self.count[cls] == 0, 1e3, 0.0)  # force first pull
+        penalty = -self.p.theta * self.violation[cls]
+        score = self.mean[cls] + explore + bonus + penalty
+        return np.where(feasible_mask, score, -np.inf)
+
+    def select(self, cls: int, feasible_mask: np.ndarray) -> int:
+        score = self.ucb(cls, feasible_mask)
+        if not np.isfinite(score).any():
+            # no feasible arm: fall back to least-violating arm (paper: the
+            # service is assigned to the most resource-rich server)
+            score = self.mean[cls] - self.p.theta * self.violation[cls]
+        return int(np.argmax(score))
+
+    # ------------------------------------------------------------------
+    def shaped_reward(self, energy_norm: float, f_y: float) -> float:
+        """Eq. 4: r = −E_norm + λ·f(y) (f clipped into a bounded range)."""
+        return -energy_norm + self.p.lam * float(np.clip(f_y, -1.0, 1.0))
+
+    def update(self, cls: int, server: int, reward: float,
+               violation_severity: float) -> None:
+        self.count[cls, server] += 1
+        n = self.count[cls, server]
+        self.mean[cls, server] += (reward - self.mean[cls, server]) / n
+        v = self.violation[cls, server]
+        self.violation[cls, server] = v + (max(violation_severity, 0.0) - v) / n
+
+        # Eq. 5 approximate regret vs best-in-hindsight arm of this class
+        best = float(np.max(self.mean[cls]))
+        self.cum_best += self.p.alpha * self.p.beta * best
+        self.cum_reward += reward
+        self.regret_trace.append(self.cum_best - self.cum_reward)
+
+    # ------------------------------------------------------------------
+    @property
+    def regret(self) -> float:
+        return self.regret_trace[-1] if self.regret_trace else 0.0
+
+    def regret_bound(self) -> float:
+        """Eq. 7: sqrt(2·M·N·log L) + θ·P̄ with L = max pulls."""
+        big_l = max(int(self.count.max()), 2)
+        p_bar = float(np.mean(self.violation))
+        return math.sqrt(2.0 * self.n_classes * self.n_servers
+                         * math.log(big_l)) + self.p.theta * p_bar

@@ -1,0 +1,142 @@
+"""Baseline schedulers the paper compares against (§4.1).
+
+FineInfer [He et al., EuroMLSys'24] — cloud-only with *deferred continuous
+batching*: requests are held and dispatched at batching-window boundaries.
+
+AGOD [Du et al., TMC'24] — edge-only; the diffusion-model + DRL offloading
+policy is represented by its decision rule: an ε-greedy learned value per
+(class, edge) with least-loaded tie-breaking (the published behavior:
+learns edge selection, cannot use the cloud).
+
+RewardlessGuidance [Fang et al., VTC'23] — edge-cloud active inference:
+picks the server minimizing expected free energy = normalized *nominal*
+expected completion time + normalized expected energy. No reward learning
+(that is the method's premise) — so it cannot adapt to hidden efficiency or
+congestion dynamics, which is exactly what the paper exploits.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.cluster.simulator import Outcome, SchedulerBase, SlotView
+from repro.cluster.workload import N_CLASSES, ServiceRequest
+
+
+class FineInfer(SchedulerBase):
+    name = "FineInfer"
+
+    def __init__(self, n_servers: int, batch_window: float = 1.0, **_):
+        self.n_servers = n_servers
+        self.cloud = n_servers - 1          # convention: last server = cloud
+        self.batch_window = batch_window
+
+    def schedule(self, arrivals: List[ServiceRequest], view: SlotView,
+                 t_slot: int) -> List[int]:
+        # deferred batching: requests are held until the next batching
+        # window boundary before dispatch
+        import math
+        for req in arrivals:
+            req.defer_until = math.ceil(req.arrival / self.batch_window) \
+                * self.batch_window
+            view.commit(req, self.cloud)
+        return [self.cloud] * len(arrivals)
+
+
+class AGOD(SchedulerBase):
+    name = "AGOD"
+
+    def __init__(self, n_servers: int, epsilon: float = 0.08, seed: int = 0,
+                 **_):
+        self.n_edges = n_servers - 1
+        self.eps = epsilon
+        self.rng = np.random.default_rng(seed)
+        self.value = np.zeros((N_CLASSES, self.n_edges))
+        self.count = np.zeros((N_CLASSES, self.n_edges), np.int64)
+
+    def schedule(self, arrivals: List[ServiceRequest], view: SlotView,
+                 t_slot: int) -> List[int]:
+        out = []
+        for req in arrivals:
+            if self.rng.uniform() < self.eps:
+                j = int(self.rng.integers(self.n_edges))
+            else:
+                load = np.array([min(view.lane_free[e]) for e
+                                 in range(self.n_edges)])
+                score = self.value[req.class_id] - 0.2 * (load - view.t)
+                j = int(np.argmax(score))
+            view.commit(req, j)
+            out.append(j)
+        return out
+
+    def observe(self, req: ServiceRequest, out: Outcome) -> None:
+        if out.server >= self.n_edges:
+            return
+        cls = req.class_id
+        r = 1.0 if out.success else -1.0
+        self.count[cls, out.server] += 1
+        n = self.count[cls, out.server]
+        self.value[cls, out.server] += (r - self.value[cls, out.server]) / n
+
+
+class RewardlessGuidance(SchedulerBase):
+    name = "RewardlessGuidance"
+
+    def __init__(self, n_servers: int, w_time: float = 0.6,
+                 w_energy: float = 0.4, belief_rate: float = 0.006,
+                 temp: float = 0.5, seed: int = 0, **_):
+        self.n_servers = n_servers
+        self.w_time = w_time
+        self.w_energy = w_energy
+        # active inference keeps an *epistemic* (exploration) drive: actions
+        # are sampled from the EFE softmax rather than argmin'd, and the
+        # drive never anneals (there is no reward signal to converge on)
+        self.temp = temp
+        self.rng = np.random.default_rng(seed)
+        # active-inference state belief: slow EMA of observed lag vs the
+        # nominal model (beliefs about hidden state, not reward learning)
+        self.belief_rate = belief_rate
+        self.lag_belief = np.zeros(n_servers)
+
+    def _expected_energy(self, req: ServiceRequest, j: int,
+                         view: SlotView) -> float:
+        spec = view.specs[j]
+        t_inf = view.predict_infer(req, j)
+        t_tx = req.payload_bytes * 8.0 / spec.bandwidth
+        return ((spec.power_active - spec.power_idle)
+                / spec.max_concurrency * t_inf + spec.tx_power * t_tx)
+
+    def schedule(self, arrivals: List[ServiceRequest], view: SlotView,
+                 t_slot: int) -> List[int]:
+        out = []
+        for req in arrivals:
+            # expected free energy from *static nominal* models (rewardless:
+            # no learning, no live congestion state — the method's premise)
+            efe = []
+            for j in range(self.n_servers):
+                spec = view.specs[j]
+                t_stat = (view.predict_infer(req, j)
+                          + req.payload_bytes * 8.0 / spec.bandwidth
+                          + self.lag_belief[j])
+                t = t_stat / max(req.deadline, 1e-9)
+                e = self._expected_energy(req, j, view) / 500.0
+                efe.append(self.w_time * t + self.w_energy * e)
+            efe = np.asarray(efe)
+            p = np.exp(-(efe - efe.min()) / self.temp)
+            p /= p.sum()
+            j = int(self.rng.choice(self.n_servers, p=p))
+            view.commit(req, j)
+            out.append(j)
+        return out
+
+    def observe(self, req: ServiceRequest, out: Outcome) -> None:
+        j = out.server
+        spec_nominal = out.infer_time  # realized; belief tracks extra lag
+        lag = max(out.processing_time - spec_nominal, 0.0)
+        self.lag_belief[j] += self.belief_rate * (lag - self.lag_belief[j])
+
+
+def make_baselines(n_servers: int, seed: int = 0):
+    return [FineInfer(n_servers), AGOD(n_servers, seed=seed),
+            RewardlessGuidance(n_servers)]

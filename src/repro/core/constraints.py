@@ -1,0 +1,70 @@
+"""Constraint-satisfaction mechanism (paper Eq. 2 constraints + Eq. 3 f(y)).
+
+C1: per-service processing time within its requirement D^Δ
+C2: assigned compute within the server's available compute
+C3: assigned uplink bandwidth within the server's available bandwidth
+C4: exactly one server per service (structural — enforced by the action
+    space, every action assigns exactly one server).
+
+`f(y) = min(normalized slacks)`; a scheme satisfies all constraints iff
+f(y) >= 0. The same function is used (a) as the feasibility filter before
+arm selection and (b) as the reward shaping term λ·f(y) in Eq. 4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.cluster.simulator import SlotView
+from repro.cluster.workload import ServiceRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstraintSlacks:
+    time: float        # (D^Δ − D̂) / D^Δ
+    compute: float     # (C_max − ΣC) / C_max
+    bandwidth: float   # (B_max − ΣB) / B_max
+
+    @property
+    def f(self) -> float:
+        """Eq. 3: minimum normalized slack."""
+        return min(self.time, self.compute, self.bandwidth)
+
+    @property
+    def satisfied(self) -> bool:
+        return self.f >= 0.0
+
+
+def evaluate_constraints(req: ServiceRequest, j: int, view: SlotView,
+                         predicted_time: Optional[float] = None,
+                         ) -> ConstraintSlacks:
+    """Normalized slacks for assigning `req` to server `j` given residuals.
+
+    `predicted_time` lets CS-UCB substitute its *learned* processing-time
+    estimate for C1; the default is the nominal analytic predictor.
+    """
+    spec = view.specs[j]
+    d_hat = (view.predict_total(req, j) if predicted_time is None
+             else predicted_time)
+    time_slack = (req.deadline - d_hat) / req.deadline
+
+    # C2 — compute: lane-seconds already committed within the deadline
+    # horizon vs. available lane-seconds.
+    horizon = req.deadline
+    lanes = view.lane_free[j]
+    committed = sum(max(lf - view.t, 0.0) for lf in lanes)
+    capacity = spec.max_concurrency * horizon
+    need = view.predict_infer(req, j)
+    compute_slack = (capacity - committed - need) / capacity
+
+    # C3 — bandwidth: uplink backlog + this payload vs. deliverable bits
+    # within the deadline.
+    backlog_s = max(view.uplink_free_at[j] - view.t, 0.0)
+    bw = spec.bandwidth * view.bw_factor[j]
+    need_bits = req.payload_bytes * 8.0
+    cap_bits = bw * horizon
+    used_bits = backlog_s * bw
+    bw_slack = (cap_bits - used_bits - need_bits) / cap_bits
+
+    return ConstraintSlacks(time=time_slack, compute=compute_slack,
+                            bandwidth=bw_slack)

@@ -1,0 +1,123 @@
+"""PerLLM scheduler: CS-UCB service scheduling + resource allocation.
+
+Implements paper Algorithm 1. Per slot, arrivals are assigned sequentially
+(building the super arm): for each service the constraint-satisfaction
+mechanism filters the feasible servers using *learned* processing-time
+estimates, CS-UCB picks the feasible arm with the best UCB score, and the
+slot view's residuals are committed so later services in the same slot see
+the reduced capacity (C2/C3 accounting).
+
+Observed outcomes feed back: reward = −energy_norm + λ·f(y) (Eq. 4), plus a
+violation-severity update that drives the penalty term P(t).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cluster.simulator import Outcome, SchedulerBase, SlotView
+from repro.cluster.workload import N_CLASSES, ServiceRequest
+from repro.core.bandit import CSUCB, CSUCBParams
+from repro.core.constraints import ConstraintSlacks, evaluate_constraints
+
+# Energy normalization scale (J) — a typical per-service energy magnitude;
+# keeps the two reward terms in Eq. 4 comparable.
+E_SCALE = 100.0
+
+
+class PerLLMScheduler(SchedulerBase):
+    name = "PerLLM"
+
+    def __init__(self, n_servers: int, params: Optional[CSUCBParams] = None,
+                 seed: int = 0):
+        self.n_servers = n_servers
+        self.bandit = CSUCB(N_CLASSES, n_servers, params, seed=seed)
+        # learned per-(class, server) processing-time ratio vs the nominal
+        # analytic estimate (captures hidden efficiency + congestion)
+        self.time_ratio = np.ones((N_CLASSES, n_servers), np.float64)
+        self.ratio_count = np.zeros((N_CLASSES, n_servers), np.int64)
+        # prediction-error second moment -> pessimistic C1 margin
+        self.err_var = np.zeros((N_CLASSES, n_servers), np.float64)
+        # per-(class, server) inference-time ratio (hidden efficiency)
+        self.infer_ratio = np.ones((N_CLASSES, n_servers), np.float64)
+        self._pending_slacks: Dict[int, ConstraintSlacks] = {}
+        self._nominal_pred: Dict[int, float] = {}
+        self._last_nominal_infer: Dict[int, float] = {}
+
+    # ------------------------------------------------------------------
+    # C1 safety margin: guards against realization noise and within-slot
+    # queue drift when checking the processing-time constraint.
+    SAFETY = 1.05
+
+    def predicted_time(self, req: ServiceRequest, j: int,
+                       view: SlotView) -> float:
+        cls = req.class_id
+        d_hat = (view.predict_tx(req, j) + view.predict_queue(req, j)
+                 + view.predict_infer(req, j) * self.infer_ratio[cls, j])
+        margin = math.sqrt(self.err_var[cls, j])
+        return d_hat * self.time_ratio[cls, j] * self.SAFETY + margin
+
+    def schedule(self, arrivals: List[ServiceRequest], view: SlotView,
+                 t_slot: int) -> List[int]:
+        choices = []
+        for req in arrivals:
+            slacks = []
+            feasible = np.zeros(self.n_servers, bool)
+            for j in range(self.n_servers):
+                d_hat = self.predicted_time(req, j, view)
+                s = evaluate_constraints(req, j, view, predicted_time=d_hat)
+                slacks.append(s)
+                feasible[j] = s.satisfied
+            if feasible.any():
+                j = self.bandit.select(req.class_id, feasible)
+            else:
+                # C1 failover (paper §3.1): no feasible server -> assign to
+                # the most resource-rich one, i.e. minimum predicted time
+                j = int(np.argmin([self.predicted_time(req, jj, view)
+                                   for jj in range(self.n_servers)]))
+            self._pending_slacks[req.sid] = slacks[j]
+            self._nominal_pred[req.sid] = self.predicted_time(req, j, view) \
+                / self.SAFETY
+            self._last_nominal_infer[req.sid] = view.predict_infer(req, j)
+            view.commit(req, j,
+                        infer_scale=self.infer_ratio[req.class_id, j])
+            choices.append(j)
+        return choices
+
+    def observe(self, req: ServiceRequest, out: Outcome) -> None:
+        slacks = self._pending_slacks.pop(req.sid, None)
+        nominal = self._nominal_pred.pop(req.sid, None)
+        cls, j = req.class_id, out.server
+
+        # realized constraint slack (C1 realized; C2/C3 from schedule time)
+        time_slack = (req.deadline - out.processing_time) / req.deadline
+        f_y = min(time_slack,
+                  slacks.compute if slacks else 0.0,
+                  slacks.bandwidth if slacks else 0.0)
+        reward = self.bandit.shaped_reward(out.energy / E_SCALE, f_y)
+        violation = max(-f_y, 0.0)
+        self.bandit.update(cls, j, reward, violation)
+
+        # update learned estimators: per-server efficiency (from pure
+        # inference time), per-class residual bias, and error variance
+        nom_inf = out.infer_time  # realized
+        # realized/nominal inference ratio: EMA, robust to noise
+        # (predict_infer is deterministic given the request)
+        self.infer_ratio[cls, j] += 0.1 * (
+            out.infer_time / max(self._last_nominal_infer.pop(req.sid, nom_inf),
+                                 1e-9) - self.infer_ratio[cls, j])
+        if nominal and nominal > 0:
+            ratio = out.processing_time / nominal
+            self.ratio_count[cls, j] += 1
+            n = self.ratio_count[cls, j]
+            self.time_ratio[cls, j] += (ratio - self.time_ratio[cls, j]) / n
+            err = out.processing_time - nominal * self.time_ratio[cls, j]
+            self.err_var[cls, j] += (err * err - self.err_var[cls, j]) \
+                / max(n, 1)
+
+    # ------------------------------------------------------------------
+    @property
+    def regret_trace(self) -> List[float]:
+        return self.bandit.regret_trace

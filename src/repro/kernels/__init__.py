@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the serving hot paths (+ pure-jnp oracles).
+
+flash_attention — prefill/train attention, online softmax, BlockSpec-tiled.
+decode_attention — flash-decode against long KV caches.
+ref — the jnp oracles every kernel is allclose-tested against.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

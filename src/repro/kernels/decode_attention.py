@@ -1,0 +1,104 @@
+"""Flash-decode: single-token attention against a long KV cache (Pallas TPU).
+
+One query row per (batch, q-head); the KV sequence is the innermost grid
+axis with online-softmax state carried in VMEM scratch. Because slot order
+is irrelevant (keys are rotated before caching), the same kernel serves both
+linear caches (`valid = slot < pos+1`) and rolling sliding-window caches
+(`valid = slot < min(pos+1, W)`); the wrapper picks `valid_len`.
+
+TPU notes: the query row is broadcast against (block_k, D) KV tiles — the
+contraction is a (1×D)·(D×block_k) VPU/MXU matvec per tile; block_k=512
+keeps ≥4 lanes of 128 busy. Per-(b, h) state is 2 scalars + a D-vector in
+VMEM; HBM traffic is exactly one read of the valid cache prefix, which is
+the roofline floor for decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_k: int, n_kv_blocks: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    slot = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    valid = slot < vl_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def decode_attention(q, k, v, valid_len, *, scale: float = 1.0,
+                     block_k: int = 512, interpret: bool = False):
+    """q: (B, Hq, D); k, v: (B, Hkv, S, D); valid_len: scalar int32.
+
+    Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    g = hq // hkv
+    block_k = min(block_k, s)
+    assert s % block_k == 0, (s, block_k)
+    n_kv = s // block_k
+    grid = (b, hq, n_kv)
+
+    q4 = q[:, :, None, :]     # (B, Hq, 1, D) so blocks are 2D tiles
+    vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (1,))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               n_kv_blocks=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h, ki: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, ki, g=g: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, ki, g=g: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h, ki: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vl, q4, k, v)
+    return out[:, :, 0, :]

@@ -1,0 +1,61 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+`flash_attention` here accepts the model-layout tensors
+(B, S, H, D) and handles transposition + CPU fallback:
+on a CPU backend Pallas-TPU cannot lower, so kernels run in interpret mode
+when `interpret=None` (auto) and the backend is CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def flash_attention(q, k, v, *, mask=None, causal: bool = True,
+                    window: int = 0, q_offset: int = 0, scale: float = 1.0,
+                    interpret: Optional[bool] = None):
+    """Model-layout flash attention. q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D).
+
+    `mask` is accepted for API-compatibility with the jnp path but must be
+    expressible as (causal, window, q_offset) — the kernel computes masking
+    from block iota, it never materializes an (Sq, Sk) mask.
+    """
+    del mask
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _fa.flash_attention(
+        qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
+        scale=scale, interpret=_auto_interpret(interpret))
+    return jnp.swapaxes(out, 1, 2)
+
+
+def decode_attention(q, k, v, valid_len, *, scale: float = 1.0,
+                     interpret: Optional[bool] = None):
+    """q: (B, 1, Hq, D) or (B, Hq, D); k/v: (B, S, Hkv, D)."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _dec.decode_attention(q, kt, vt, valid_len, scale=scale,
+                                interpret=_auto_interpret(interpret))
+    return out[:, None] if squeeze else out
+
+
+# re-export oracles for tests/benchmarks
+flash_attention_ref = _ref.flash_attention_ref
+decode_attention_ref = _ref.decode_attention_ref

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references the kernel tests `assert_allclose`
+against, and the path the model code uses on CPU (where Pallas-TPU cannot
+lower). Signatures mirror `repro.kernels.ops`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0, scale: float = 1.0):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). GQA via head grouping.
+
+    Returns (B, Hq, Sq, D) in q.dtype; softmax in f32.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window > 0:
+        mask = mask & (ki > qi - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def ssd_diag_ref(x, dt, A, Bm, Cm, *, chunk: int = 256):
+    """Oracle for the SSD diagonal-block kernel (pure jnp, per chunk)."""
+    b, s, h, p = x.shape
+    chunk = min(chunk, s)
+    nc = s // chunk
+    xr = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Br = Bm.reshape(b, nc, chunk, -1).astype(jnp.float32)
+    Cr = Cm.reshape(b, nc, chunk, -1).astype(jnp.float32)
+    a = dtr * A
+    cum = jnp.cumsum(a, axis=2)
+    dtx = dtr[..., None] * xr
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cr, Br)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    mask = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+    lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+    y = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", scores, lmat, dtx)
+    return y.reshape(b, s, h, p)
+
+
+def decode_attention_ref(q, k, v, valid_len, *, scale: float = 1.0):
+    """Single-step decode attention against a (possibly rolling) KV cache.
+
+    q: (B, Hq, D); k, v: (B, Hkv, S, D); valid_len: scalar or (B,) — number
+    of valid cache slots (slot order is irrelevant: keys are pre-rotated).
+    """
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, :] < jnp.asarray(valid_len).reshape(-1, 1)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.launch.mesh import batch_axes_for, make_production_mesh
+
+__all__ = ["batch_axes_for", "make_production_mesh"]

@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) and extract
+# memory / cost / collective statistics.
+#
+# The two lines above MUST stay the very first statements: JAX locks the
+# device count on first initialization, and the production meshes need 512
+# host placeholder devices. Nothing here allocates full-size arrays —
+# params, optimizer state, batches and caches are all ShapeDtypeStructs.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ASSIGNED_ARCHS, INPUT_SHAPES, InputShape, ModelConfig, get_config,
+    shape_applicable,
+)
+from repro.launch.mesh import batch_axes_for, make_production_mesh
+from repro.launch.shardings import batch_shardings, cache_shardings
+from repro.models import model as M
+from repro.models.parallel import (ParallelContext, opt_state_shardings,
+                                   param_shardings)
+from repro.training.optimizer import AdamWConfig, OptState, init_opt_state
+from repro.training.train_loop import make_train_step
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in (optimized) HLO text.
+
+    all-reduce is counted 2× (ring = reduce-scatter + all-gather traffic).
+    Returns {op_kind: bytes, ..., 'total': bytes}.
+    """
+    out = {k: 0.0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(.+?)\s+(" + "|".join(COLLECTIVES)
+                      + r")(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        shapes_part, kind = m.group(1), m.group(2)
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(shapes_part):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        out[kind] += nbytes * factor
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+def make_context(mesh, **kw) -> ParallelContext:
+    return ParallelContext(mesh=mesh, batch_axes=batch_axes_for(mesh),
+                           model_axis="model", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Step builders: (jitted fn, arg ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+
+
+def build_train(cfg: ModelConfig, shape: InputShape, ctx: ParallelContext,
+                microbatches: int = 1, acc_bf16: bool = False):
+    opt_cfg = AdamWConfig()
+    step = make_train_step(cfg, ctx, opt_cfg, microbatches=microbatches,
+                           acc_dtype=jnp.bfloat16 if acc_bf16 else None)
+    pshapes = M.params_shapes(cfg)
+    oshapes = jax.eval_shape(init_opt_state, pshapes)
+    bspecs = M.input_specs(cfg, shape)
+    pshard = param_shardings(pshapes, ctx)
+    moment = opt_state_shardings(pshapes, ctx)
+    oshard = OptState(step=NamedSharding(ctx.mesh, P()),
+                      m=moment, v=moment)
+    bshard = batch_shardings(cfg, ctx, shape)
+    fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                 donate_argnums=(0, 1))
+    return fn, (pshapes, oshapes, bspecs)
+
+
+def build_prefill(cfg: ModelConfig, shape: InputShape, ctx: ParallelContext):
+    pshapes = M.params_shapes(cfg)
+    bspecs = M.input_specs(cfg, shape)
+    cshapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    pshard = param_shardings(pshapes, ctx)
+    bshard = batch_shardings(cfg, ctx, shape)
+    cshard = cache_shardings(cfg, ctx, shape.global_batch, shape.seq_len)
+
+    def fn(params, batch, cache):
+        return M.prefill(params, batch, cache, cfg=cfg, ctx=ctx)
+
+    jfn = jax.jit(fn, in_shardings=(pshard, bshard, cshard),
+                  out_shardings=(None, cshard), donate_argnums=(2,))
+    return jfn, (pshapes, bspecs, cshapes)
+
+
+def build_decode(cfg: ModelConfig, shape: InputShape, ctx: ParallelContext):
+    pshapes = M.params_shapes(cfg)
+    bspecs = M.input_specs(cfg, shape)
+    cshapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cp = shape.global_batch == 1
+    pshard = param_shardings(pshapes, ctx)
+    cshard = cache_shardings(cfg, ctx, shape.global_batch, shape.seq_len,
+                             context_parallel=cp)
+    tok_shard = batch_shardings(cfg, ctx, shape)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, tokens, cache, pos):
+        extras = {}
+        return M.decode_step(params, tokens, cache, pos, cfg=cfg, ctx=ctx,
+                             batch_extras=extras)
+
+    jfn = jax.jit(
+        fn,
+        in_shardings=(pshard, tok_shard["tokens"], cshard,
+                      NamedSharding(ctx.mesh, P())),
+        out_shardings=(None, cshard), donate_argnums=(2,))
+    return jfn, (pshapes, bspecs["tokens"], cshapes, pos)
+
+
+def build(cfg, shape, ctx, microbatches: int = 1, acc_bf16: bool = False):
+    if shape.kind == "train":
+        return build_train(cfg, shape, ctx, microbatches=microbatches,
+                           acc_bf16=acc_bf16)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, ctx)
+    return build_decode(cfg, shape, ctx)
+
+
+def _raw_step(cfg, shape, ctx):
+    """Unjitted step function (for the jaxpr cost model)."""
+    if shape.kind == "train":
+        return make_train_step(cfg, ctx, AdamWConfig())
+    if shape.kind == "prefill":
+        return lambda p, b, c: M.prefill(p, b, c, cfg=cfg, ctx=ctx)
+    return lambda p, t, c, pos: M.decode_step(p, t, c, pos, cfg=cfg, ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            verbose: bool = True, ctx_overrides: Optional[dict] = None,
+            microbatches: int = 1, acc_bf16: bool = False):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k needs sub-quadratic attention "
+                          "(DESIGN.md §Arch-applicability)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_context(mesh, **(ctx_overrides or {}))
+    t0 = time.time()
+    fn, args = build(cfg, shape, ctx, microbatches=microbatches,
+                     acc_bf16=acc_bf16)
+    if shape.kind == "train":
+        lowered = fn.lower(*args)
+    elif shape.kind == "prefill":
+        lowered = fn.lower(*args)
+    else:
+        lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    # loop-aware global FLOPs/bytes (costmodel.py): XLA's cost_analysis
+    # counts scan bodies once, so it badly undercounts stacked layers
+    from repro.launch.costmodel import step_cost
+    raw_step = _raw_step(cfg, shape, ctx)
+    gc = step_cost(raw_step, *args)
+
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": list(mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0) if cost else None,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else None,
+        "global_flops": gc["flops"],
+        "global_bytes_unfused": gc["bytes"],
+        "n_devices": int(mesh.devices.size),
+        "collective_bytes": coll,
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                report[attr] = v
+        # The CPU host backend promotes bf16 dot operands to f32, so
+        # temp_size overstates TPU HBM by roughly the bf16:f32 ratio of the
+        # big transients. Record a corrected estimate alongside the raw
+        # number (EXPERIMENTS.md §Dry-run discusses the correction).
+        report["temp_tpu_estimate_bytes"] = int(
+            report.get("temp_size_in_bytes", 0) * 0.55)
+    if verbose:
+        print(json.dumps(report, indent=2, default=float))
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None, help="append reports to file")
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation chunks for train shapes "
+                         "(SPerf memory lever)")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=["dense", "capacity", "ep_a2a"],
+                    help="MoE dispatch (dense = paper baseline; ep_a2a = "
+                         "§Perf optimized expert-parallel all-to-all)")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    if args.expert_parallel:
+        overrides["moe_expert_parallel"] = True
+    if args.moe_dispatch:
+        overrides["moe_dispatch"] = args.moe_dispatch
+
+    pairs = []
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    reports = []
+    failures = 0
+    for a, s in pairs:
+        try:
+            rep = run_one(a, s, multi_pod=args.multi_pod,
+                          ctx_overrides=overrides,
+                          microbatches=args.microbatches)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            rep = {"arch": a, "shape": s, "error": f"{type(e).__name__}: {e}"}
+            print(json.dumps(rep, default=str), file=sys.stderr)
+        reports.append(rep)
+        if args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(rep, default=float) + "\n")
+    ok = sum(1 for r in reports if not r.get("error"))
+    print(f"\ndryrun: {ok}/{len(reports)} lowered+compiled "
+          f"({failures} failures)", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

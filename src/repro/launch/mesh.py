@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state — only `launch/dryrun.py` forces the 512-way
+host-device platform, everything else sees the real devices.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 v5e pod slice; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever this host has (CPU smoke testing)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def batch_axes_for(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

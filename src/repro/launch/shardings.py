@@ -1,0 +1,123 @@
+"""Sharding rules for batches and KV/recurrent caches on the production mesh.
+
+Parameters are handled by `repro.models.parallel.param_shardings`; this
+module covers the *runtime state*: input batches, decode caches, optimizer
+state trees.
+
+Cache rules (name + shape based, divisibility-checked):
+  k/v/cross_k/cross_v  (…, B, S, Hkv, hd): B→batch axes; Hkv→model (else
+      hd→model); for the long-context decode shape (B=1, S=full) the cache
+      *sequence* is context-parallel over "data".
+  ckv/krope            (…, B, S, r): B→batch; r→model.
+  state                (…, B, nh, hd, ds): B→batch; nh→model.
+  conv                 (…, B, k, C): B→batch; C→model.
+  h                    (…, B, dr): B→batch; dr→model.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as M
+from repro.models.parallel import ParallelContext
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _batch_axis_tree(cfg: ModelConfig, max_seq: int):
+    c1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, max_seq))
+    c2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, max_seq))
+    return jax.tree.map(
+        lambda a, b: next(
+            (i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y),
+            -1),
+        c1, c2)
+
+
+def cache_specs_tree(cfg: ModelConfig, ctx: ParallelContext, batch: int,
+                     max_seq: int, context_parallel: bool = False):
+    """PartitionSpec tree matching init_cache(cfg, batch, max_seq)."""
+    shapes = jax.eval_shape(lambda: M.init_cache(cfg, batch, max_seq))
+    baxes = _batch_axis_tree(cfg, max_seq)
+    msize = ctx.axis_size(ctx.model_axis)
+    bdiv = ctx.batch_size_divisor
+    cp_size = ctx.axis_size("data")
+
+    def rule(path, leaf, bax):
+        name = _leaf_name(path)
+        spec = [None] * leaf.ndim
+        if bax >= 0 and leaf.shape[bax] % bdiv == 0 and leaf.shape[bax] > 1:
+            spec[bax] = ctx.batch_spec
+        if name in ("k", "v", "cross_k", "cross_v"):
+            s_dim, h_dim, d_dim = bax + 1, bax + 2, bax + 3
+            if (context_parallel and spec[bax] is None
+                    and leaf.shape[s_dim] == max_seq
+                    and leaf.shape[s_dim] % cp_size == 0):
+                spec[s_dim] = "data"
+            if leaf.shape[h_dim] % msize == 0:
+                spec[h_dim] = ctx.model_axis
+            elif (name in ("k", "v") and spec[s_dim] is None
+                    and spec[bax] is not None
+                    and leaf.shape[s_dim] % msize == 0):
+                # matches layers.kv_cache_cp: batch-shardable decode goes
+                # context-parallel over `model`
+                spec[s_dim] = ctx.model_axis
+            elif leaf.shape[d_dim] % msize == 0:
+                spec[d_dim] = ctx.model_axis
+        elif name in ("ckv", "krope"):
+            r_dim = leaf.ndim - 1
+            if leaf.shape[r_dim] % msize == 0:
+                spec[r_dim] = ctx.model_axis
+        elif name == "state":
+            nh_dim = bax + 1
+            if leaf.shape[nh_dim] % msize == 0:
+                spec[nh_dim] = ctx.model_axis
+        elif name in ("conv", "h"):
+            last = leaf.ndim - 1
+            if leaf.shape[last] % msize == 0:
+                spec[last] = ctx.model_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: rule(path, leaf,
+                                _lookup(baxes, path)), shapes)
+
+
+def _lookup(tree, path):
+    node = tree
+    for entry in path:
+        key = getattr(entry, "key", getattr(entry, "idx", None))
+        node = node[key]
+    return node
+
+
+def cache_shardings(cfg: ModelConfig, ctx: ParallelContext, batch: int,
+                    max_seq: int, context_parallel: bool = False):
+    specs = cache_specs_tree(cfg, ctx, batch, max_seq, context_parallel)
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(cfg: ModelConfig, ctx: ParallelContext,
+                    shape: InputShape):
+    """Shardings matching `input_specs(cfg, shape)`."""
+    specs = M.input_specs(cfg, shape)
+    bdiv = ctx.batch_size_divisor
+
+    def rule(name, leaf):
+        spec = [None] * len(leaf.shape)
+        bdim = 1 if name == "positions" else 0   # positions: (3, B, S)
+        if leaf.shape[bdim] % bdiv == 0 and leaf.shape[bdim] > 1:
+            spec[bdim] = ctx.batch_spec
+        return NamedSharding(ctx.mesh, P(*spec))
+
+    return {k: rule(k, v) for k, v in specs.items()}

@@ -1,0 +1,44 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
+        --reduced --steps 50 --batch 8 --seq 128
+
+On a real TPU pod, drop --reduced and pass --mesh 16x16 (the sharded
+train_step is exactly what `launch/dryrun.py` compiles in the dry-run).
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.models.parallel import cpu_context
+from repro.training import AdamWConfig, train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer d_model<=512 variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"training {cfg.arch_id}: {cfg.param_count()/1e6:.1f}M params on "
+          f"{jax.device_count()} device(s)")
+    params, opt, hist = train(
+        cfg, ctx=cpu_context(), steps=args.steps, batch_size=args.batch,
+        seq_len=args.seq, seed=args.seed,
+        opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                            total_steps=args.steps))
+    print(f"done: loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

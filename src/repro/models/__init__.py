@@ -1,0 +1,11 @@
+from repro.models.parallel import ParallelContext, cpu_context
+from repro.models.model import (
+    cache_specs, decode_step, dummy_batch, forward, init_cache, init_params,
+    input_specs, loss_fn, params_shapes, prefill,
+)
+
+__all__ = [
+    "ParallelContext", "cpu_context", "cache_specs", "decode_step",
+    "dummy_batch", "forward", "init_cache", "init_params", "input_specs",
+    "loss_fn", "params_shapes", "prefill",
+]

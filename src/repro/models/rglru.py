@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The temporal-mixing block is: two parallel projections of the input —
+a GeLU gate branch and a recurrence branch (causal conv then the RG-LRU
+gated linear recurrence) — multiplied and projected back.
+
+    r_t = sigmoid(w_a ⊙ u_t + b_a)            (recurrence gate)
+    i_t = sigmoid(w_x ⊙ u_t + b_x)            (input gate)
+    log a_t = -c · softplus(Λ) ⊙ r_t          (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ u_t)
+
+Gates here are diagonal (per-channel) — Griffin uses block-diagonal heads;
+the diagonal form is the same compute pattern with head_count = d_rnn and is
+noted as an approximation in DESIGN.md. Training/prefill evaluates the
+recurrence with `associative_scan` (log-depth, TPU-friendly — the GPU paper
+uses a custom linear-scan kernel; on TPU the associative form keeps the VPU
+busy without a bespoke kernel). Decode is the O(1) step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.parallel import ParallelContext
+
+_C = 8.0
+
+
+def _d_rnn(cfg: ModelConfig) -> int:
+    return cfg.rglru.d_rnn or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dr = _d_rnn(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "w_gate_in": dense_init(ks[0], (d, dr), dtype=dt),
+        "w_rec_in": dense_init(ks[1], (d, dr), dtype=dt),
+        "conv": dense_init(ks[2], (cfg.rglru.d_conv, dr), scale=0.2, dtype=dt),
+        "w_a": jnp.zeros((dr,), jnp.float32),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": jnp.zeros((dr,), jnp.float32),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        # Λ init so that a ∈ [0.9, 0.999] at r = 1 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jax.random.uniform(ks[3], (dr,), minval=0.9,
+                                        maxval=0.999)) / _C)),
+        "out_proj": dense_init(ks[4], (dr, d), dtype=dt),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=None):
+    dr = _d_rnn(cfg)
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru.d_conv - 1, dr), dt),
+    }
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(p["w_a"] * uf + p["b_a"])
+    i = jax.nn.sigmoid(p["w_x"] * uf + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) \
+        * (i * uf)
+    return a, gated_in
+
+
+def _conv_causal(u, kernel, state=None):
+    k = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * kernel[i] for i in range(k))
+    return out, (up[:, -(k - 1):] if k > 1 else None)
+
+
+def rglru_layer(p, x, *, cfg: ModelConfig, ctx: ParallelContext, mode: str,
+                cache=None):
+    """Full Griffin recurrent mixing layer. Returns (out, new_cache)."""
+    b, s, _ = x.shape
+    gate = jax.nn.gelu(x @ p["w_gate_in"], approximate=True)
+    u = x @ p["w_rec_in"]
+
+    if mode == "decode":
+        u, conv_state = _conv_causal(u, p["conv"], cache["conv"])
+        a, gi = _gates(p, u[:, 0])
+        h = a * cache["h"] + gi
+        y = h[:, None, :]
+        new_cache = {"h": h, "conv": conv_state}
+    else:
+        u, conv_state = _conv_causal(u, p["conv"])
+        a, gi = _gates(p, u)                      # (B, S, dr) each
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_s, h = jax.lax.associative_scan(combine, (a, gi), axis=1)
+        y = h
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"h": h[:, -1].astype(jnp.float32),
+                         "conv": conv_state}
+
+    y = (gate.astype(jnp.float32) * y).astype(x.dtype)
+    return y @ p["out_proj"], new_cache

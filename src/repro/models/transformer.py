@@ -1,0 +1,335 @@
+"""Block-program transformer assembly.
+
+Every architecture is described by a *block program*: an optional ``head``
+(unscanned leading layers), a ``superblock`` (the repeating unit — scanned
+with stacked params so compile time is O(distinct layer kinds), not
+O(layers)), and an optional ``tail``. Examples:
+
+  llama / gemma-2b      head=[] sb=[attn]                n_sb = n_layers
+  mixtral               sb=[attn(win, moe)]              n_sb = 32
+  deepseek-moe          head=[attn(dense mlp)] sb=[attn(moe)] n_sb = 27
+  gemma3                sb=[attn(win)×5, attn(full)]     n_sb = 8
+  recurrentgemma        sb=[rec, rec, attn(win)] ×8 + tail=[rec, rec]
+  mamba2                sb=[ssm]                         n_sb = 64
+  whisper decoder       sb=[attn(full, cross)]           n_sb = 6
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import ssm as SSM
+from repro.models.parallel import ParallelContext
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                 # attn | mla | rec | ssm
+    window: int = 0           # 0 -> full attention
+    moe: bool = False
+    cross: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockProgram:
+    head: Tuple[LayerSpec, ...]
+    superblock: Tuple[LayerSpec, ...]
+    n_superblocks: int
+    tail: Tuple[LayerSpec, ...]
+
+    @property
+    def n_layers(self) -> int:
+        return (len(self.head) + len(self.superblock) * self.n_superblocks
+                + len(self.tail))
+
+
+def block_program(cfg: ModelConfig) -> BlockProgram:
+    if cfg.family == "ssm":
+        return BlockProgram((), (LayerSpec("ssm"),), cfg.n_layers, ())
+    if cfg.rglru is not None:
+        pat = tuple(
+            LayerSpec("rec") if b == "rec"
+            else LayerSpec("attn", window=cfg.sliding_window)
+            for b in cfg.rglru.block_pattern)
+        n_sb = cfg.n_layers // len(pat)
+        tail_n = cfg.n_layers - n_sb * len(pat)
+        return BlockProgram((), pat, n_sb, pat[:tail_n])
+    kind = "mla" if cfg.mla is not None else "attn"
+    if cfg.local_global_pattern != (0, 0):
+        nl, ng = cfg.local_global_pattern
+        per = nl + ng
+        sb = tuple([LayerSpec(kind, window=cfg.sliding_window)] * nl
+                   + [LayerSpec(kind)] * ng)
+        n_sb = cfg.n_layers // per
+        tail = sb[: cfg.n_layers - n_sb * per]   # e.g. gemma3-27b: 62 = 10·6+2
+        return BlockProgram((), sb, n_sb, tail)
+    moe = cfg.n_experts > 0
+    spec = LayerSpec(kind, window=cfg.sliding_window, moe=moe,
+                     cross=cfg.enc_dec)
+    if moe and cfg.n_shared_experts:
+        # DeepSeekMoE: first layer keeps a dense FFN
+        head = (LayerSpec(kind, window=cfg.sliding_window, moe=False),)
+        return BlockProgram(head, (spec,), cfg.n_layers - 1, ())
+    return BlockProgram((), (spec,), cfg.n_layers, ())
+
+
+# ---------------------------------------------------------------------------
+# Per-layer params / cache
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    kmix, kmlp, kcross = jax.random.split(key, 3)
+    p = {"norm1": L.init_rmsnorm(d)}
+    if spec.kind == "attn":
+        p["mix"] = L.init_attention(kmix, cfg)
+    elif spec.kind == "mla":
+        p["mix"] = L.init_mla(kmix, cfg)
+    elif spec.kind == "rec":
+        p["mix"] = RG.init_rglru(kmix, cfg)
+    elif spec.kind == "ssm":
+        p["mix"] = SSM.init_ssm(kmix, cfg)
+        return p  # mamba blocks have no separate MLP sublayer
+    else:
+        raise ValueError(spec.kind)
+    if spec.cross:
+        p["norm_cross"] = L.init_rmsnorm(d)
+        p["cross"] = L.init_attention(kcross, cfg, cross=True)
+    p["norm2"] = L.init_rmsnorm(d)
+    if spec.moe:
+        p["moe"] = MOE.init_moe(kmlp, cfg)
+    else:
+        p["mlp"] = L.init_mlp(kmlp, d, cfg.d_ff, dt)
+    return p
+
+
+def init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                     max_seq: int, dtype=None):
+    if spec.kind == "attn":
+        c = L.init_kv_cache(cfg, batch, max_seq, window=spec.window,
+                            dtype=dtype)
+        if spec.cross:
+            ad = L.attn_dims(cfg)
+            shape = (batch, cfg.encoder_seq_len, ad.n_kv_heads, ad.head_dim)
+            c["cross_k"] = jnp.zeros(shape, dtype or jnp.dtype(cfg.dtype))
+            c["cross_v"] = jnp.zeros(shape, dtype or jnp.dtype(cfg.dtype))
+        return c
+    if spec.kind == "mla":
+        return L.init_mla_cache(cfg, batch, max_seq, dtype=dtype)
+    if spec.kind == "rec":
+        return RG.init_rglru_cache(cfg, batch, dtype=dtype)
+    if spec.kind == "ssm":
+        return SSM.init_ssm_cache(cfg, batch, dtype=dtype)
+    raise ValueError(spec.kind)
+
+
+def apply_layer(spec: LayerSpec, p, x, *, cfg: ModelConfig,
+                ctx: ParallelContext, mode: str, cache=None, pos=None,
+                positions=None, enc_out=None):
+    """Pre-norm residual block. Returns (x, new_cache, aux)."""
+    aux = {}
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.kind == "attn":
+        mix, new_cache = L.attention_layer(
+            p["mix"], h, cfg=cfg, ctx=ctx, mode=mode, cache=cache, pos=pos,
+            window=spec.window, positions=positions)
+    elif spec.kind == "mla":
+        mix, new_cache = L.mla_layer(p["mix"], h, cfg=cfg, ctx=ctx,
+                                     mode=mode, cache=cache, pos=pos,
+                                     positions=positions)
+    elif spec.kind == "rec":
+        mix, new_cache = RG.rglru_layer(p["mix"], h, cfg=cfg, ctx=ctx,
+                                        mode=mode, cache=cache)
+    elif spec.kind == "ssm":
+        mix, new_cache = SSM.ssm_layer(p["mix"], h, cfg=cfg, ctx=ctx,
+                                       mode=mode, cache=cache)
+        return x + mix, new_cache, aux
+    else:
+        raise ValueError(spec.kind)
+    x = x + mix
+    x = ctx.shard_activation(x)
+
+    use_cross = spec.cross and (
+        enc_out is not None
+        or (mode == "decode" and cache is not None and "cross_k" in cache))
+    if use_cross:
+        h = L.rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        enc_cache = None
+        if cache is not None and mode == "decode":
+            enc_cache = {"k": cache["cross_k"], "v": cache["cross_v"]}
+        mix, cross_kv = L.attention_layer(
+            p["cross"], h, cfg=cfg, ctx=ctx, mode=mode, cache=None,
+            enc_out=enc_out, enc_cache=enc_cache, causal=False)
+        x = x + mix
+        if new_cache is not None:
+            new_cache = dict(new_cache)
+            new_cache["cross_k"] = cross_kv["k"]
+            new_cache["cross_v"] = cross_kv["v"]
+
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if spec.moe:
+        if ctx.moe_dispatch == "capacity":
+            moe_fn = MOE.moe_layer_capacity
+        elif ctx.moe_dispatch == "ep_a2a":
+            moe_fn = MOE.moe_layer_ep_a2a
+        elif ctx.moe_expert_parallel:
+            moe_fn = MOE.moe_layer_expert_parallel
+        else:
+            moe_fn = MOE.moe_layer
+        out, moe_aux = moe_fn(p["moe"], h, cfg=cfg, ctx=ctx)
+        aux.update(moe_aux)
+    else:
+        out = L.mlp(p["mlp"], h, cfg.activation, ctx)
+    x = x + out
+    x = ctx.shard_activation(x)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-stack init / cache
+# ---------------------------------------------------------------------------
+
+
+def init_stack(key, cfg: ModelConfig):
+    prog = block_program(cfg)
+    ks = jax.random.split(key, 3)
+    head = tuple(init_layer(jax.random.fold_in(ks[0], i), spec, cfg)
+                 for i, spec in enumerate(prog.head))
+    sb = tuple(
+        jax.vmap(lambda k: init_layer(k, spec, cfg))(
+            jax.random.split(jax.random.fold_in(ks[1], i),
+                             prog.n_superblocks))
+        for i, spec in enumerate(prog.superblock))
+    tail = tuple(init_layer(jax.random.fold_in(ks[2], i), spec, cfg)
+                 for i, spec in enumerate(prog.tail))
+    return {"head": head, "sb": sb, "tail": tail}
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    prog = block_program(cfg)
+
+    def one(spec):
+        return init_layer_cache(spec, cfg, batch, max_seq, dtype)
+
+    def stacked(spec):
+        c = one(spec)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (prog.n_superblocks,) + a.shape)
+            if prog.n_superblocks else a, c)
+
+    return {
+        "head": tuple(one(s) for s in prog.head),
+        "sb": tuple(stacked(s) for s in prog.superblock),
+        "tail": tuple(one(s) for s in prog.tail),
+    }
+
+
+def run_stack(params, x, *, cfg: ModelConfig, ctx: ParallelContext,
+              mode: str, cache=None, pos=None, positions=None, enc_out=None):
+    """Apply head + scanned superblocks + tail. Returns (x, cache', aux)."""
+    prog = block_program(cfg)
+    aux_sum = jnp.zeros((), jnp.float32)
+    new_head = []
+    for i, spec in enumerate(prog.head):
+        c = cache["head"][i] if cache is not None else None
+        x, nc, aux = apply_layer(spec, params["head"][i], x, cfg=cfg,
+                                 ctx=ctx, mode=mode, cache=c, pos=pos,
+                                 positions=positions, enc_out=enc_out)
+        new_head.append(nc)
+        aux_sum += aux.get("moe_aux_loss", 0.0)
+
+    # nested remat: checkpoint each layer inside the scanned superblock so
+    # backward recomputes one layer at a time (not the whole superblock)
+    layer_remat = ctx.remat and mode == "train"
+
+    def one_layer(i, spec, p_i, x, c_i):
+        def f(p_i, x):
+            return apply_layer(spec, p_i, x, cfg=cfg, ctx=ctx, mode=mode,
+                               cache=c_i, pos=pos, positions=positions,
+                               enc_out=enc_out)
+        if layer_remat:
+            f = jax.checkpoint(f, static_argnums=())
+        return f(p_i, x)
+
+    def sb_body(carry, xs):
+        x, aux_sum = carry
+        p_list = xs[0]
+        c_list = xs[1] if cache is not None else [None] * len(prog.superblock)
+        new_cs = []
+        for i, spec in enumerate(prog.superblock):
+            x, nc, aux = one_layer(i, spec, p_list[i], x, c_list[i])
+            new_cs.append(nc)
+            aux_sum += aux.get("moe_aux_loss", 0.0)
+        return (x, aux_sum), tuple(new_cs)
+
+    if prog.n_superblocks:
+        xs = (params["sb"], cache["sb"] if cache is not None else None)
+        if cache is None:
+            xs = (params["sb"], None)
+        (x, aux_sum), new_sb = jax.lax.scan(sb_body, (x, aux_sum), xs)
+    else:
+        new_sb = ()
+
+    new_tail = []
+    for i, spec in enumerate(prog.tail):
+        c = cache["tail"][i] if cache is not None else None
+        x, nc, aux = apply_layer(spec, params["tail"][i], x, cfg=cfg,
+                                 ctx=ctx, mode=mode, cache=c, pos=pos,
+                                 positions=positions, enc_out=enc_out)
+        new_tail.append(nc)
+        aux_sum += aux.get("moe_aux_loss", 0.0)
+
+    new_cache = None
+    if cache is not None and mode in ("prefill", "decode"):
+        new_cache = {"head": tuple(new_head), "sb": new_sb,
+                     "tail": tuple(new_tail)}
+    return x, new_cache, {"moe_aux_loss": aux_sum}
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder (bidirectional stack over stub frame embeddings)
+# ---------------------------------------------------------------------------
+
+
+def init_encoder(key, cfg: ModelConfig):
+    spec = LayerSpec("attn")
+    stacked = jax.vmap(lambda k: init_layer(k, spec, cfg))(
+        jax.random.split(key, cfg.n_encoder_layers))
+    return {"layers": stacked, "norm": L.init_rmsnorm(cfg.d_model)}
+
+
+def sinusoidal_positions(seq: int, d: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[None]
+
+
+def run_encoder(params, frames, *, cfg: ModelConfig, ctx: ParallelContext):
+    """frames: (B, S_enc, D) stub conv-frontend embeddings."""
+    x = frames + sinusoidal_positions(frames.shape[1],
+                                      cfg.d_model).astype(frames.dtype)
+    spec = LayerSpec("attn")
+
+    def body(x, p):
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        mix, _ = L.attention_layer(p["mix"], h, cfg=cfg, ctx=ctx,
+                                   mode="encode", causal=False)
+        x = x + mix
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h, cfg.activation, ctx)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rmsnorm(params["norm"], x, cfg.norm_eps)

@@ -1,0 +1,6 @@
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.perllm_server import PerLLMServer, ServedRequest
+from repro.serving.sampling import sample_tokens
+
+__all__ = ["PerLLMServer", "Request", "ServedRequest", "ServingEngine",
+           "sample_tokens"]

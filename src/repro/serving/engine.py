@@ -1,0 +1,175 @@
+"""Continuous-batching serving engine.
+
+A fixed pool of `max_batch` KV-cache slots; requests are admitted into free
+slots (prefill) and all active slots decode together each step with
+per-slot positions (the `update_cache_seq` vector-pos path). This is the
+execution layer a PerLLM "server" runs — the scheduler decides *which*
+server a request goes to, the engine decides *how* it runs there.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.parallel import ParallelContext, cpu_context
+from repro.serving.sampling import sample_tokens
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: int = -1          # -1: never stop early
+    # runtime
+    slot: int = -1
+    generated: List[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: float = -1.0
+    done_at: float = -1.0
+
+    @property
+    def done(self) -> bool:
+        return self.done_at >= 0
+
+
+def _batch_axis_tree(cfg: ModelConfig, max_seq: int):
+    """Which axis of each cache leaf is the batch axis (found by probing)."""
+    c1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, max_seq))
+    c2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, max_seq))
+    return jax.tree.map(
+        lambda a, b: next(i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                          if x != y), c1, c2)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
+                 max_seq: int = 1024, ctx: Optional[ParallelContext] = None,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.ctx = ctx or cpu_context()
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.cache = M.init_cache(cfg, max_batch, max_seq)
+        self._axis = _batch_axis_tree(cfg, max_seq)
+        self.positions = np.zeros(max_batch, np.int32)
+        self.cur_tokens = np.zeros(max_batch, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self._rid = itertools.count()
+        self._key = jax.random.key(seed)
+        self.completed: List[Request] = []
+
+        self._decode = jax.jit(
+            lambda p, t, c, pos: M.decode_step(p, t, c, pos, cfg=cfg,
+                                               ctx=self.ctx))
+
+        # prompts are right-padded to power-of-2 buckets so prefill
+        # compiles once per bucket, not once per prompt length; `last`
+        # indexes the true final-token logits. Padded garbage keys occupy
+        # slots >= plen but decode overwrites them sequentially before the
+        # position mask can ever reach them.
+        def _prefill_cache(p, batch, c, last):
+            logits, new_cache, _ = M.forward(p, batch, cfg=cfg,
+                                             ctx=self.ctx, mode="prefill",
+                                             cache=c)
+            return logits[:, last], new_cache
+        self._prefill = jax.jit(_prefill_cache)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 32,
+               eos_id: int = -1) -> Request:
+        req = Request(rid=next(self._rid), prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      submitted_at=time.time())
+        self.queue.append(req)
+        return req
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def _insert_slot(self, slot: int, single_cache):
+        def ins(pool, one, ax):
+            return jax.lax.dynamic_update_slice_in_dim(pool, one, slot, ax)
+        self.cache = jax.tree.map(ins, self.cache, single_cache, self._axis)
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            bucket = 1 << max(plen - 1, 1).bit_length()   # next pow2 >= plen
+            bucket = min(bucket, self.max_seq)
+            padded = req.prompt + [0] * (bucket - plen)
+            prompt = jnp.asarray(padded, jnp.int32)[None, :]
+            one_cache = M.init_cache(self.cfg, 1, self.max_seq)
+            batch = {"tokens": prompt}
+            if self.cfg.mrope:
+                s = prompt.shape[1]
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(s, dtype=jnp.int32), (3, 1, s))
+            last_logits, one_cache = self._prefill(
+                self.params, batch, one_cache, jnp.int32(plen - 1))
+            self._key, k = jax.random.split(self._key)
+            tok = int(sample_tokens(k, last_logits, self.temperature)[0])
+            self._insert_slot(slot, one_cache)
+            req.slot = slot
+            req.generated.append(tok)
+            req.first_token_at = time.time()
+            self.positions[slot] = len(req.prompt)
+            self.cur_tokens[slot] = tok
+            self.slot_req[slot] = req
+            self._maybe_finish(slot)
+
+    def _maybe_finish(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        if req is None:
+            return
+        last = req.generated[-1]
+        if (len(req.generated) >= req.max_new_tokens
+                or (req.eos_id >= 0 and last == req.eos_id)
+                or self.positions[slot] >= self.max_seq - 1):
+            req.done_at = time.time()
+            self.completed.append(req)
+            self.slot_req[slot] = None
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit + one decode step for all active slots. Returns #active."""
+        self._admit()
+        active = self.active_slots
+        if not active:
+            return 0
+        tokens = jnp.asarray(self.cur_tokens, jnp.int32)[:, None]
+        pos = jnp.asarray(self.positions, jnp.int32)
+        logits, self.cache = self._decode(self.params, tokens, self.cache,
+                                          pos)
+        self._key, k = jax.random.split(self._key)
+        next_tokens = np.asarray(sample_tokens(k, logits, self.temperature))
+        for slot in active:
+            req = self.slot_req[slot]
+            req.generated.append(int(next_tokens[slot]))
+            self.positions[slot] += 1
+            self.cur_tokens[slot] = next_tokens[slot]
+            self._maybe_finish(slot)
+        return len(active)
+
+    def run_until_idle(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if not self.queue and not self.active_slots:
+                break
+            self.step()
+        return self.completed

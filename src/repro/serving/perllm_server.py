@@ -1,0 +1,162 @@
+"""PerLLMServer: the paper's system as a deployable service object.
+
+Owns N `ServingEngine`s (the edge/cloud fleet), a `PerLLMScheduler` and a
+cluster spec; callers `submit()` requests with deadlines and `step()` the
+service. Scheduling decisions route requests to a concrete engine, real
+prefill/decode runs there, and realized latencies feed the CS-UCB learner —
+the full loop of Fig. 3 in one class.
+
+Time handling: the server runs on a logical clock advanced by `step()`;
+each engine-step costs its server's analytic per-step latency, so the
+learner sees the same cost surface the cluster simulator models while the
+tokens themselves are produced by the real models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.server import ServerSpec
+from repro.cluster.simulator import Outcome, SlotView
+from repro.cluster.workload import ServiceRequest, classify
+from repro.core.scheduler import PerLLMScheduler
+from repro.serving.engine import Request, ServingEngine
+
+
+@dataclasses.dataclass
+class ServedRequest:
+    service: ServiceRequest
+    engine_req: Optional[Request] = None
+    server: int = -1
+    submitted_clock: float = 0.0
+    done_clock: float = -1.0
+
+    @property
+    def done(self) -> bool:
+        return self.done_clock >= 0
+
+    @property
+    def latency(self) -> float:
+        return self.done_clock - self.submitted_clock if self.done else -1.0
+
+    @property
+    def met_deadline(self) -> bool:
+        return self.done and self.latency <= self.service.deadline
+
+
+class PerLLMServer:
+    def __init__(self, specs: Sequence[ServerSpec],
+                 engines: Sequence[ServingEngine],
+                 scheduler: Optional[PerLLMScheduler] = None,
+                 slot: float = 0.5):
+        assert len(specs) == len(engines)
+        self.specs = list(specs)
+        self.engines = list(engines)
+        self.scheduler = scheduler or PerLLMScheduler(len(specs))
+        self.slot = slot
+        self.clock = 0.0
+        self._sid = itertools.count()
+        self._pending: List[ServedRequest] = []
+        self.active: Dict[int, ServedRequest] = {}
+        self.completed: List[ServedRequest] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               deadline: float = 4.0,
+               payload_bytes: float = 1e6) -> ServedRequest:
+        svc = ServiceRequest(
+            sid=next(self._sid), arrival=self.clock,
+            prompt_tokens=len(prompt), output_tokens=max_new_tokens,
+            deadline=deadline, payload_bytes=payload_bytes)
+        svc.class_id = classify(svc)
+        sr = ServedRequest(service=svc, submitted_clock=self.clock)
+        sr._prompt = list(prompt)
+        self._pending.append(sr)
+        return sr
+
+    def _view(self) -> SlotView:
+        lane_free = []
+        for j, eng in enumerate(self.engines):
+            spec = self.specs[j]
+            busy = len(eng.active_slots) + len(eng.queue)
+            lanes = [0.0] * spec.max_concurrency
+            step_t = spec.decode_step_time()
+            for i in range(min(busy, spec.max_concurrency)):
+                lanes[i] = self.clock + 8 * step_t  # coarse occupancy
+            lane_free.append(lanes)
+        return SlotView(
+            t=self.clock, specs=self.specs,
+            bw_factor=[1.0] * len(self.specs),
+            uplink_free_at=[self.clock] * len(self.specs),
+            lane_free=lane_free)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Route pending requests, advance every engine one decode step."""
+        if self._pending:
+            view = self._view()
+            batch = self._pending
+            self._pending = []
+            choices = self.scheduler.schedule(
+                [sr.service for sr in batch], view, int(self.clock / self.slot))
+            for sr, j in zip(batch, choices):
+                sr.server = j
+                sr.engine_req = self.engines[j].submit(
+                    sr._prompt, max_new_tokens=sr.service.output_tokens)
+                self.active[sr.service.sid] = sr
+
+        n_active = 0
+        for j, eng in enumerate(self.engines):
+            before = {r.rid for r in eng.completed}
+            n_active += eng.step()
+            for r in eng.completed:
+                if r.rid in before:
+                    continue
+                for sr in list(self.active.values()):
+                    if sr.engine_req is r:
+                        self._finish(sr)
+        # logical time: the slowest engine's decode step dominates the tick
+        self.clock += max(self.specs[j].decode_step_time()
+                          for j in range(len(self.specs)))
+        return n_active
+
+    def _finish(self, sr: ServedRequest) -> None:
+        sr.done_clock = self.clock
+        spec = self.specs[sr.server]
+        t_inf = spec.service_time(sr.service.prompt_tokens,
+                                  sr.service.output_tokens)
+        energy = ((spec.power_active - spec.power_idle)
+                  / spec.max_concurrency) * t_inf
+        out = Outcome(server=sr.server, tx_time=0.0, queue_time=0.0,
+                      infer_time=t_inf, finish=sr.done_clock,
+                      processing_time=sr.latency,
+                      success=sr.met_deadline, energy=energy)
+        self.scheduler.observe(sr.service, out)
+        self.completed.append(sr)
+        del self.active[sr.service.sid]
+
+    def run_until_idle(self, max_steps: int = 10_000) -> List[ServedRequest]:
+        for _ in range(max_steps):
+            if not self._pending and not self.active:
+                break
+            self.step()
+        return self.completed
+
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> dict:
+        done = self.completed
+        if not done:
+            return {"served": 0}
+        lat = np.array([sr.latency for sr in done])
+        return {
+            "served": len(done),
+            "deadline_met": float(np.mean([sr.met_deadline for sr in done])),
+            "mean_latency": float(lat.mean()),
+            "per_server": np.bincount(
+                [sr.server for sr in done],
+                minlength=len(self.specs)).tolist(),
+        }

@@ -1,0 +1,10 @@
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+from repro.training.train_loop import jit_train_step, make_train_step, train
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+
+__all__ = [
+    "AdamWConfig", "DataConfig", "OptState", "SyntheticLM", "adamw_update",
+    "init_opt_state", "jit_train_step", "load_checkpoint", "make_train_step",
+    "save_checkpoint", "train",
+]

@@ -1,0 +1,53 @@
+"""Checkpointing: flattened-pytree .npz + JSON treedef manifest."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _paths(params) -> list:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+
+
+def save_checkpoint(path: str, params: Any, extra: dict = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(params)
+    names = _paths(params)
+    arrays = {}
+    dtypes = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        dtypes.append(str(arr.dtype))
+        if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+            arr = arr.view(np.uint16)  # bf16: store raw bits
+        arrays[f"arr_{i}"] = arr
+    np.savez(os.path.join(path, "weights.npz"), **arrays)
+    manifest = {"names": names, "n_leaves": len(leaves), "dtypes": dtypes,
+                "extra": extra or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure of `like` (shape/dtype-checked)."""
+    data = np.load(os.path.join(path, "weights.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree.flatten(like)
+    assert len(leaves) == manifest["n_leaves"], "structure mismatch"
+    new_leaves = []
+    for i, leaf in enumerate(leaves):
+        arr = data[f"arr_{i}"]
+        want = manifest.get("dtypes", [None] * len(leaves))[i]
+        if want and "bfloat16" in want and arr.dtype == np.uint16:
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        assert arr.shape == tuple(leaf.shape), (arr.shape, leaf.shape)
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return treedef.unflatten(new_leaves), manifest["extra"]

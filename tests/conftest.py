@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the real host device(s); only launch/dryrun forces 512.
+# Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,72 @@
+"""Cluster model: cost monotonicity, bandwidth bounds, energy accounting."""
+import copy
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (
+    BandwidthModel, Simulator, generate_workload, paper_testbed, tpu_testbed,
+)
+from repro.cluster.workload import classify
+from repro.core import PerLLMScheduler
+
+
+def test_service_time_monotone_in_tokens():
+    spec = paper_testbed()[0]
+    assert spec.service_time(100, 10) < spec.service_time(200, 10)
+    assert spec.service_time(100, 10) < spec.service_time(100, 20)
+
+
+def test_decode_memory_vs_compute_bound():
+    spec = paper_testbed()[-1]      # cloud A100
+    t1 = spec.decode_step_time(batch=1)
+    t_big = spec.decode_step_time(batch=10_000)
+    assert t_big > t1               # eventually compute-bound
+    # batch=1 is memory-bound: equals weight-streaming time
+    stream = spec.active_params() * spec.weight_bytes_per_param / spec.mem_bw
+    assert abs(t1 - stream) < 1e-9
+
+
+@given(st.integers(0, 1000), st.integers(0, 5))
+@settings(max_examples=50, deadline=None)
+def test_bandwidth_factor_bounds(t, j):
+    bw = BandwidthModel(fluctuating=True, amplitude=0.2, seed=1)
+    f = bw.factor(t, j)
+    assert 0.8 - 1e-9 <= f <= 1.2 + 1e-9
+    assert BandwidthModel(fluctuating=False).factor(t, j) == 1.0
+
+
+def test_workload_deterministic_and_diverse():
+    w1 = generate_workload(200, seed=9)
+    w2 = generate_workload(200, seed=9)
+    assert [r.payload_bytes for r in w1] == [r.payload_bytes for r in w2]
+    assert all(2.0 <= r.deadline <= 6.0 for r in w1)
+    classes = {classify(r) for r in w1}
+    assert len(classes) >= 6        # diverse service classes
+
+def test_energy_components_nonnegative_and_complete():
+    specs = paper_testbed()
+    services = generate_workload(300, seed=1)
+    sim = Simulator(specs, BandwidthModel(), seed=2)
+    res = sim.run([copy.copy(s) for s in services], PerLLMScheduler(len(specs)))
+    assert res.e_tx >= 0 and res.e_infer > 0 and res.e_idle > 0
+    assert abs(res.total_energy - (res.e_tx + res.e_infer + res.e_idle)) < 1e-6
+    assert res.makespan > 0
+    assert res.throughput_tokens_per_s > 0
+
+
+def test_tpu_testbed_cloud_is_faster():
+    paper_cloud = paper_testbed()[-1]
+    tpu_cloud = tpu_testbed(cloud_chips=4)[-1]
+    assert tpu_cloud.flops > paper_cloud.flops
+    assert tpu_cloud.kind == "cloud"
+
+
+def test_hidden_efficiency_per_class():
+    specs = paper_testbed()
+    sim = Simulator(specs, seed=3)
+    assert sim.efficiency.shape[1] == len(specs)
+    assert (sim.efficiency >= 0.7 - 1e-9).all()
+    assert (sim.efficiency <= 1.0 + 1e-9).all()
+    # diversity across classes (the personalization premise)
+    assert np.std(sim.efficiency, axis=0).max() > 0.01

@@ -1,0 +1,94 @@
+"""Property-based tests on model invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import cpu_context, dummy_batch, forward, init_params
+
+CTX = cpu_context(remat=False)
+CFG = get_config("gemma-2b").reduced(n_layers=2, d_model=64, vocab_size=128)
+PARAMS = init_params(jax.random.key(0), CFG)
+
+
+@given(pos=st.integers(4, 30), seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_causality(pos, seed):
+    """Changing tokens at position >= pos never changes logits before pos."""
+    key = jax.random.key(seed)
+    toks = jax.random.randint(key, (1, 32), 0, CFG.vocab_size)
+    l1, _, _ = forward(PARAMS, {"tokens": toks}, cfg=CFG, ctx=CTX,
+                       mode="train")
+    toks2 = toks.at[0, pos:].set((toks[0, pos:] + 7) % CFG.vocab_size)
+    l2, _, _ = forward(PARAMS, {"tokens": toks2}, cfg=CFG, ctx=CTX,
+                       mode="train")
+    np.testing.assert_allclose(np.asarray(l1[:, :pos]),
+                               np.asarray(l2[:, :pos]), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "recurrentgemma-2b"])
+def test_causality_recurrent(arch):
+    """SSM / RG-LRU recurrences are causal too."""
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (1, 32), 0, cfg.vocab_size)
+    l1, _, _ = forward(params, {"tokens": toks}, cfg=cfg, ctx=CTX,
+                       mode="train")
+    toks2 = toks.at[0, 16:].set((toks[0, 16:] + 3) % cfg.vocab_size)
+    l2, _, _ = forward(params, {"tokens": toks2}, cfg=cfg, ctx=CTX,
+                       mode="train")
+    np.testing.assert_allclose(np.asarray(l1[:, :16]),
+                               np.asarray(l2[:, :16]), rtol=1e-3, atol=1e-3)
+
+
+@given(perm_seed=st.integers(0, 50))
+@settings(max_examples=8, deadline=None)
+def test_batch_permutation_equivariance(perm_seed):
+    """Permuting the batch permutes the logits identically."""
+    toks = jax.random.randint(jax.random.key(3), (4, 16), 0, CFG.vocab_size)
+    perm = jax.random.permutation(jax.random.key(perm_seed), 4)
+    l1, _, _ = forward(PARAMS, {"tokens": toks}, cfg=CFG, ctx=CTX,
+                       mode="train")
+    l2, _, _ = forward(PARAMS, {"tokens": toks[perm]}, cfg=CFG, ctx=CTX,
+                       mode="train")
+    np.testing.assert_allclose(np.asarray(l1[perm]), np.asarray(l2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(s=st.sampled_from([17, 24, 31, 48]))
+@settings(max_examples=4, deadline=None)
+def test_ssd_padding_invariance(s):
+    """SSD output for a length-s input is unaffected by chunk padding."""
+    from repro.models.ssm import ssd_chunked
+    key = jax.random.key(9)
+    ks = jax.random.split(key, 5)
+    b, h, p, n = 1, 2, 4, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.2)
+    Bm = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    Cm = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    y16, f16 = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    y_s, f_s = ssd_chunked(x, dt, A, Bm, Cm, chunk=s)  # single chunk
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y_s),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f16), np.asarray(f_s),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_loss_invariant_to_masked_labels():
+    """Positions with label = -1 don't contribute to the loss."""
+    from repro.models import loss_fn
+    batch = dummy_batch(jax.random.key(5), CFG, 2, 16, "train")
+    l1, _ = loss_fn(PARAMS, batch, cfg=CFG, ctx=CTX)
+    # mask half the labels; loss must change only through normalization,
+    # i.e. equal to the mean over the remaining positions
+    labels2 = batch["labels"].at[:, ::2].set(-1)
+    l2, m2 = loss_fn(PARAMS, {**batch, "labels": labels2}, cfg=CFG, ctx=CTX)
+    assert bool(jnp.isfinite(l2))
+    # and fully-masked rows don't produce NaNs
+    labels3 = jnp.full_like(batch["labels"], -1)
+    l3, _ = loss_fn(PARAMS, {**batch, "labels": labels3}, cfg=CFG, ctx=CTX)
+    assert bool(jnp.isfinite(l3))

@@ -1,0 +1,186 @@
+"""PerLLM scheduler invariants — unit + hypothesis property tests.
+
+Invariants from the paper's formulation (Eq. 2):
+  C4 — every service is assigned exactly one server (structural);
+  feasibility filter — an arm reported feasible has f(y) ≥ 0 under the
+      scheduler's own prediction;
+  capacity accounting — within-slot commits monotonically consume uplink
+      and lane capacity;
+  CS-UCB — regret grows sublinearly on stationary bandits and respects the
+      Eq. 7 bound; constraint-violating arms are suppressed by P(t).
+"""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (
+    BandwidthModel, Simulator, SlotView, generate_workload, paper_testbed,
+)
+from repro.cluster.workload import N_CLASSES, ServiceRequest, classify
+from repro.core import CSUCB, CSUCBParams, PerLLMScheduler, make_baselines
+from repro.core.constraints import evaluate_constraints
+
+
+def _view(specs, t=0.0):
+    return SlotView(t=t, specs=specs, bw_factor=[1.0] * len(specs),
+                    uplink_free_at=[0.0] * len(specs),
+                    lane_free=[[0.0] * s.max_concurrency for s in specs])
+
+
+def _req(sid=0, arrival=0.0, prompt=256, out=16, deadline=4.0,
+         payload=2e6):
+    r = ServiceRequest(sid=sid, arrival=arrival, prompt_tokens=prompt,
+                       output_tokens=out, deadline=deadline,
+                       payload_bytes=payload)
+    r.class_id = classify(r)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Constraint mechanism
+# ---------------------------------------------------------------------------
+
+
+@given(prompt=st.integers(32, 2048), out=st.integers(4, 96),
+       deadline=st.floats(2.0, 6.0), payload=st.floats(0.5e6, 6.5e6))
+@settings(max_examples=40, deadline=None)
+def test_constraint_slacks_bounded(prompt, out, deadline, payload):
+    specs = paper_testbed()
+    view = _view(specs)
+    req = _req(prompt=prompt, out=out, deadline=deadline, payload=payload)
+    for j in range(len(specs)):
+        s = evaluate_constraints(req, j, view)
+        # normalized slacks can never exceed 1
+        assert s.time <= 1.0 and s.compute <= 1.0 and s.bandwidth <= 1.0
+        assert s.f == min(s.time, s.compute, s.bandwidth)
+        assert s.satisfied == (s.f >= 0)
+
+
+def test_commit_consumes_capacity():
+    specs = paper_testbed()
+    view = _view(specs)
+    req = _req()
+    j = len(specs) - 1
+    before_up = view.uplink_free_at[j]
+    before_lane = sorted(view.lane_free[j])
+    t0 = view.predict_total(req, j)
+    view.commit(req, j)
+    assert view.uplink_free_at[j] > before_up
+    assert sorted(view.lane_free[j]) != before_lane
+    # the same request predicted again now takes at least as long
+    assert view.predict_total(req, j) >= t0 - 1e-9
+
+
+def test_constraint_violation_when_overloaded():
+    specs = paper_testbed()
+    view = _view(specs)
+    req = _req(deadline=2.0)
+    j = len(specs) - 1
+    for _ in range(200):           # flood the cloud
+        view.commit(req, j)
+    s = evaluate_constraints(req, j, view)
+    assert not s.satisfied
+
+
+# ---------------------------------------------------------------------------
+# C4 + scheduling behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_every_service_assigned_exactly_once():
+    specs = paper_testbed()
+    services = generate_workload(400, seed=3)
+    sim = Simulator(specs, BandwidthModel(), seed=5)
+    sched = PerLLMScheduler(len(specs))
+    res = sim.run([copy.copy(s) for s in services], sched)
+    assert res.n_services == 400
+    assert sum(res.per_server_served) == 400          # C4
+
+
+def test_perllm_beats_baselines():
+    specs = paper_testbed()
+    services = generate_workload(1500, seed=0)
+    results = {}
+    for sched in [PerLLMScheduler(len(specs))] + make_baselines(len(specs)):
+        sim = Simulator(specs, BandwidthModel(), seed=42)
+        results[sched.name] = sim.run(
+            [copy.copy(s) for s in services], sched)
+    per = results["PerLLM"]
+    assert per.success_rate > 0.9
+    for name in ("FineInfer", "AGOD", "RewardlessGuidance"):
+        assert per.success_rate > results[name].success_rate, name
+    assert per.total_energy < results["FineInfer"].total_energy
+
+
+# ---------------------------------------------------------------------------
+# CS-UCB bandit
+# ---------------------------------------------------------------------------
+
+
+def test_csucb_forced_exploration_then_convergence():
+    rng = np.random.default_rng(0)
+    bandit = CSUCB(1, 4, CSUCBParams(delta=0.4))
+    true_mean = np.array([0.1, 0.5, 0.3, 0.9])
+    pulls = []
+    for t in range(800):
+        a = bandit.select(0, np.ones(4, bool))
+        r = true_mean[a] + rng.normal(0, 0.05)
+        bandit.update(0, a, r, violation_severity=0.0)
+        pulls.append(a)
+    # every arm explored at least once, best arm dominates eventually
+    assert set(pulls) == {0, 1, 2, 3}
+    assert np.mean(np.array(pulls[-200:]) == 3) > 0.9
+
+
+def test_csucb_penalty_suppresses_violating_arm():
+    bandit = CSUCB(1, 2, CSUCBParams(theta=2.0, delta=0.1))
+    for _ in range(100):
+        a = bandit.select(0, np.ones(2, bool))
+        if a == 0:   # arm 0: good reward but violates constraints
+            bandit.update(0, 0, 0.8, violation_severity=1.0)
+        else:
+            bandit.update(0, 1, 0.5, violation_severity=0.0)
+    later = [bandit.select(0, np.ones(2, bool)) for _ in range(20)]
+    assert np.mean(later) > 0.8    # mostly the compliant arm
+
+
+def test_csucb_regret_sublinear_and_bounded():
+    rng = np.random.default_rng(1)
+    bandit = CSUCB(2, 3, CSUCBParams(alpha=1.0, beta=1.0, delta=0.3))
+    means = np.array([[0.2, 0.6, 0.4], [0.7, 0.1, 0.3]])
+    for t in range(2000):
+        cls = t % 2
+        a = bandit.select(cls, np.ones(3, bool))
+        bandit.update(cls, a, means[cls, a] + rng.normal(0, 0.05), 0.0)
+    trace = np.array(bandit.regret_trace)
+    # sublinear: second-half regret growth < first-half growth
+    n = len(trace)
+    first = trace[n // 2] - trace[0]
+    second = trace[-1] - trace[n // 2]
+    assert second < first
+    assert bandit.regret_bound() > 0
+
+
+@given(st.lists(st.floats(0.0, 1.0), min_size=4, max_size=4))
+@settings(max_examples=20, deadline=None)
+def test_csucb_select_respects_mask(rewards):
+    bandit = CSUCB(1, 4)
+    for a, r in enumerate(rewards):
+        bandit.update(0, a, r, 0.0)
+    mask = np.array([False, True, False, True])
+    for _ in range(10):
+        assert mask[bandit.select(0, mask)]
+
+
+def test_infeasible_fallback_prefers_fastest():
+    """Paper: with no feasible server, go to the most resource-rich one."""
+    specs = paper_testbed()
+    sched = PerLLMScheduler(len(specs))
+    view = _view(specs)
+    req = _req(deadline=0.01)     # impossible deadline: nothing feasible
+    choice = sched.schedule([req], view, 0)[0]
+    times = [view.predict_total(req, j) for j in range(len(specs))]
+    # commit changed residuals, but the cloud (fastest) should win
+    assert choice == int(np.argmin(times))
