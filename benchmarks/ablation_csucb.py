@@ -11,7 +11,7 @@ import time
 
 from benchmarks.common import csv_row
 from repro.cluster import BandwidthModel, Simulator, generate_workload, paper_testbed
-from repro.core import PerLLMScheduler
+from repro.core import Decision, PerLLMScheduler
 from repro.core.bandit import CSUCBParams
 from repro.core.constraints import evaluate_constraints
 
@@ -19,21 +19,18 @@ from repro.core.constraints import evaluate_constraints
 class _NoFilter(PerLLMScheduler):
     """Pure UCB without the constraint-satisfaction mechanism (Eq. 3)."""
 
-    def schedule(self, arrivals, view, t_slot):
+    def assign(self, req, view):
         import numpy as np
-        choices = []
-        for req in arrivals:
-            feasible = np.ones(self.n_servers, bool)    # filter disabled
-            j = self.bandit.select(req.class_id, feasible)
-            self._pending_slacks[req.sid] = evaluate_constraints(req, j,
-                                                                 view)
-            self._nominal_pred[req.sid] = \
-                self.predicted_time(req, j, view) / self.SAFETY
-            self._last_nominal_infer[req.sid] = view.predict_infer(req, j)
-            view.commit(req, j,
-                        infer_scale=self.infer_ratio[req.class_id, j])
-            choices.append(j)
-        return choices
+        feasible = np.ones(self.n_servers, bool)        # filter disabled
+        j = self.bandit.select(req.class_id, feasible)
+        slacks = evaluate_constraints(req, j, view)
+        self._pending_slacks[req.sid] = slacks
+        self._nominal_pred[req.sid] = \
+            self.predicted_time(req, j, view) / self.SAFETY
+        self._last_nominal_infer[req.sid] = view.predict_infer(req, j)
+        return Decision(server=j,
+                        infer_scale=float(self.infer_ratio[req.class_id, j]),
+                        slacks=slacks)
 
 
 VARIANTS = [

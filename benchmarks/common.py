@@ -17,7 +17,7 @@ from typing import Dict, List, Tuple
 from repro.cluster import (
     BandwidthModel, SimResult, Simulator, generate_workload, paper_testbed,
 )
-from repro.core import PerLLMScheduler, make_baselines
+from repro.core import make_policy
 
 EDGE_MODELS = ("yi-6b", "llama2-7b", "llama3-8b", "yi-9b")
 METHODS = ("PerLLM", "FineInfer", "AGOD", "RewardlessGuidance")
@@ -27,12 +27,8 @@ BW_SEED = 1
 
 
 def make_scheduler(name: str, n_servers: int):
-    if name == "PerLLM":
-        return PerLLMScheduler(n_servers)
-    for b in make_baselines(n_servers):
-        if b.name == name:
-            return b
-    raise KeyError(name)
+    """All benchmark schedulers come from the policy registry."""
+    return make_policy(name, n_servers)
 
 
 @functools.lru_cache(maxsize=None)

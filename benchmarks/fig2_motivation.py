@@ -11,10 +11,10 @@ import time
 
 from benchmarks.common import csv_row
 from repro.cluster import BandwidthModel, Simulator, generate_workload, paper_testbed
-from repro.cluster.simulator import SchedulerBase
+from repro.core import Decision, SchedulingPolicy
 
 
-class _FixedTier(SchedulerBase):
+class _FixedTier(SchedulingPolicy):
     """All traffic to one tier: the cloud, or round-robin over the edges."""
 
     def __init__(self, servers, name):
@@ -22,14 +22,10 @@ class _FixedTier(SchedulerBase):
         self.name = name
         self._i = 0
 
-    def schedule(self, arrivals, view, t):
-        out = []
-        for r in arrivals:
-            j = self.servers[self._i % len(self.servers)]
-            self._i += 1
-            view.commit(r, j)
-            out.append(j)
-        return out
+    def assign(self, req, view):
+        j = self.servers[self._i % len(self.servers)]
+        self._i += 1
+        return Decision(server=j)
 
 
 def run() -> str:

@@ -5,6 +5,7 @@ Prints each experiment's human-readable table, then a final CSV block:
 
   BENCH_N=10000 PYTHONPATH=src python -m benchmarks.run        # paper scale
   PYTHONPATH=src python -m benchmarks.run                      # default 6000
+  BENCH_N=200 python -m benchmarks.run table1_success_rate     # smoke subset
 """
 from __future__ import annotations
 
@@ -12,7 +13,7 @@ import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks import (
         ablation_csucb, fig2_motivation, fig4_processing_time,
         fig5_throughput, fig6_energy, hetero_edges, regret_bound, roofline,
@@ -30,6 +31,14 @@ def main() -> None:
         ("hetero_edges", hetero_edges.run),
         ("roofline", roofline.run),
     ]
+    selected = list(argv if argv is not None else sys.argv[1:])
+    if selected:
+        known = {name for name, _ in experiments}
+        unknown = [s for s in selected if s not in known]
+        if unknown:
+            sys.exit(f"unknown experiment(s) {unknown}; "
+                     f"choose from {sorted(known)}")
+        experiments = [(n, f) for n, f in experiments if n in selected]
     rows = []
     for name, fn in experiments:
         print(f"\n===== {name} =====")

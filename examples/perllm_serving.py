@@ -15,7 +15,7 @@ from repro.cluster import (
     BandwidthModel, Simulator, generate_workload, paper_testbed,
 )
 from repro.configs import get_config
-from repro.core import FineInfer, PerLLMScheduler
+from repro.core import ClusterView, drive_slot, make_policy
 from repro.models import init_params
 from repro.serving import ServingEngine
 
@@ -35,25 +35,25 @@ def main():
 
     services = generate_workload(600, rate=8.0, seed=0)
 
-    for name, sched in (("PerLLM", PerLLMScheduler(len(specs))),
-                        ("FineInfer", FineInfer(len(specs)))):
+    for name in ("perllm", "fineinfer"):
         sim = Simulator(specs, BandwidthModel(False, seed=1), seed=42)
-        res = sim.run([copy.copy(s) for s in services], sched)
+        res = sim.run([copy.copy(s) for s in services],
+                      make_policy(name, len(specs)))
         print(res.row())
 
     # --- drive a slice of real tokens through the chosen engines --------
-    sched = PerLLMScheduler(len(specs))
-    from repro.cluster.simulator import SlotView
+    policy = make_policy("perllm", len(specs))
     from repro.cluster.workload import classify
-    view = SlotView(t=0.0, specs=specs, bw_factor=[1.0] * len(specs),
-                    uplink_free_at=[0.0] * len(specs),
-                    lane_free=[[0.0] * s.max_concurrency for s in specs])
+    view = ClusterView(t=0.0, specs=specs, bw_factor=[1.0] * len(specs),
+                       uplink_free_at=[0.0] * len(specs),
+                       lane_free=[[0.0] * s.max_concurrency for s in specs])
     slice_ = services[:24]
     for s in slice_:
         s.class_id = classify(s)
-    choices = sched.schedule(slice_, view, 0)
-    for svc, j in zip(slice_, choices):
-        engines[j].submit([1 + svc.sid % 40, 2, 3, 4], max_new_tokens=4)
+    decisions = drive_slot(policy, slice_, view, 0)
+    for svc, d in zip(slice_, decisions):
+        engines[d.server].submit([1 + svc.sid % 40, 2, 3, 4],
+                                 max_new_tokens=4)
     done = sum(len(e.run_until_idle()) for e in engines)
     print(f"executed {done}/{len(slice_)} requests on real engines "
           f"(edge0={len(engines[0].completed)}, "

@@ -1,7 +1,7 @@
 from repro.cluster.network import BandwidthModel
 from repro.cluster.server import ServerSpec, ServerState
 from repro.cluster.simulator import (
-    Outcome, SchedulerBase, SimResult, Simulator, SlotView,
+    ClusterView, Outcome, SchedulerBase, SimResult, Simulator, SlotView,
 )
 from repro.cluster.testbed import paper_testbed, tpu_testbed
 from repro.cluster.workload import (
@@ -9,7 +9,8 @@ from repro.cluster.workload import (
 )
 
 __all__ = [
-    "BandwidthModel", "N_CLASSES", "Outcome", "SchedulerBase", "ServerSpec",
-    "ServerState", "ServiceRequest", "SimResult", "Simulator", "SlotView",
-    "classify", "generate_workload", "paper_testbed", "tpu_testbed",
+    "BandwidthModel", "ClusterView", "N_CLASSES", "Outcome", "SchedulerBase",
+    "ServerSpec", "ServerState", "ServiceRequest", "SimResult", "Simulator",
+    "SlotView", "classify", "generate_workload", "paper_testbed",
+    "tpu_testbed",
 ]

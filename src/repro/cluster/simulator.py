@@ -6,6 +6,13 @@ fluctuating) uplink, then occupy a batch lane for prefill+decode. Processing
 time = transmission + queue + inference; energy = transmission + inference +
 idle (idle accrues over the run's makespan).
 
+Scheduling goes through the unified `SchedulingPolicy` API
+(`repro.core.api`): per slot the simulator builds a `ClusterView` from real
+uplink/lane/bandwidth state, `drive_slot` collects one `Decision` per
+arrival (committing residuals between requests), and realized `Outcome`s
+feed back to the policy. Legacy `SchedulerBase` subclasses still run via
+the `as_policy` shim.
+
 Servers have *hidden* efficiency factors and per-request noise — schedulers
 only observe realized outcomes, which is what makes the bandit formulation
 meaningful (and is how the real testbed behaves).
@@ -21,6 +28,13 @@ import numpy as np
 from repro.cluster.network import BandwidthModel
 from repro.cluster.server import ServerSpec, ServerState
 from repro.cluster.workload import ServiceRequest, classify
+from repro.core.api import (
+    ClusterView, Decision, SchedulerBase, as_policy, drive_slot,
+)
+
+# Deprecated alias: the per-slot observation object is now the shared
+# `ClusterView` (also built by the live `PerLLMServer`).
+SlotView = ClusterView
 
 
 @dataclasses.dataclass
@@ -33,69 +47,6 @@ class Outcome:
     processing_time: float
     success: bool
     energy: float               # incremental (tx + active-infer) energy
-
-
-@dataclasses.dataclass
-class SlotView:
-    """What a scheduler may observe when assigning one slot's arrivals.
-
-    Mutable residuals (`uplink_free_at`, `lane_free`) let the scheduler
-    account for its *own* within-slot assignments (the combinatorial part of
-    the super-arm). Hidden simulator state (efficiency, noise) is NOT here.
-    """
-
-    t: float
-    specs: Sequence[ServerSpec]
-    bw_factor: List[float]
-    uplink_free_at: List[float]
-    lane_free: List[List[float]]
-
-    # ---------------- nominal predictors (no hidden factors) -------------
-    def predict_tx(self, req: ServiceRequest, j: int) -> float:
-        spec = self.specs[j]
-        start = max(self.t, self.uplink_free_at[j])
-        dur = req.payload_bytes * 8.0 / (spec.bandwidth * self.bw_factor[j])
-        return (start - self.t) + dur
-
-    def predict_queue(self, req: ServiceRequest, j: int) -> float:
-        ready = self.t + self.predict_tx(req, j)
-        lane = min(self.lane_free[j])
-        return max(lane - ready, 0.0)
-
-    def predict_infer(self, req: ServiceRequest, j: int) -> float:
-        return self.specs[j].service_time(req.prompt_tokens,
-                                          req.output_tokens)
-
-    def predict_total(self, req: ServiceRequest, j: int) -> float:
-        return (self.predict_tx(req, j) + self.predict_queue(req, j)
-                + self.predict_infer(req, j))
-
-    def commit(self, req: ServiceRequest, j: int,
-               infer_scale: float = 1.0) -> None:
-        """Update residuals as if req were placed on j.
-
-        `infer_scale` lets a learning scheduler correct the nominal
-        inference-time model for the server's (hidden) efficiency."""
-        spec = self.specs[j]
-        start = max(self.t, self.uplink_free_at[j])
-        dur = req.payload_bytes * 8.0 / (spec.bandwidth * self.bw_factor[j])
-        self.uplink_free_at[j] = start + dur
-        ready = start + dur
-        lanes = self.lane_free[j]
-        li = int(np.argmin(lanes))
-        begin = max(ready, lanes[li])
-        lanes[li] = begin + self.predict_infer(req, j) * infer_scale
-
-
-class SchedulerBase:
-    name = "base"
-
-    def schedule(self, arrivals: List[ServiceRequest], view: SlotView,
-                 t_slot: int) -> List[int]:
-        raise NotImplementedError
-
-    def observe(self, req: ServiceRequest, outcome: Outcome) -> None:
-        pass
 
 
 @dataclasses.dataclass
@@ -115,6 +66,15 @@ class SimResult:
     @property
     def total_energy(self) -> float:
         return self.e_tx + self.e_infer + self.e_idle
+
+    @classmethod
+    def empty(cls, name: str, n_servers: int) -> "SimResult":
+        """Zeroed result for a run that produced no outcomes."""
+        return cls(name=name, n_services=0, success_rate=0.0,
+                   avg_processing_time=0.0, p95_processing_time=0.0,
+                   throughput_tokens_per_s=0.0, makespan=0.0,
+                   e_tx=0.0, e_infer=0.0, e_idle=0.0,
+                   per_server_served=[0] * n_servers)
 
     def row(self) -> str:
         return (f"{self.name:22s} succ={self.success_rate*100:5.1f}% "
@@ -141,8 +101,10 @@ class Simulator:
         self.efficiency = rng.uniform(0.7, 1.0, (N_CLASSES, len(specs)))
         self.noise_rng = np.random.default_rng(seed + 1)
 
-    def run(self, services: List[ServiceRequest],
-            scheduler: SchedulerBase) -> SimResult:
+    def run(self, services: List[ServiceRequest], scheduler) -> SimResult:
+        """Simulate `services` under `scheduler` (a `SchedulingPolicy`, or a
+        legacy `SchedulerBase` — coerced through the deprecation shim)."""
+        policy = as_policy(scheduler)
         specs = self.specs
         states = [ServerState(spec=s) for s in specs]
         lane_free = [[0.0] * s.max_concurrency for s in specs]
@@ -153,6 +115,8 @@ class Simulator:
             r.class_id = classify(r)
             r.finish = -1.0
             r.server = -1
+        if not services:
+            return SimResult.empty(policy.name, len(specs))
         horizon_slots = int(math.ceil(services[-1].arrival / self.slot)) + 1
 
         idx = 0
@@ -167,18 +131,19 @@ class Simulator:
                 continue
             factors = [self.bandwidth.factor(ts, j)
                        for j in range(len(specs))]
-            view = SlotView(
+            view = ClusterView(
                 t=t0, specs=specs, bw_factor=list(factors),
                 uplink_free_at=[st.uplink_free_at for st in states],
                 lane_free=[list(lf) for lf in lane_free],
             )
-            choices = scheduler.schedule(arrivals, view, ts)
-            assert len(choices) == len(arrivals)
-            for req, j in zip(arrivals, choices):
-                out = self._realize(req, j, states, lane_free, factors)
+            decisions = drive_slot(policy, arrivals, view, ts)
+            for req, d in zip(arrivals, decisions):
+                out = self._realize(req, d, states, lane_free, factors)
                 outcomes.append(out)
-                scheduler.observe(req, out)
+                policy.feedback(req, out)
 
+        if not outcomes:
+            return SimResult.empty(policy.name, len(specs))
         makespan = max(o.finish for o in outcomes)
         for st in states:
             st.finalize_idle(makespan)
@@ -187,7 +152,7 @@ class Simulator:
         succ = np.array([o.success for o in outcomes])
         tokens = sum(r.prompt_tokens + r.output_tokens for r in services)
         return SimResult(
-            name=scheduler.name,
+            name=policy.name,
             n_services=len(services),
             success_rate=float(np.mean(succ)),
             avg_processing_time=float(np.mean(times)),
@@ -201,14 +166,15 @@ class Simulator:
         )
 
     # ------------------------------------------------------------------
-    def _realize(self, req: ServiceRequest, j: int,
+    def _realize(self, req: ServiceRequest, decision: Decision,
                  states: List[ServerState], lane_free: List[List[float]],
                  factors: List[float]) -> Outcome:
+        j = decision.server
         spec = self.specs[j]
         st = states[j]
-        # upload over the shared FIFO uplink (schedulers may defer dispatch,
-        # e.g. FineInfer's deferred batching windows)
-        dispatch = max(req.arrival, getattr(req, "defer_until", 0.0))
+        # upload over the shared FIFO uplink; the runtime applies the
+        # Decision's dispatch deferral (e.g. FineInfer's batching windows)
+        dispatch = max(req.arrival, decision.defer_until)
         tx_start = max(dispatch, st.uplink_free_at)
         tx_dur = req.payload_bytes * 8.0 / (spec.bandwidth * factors[j])
         st.uplink_free_at = tx_start + tx_dur

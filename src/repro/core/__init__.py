@@ -1,12 +1,20 @@
 """The paper's primary contribution: CS-UCB scheduling with edge-cloud
-collaboration (PerLLM, Alg. 1) plus the compared baselines."""
+collaboration (PerLLM, Alg. 1), the compared baselines, and the unified
+`SchedulingPolicy` API both runtimes drive."""
+from repro.core.api import (
+    ClusterView, Decision, LegacyPolicyAdapter, SchedulerBase,
+    SchedulingPolicy, as_policy, available_policies, drive_slot, make_policy,
+    register_policy,
+)
 from repro.core.bandit import CSUCB, CSUCBParams
 from repro.core.baselines import AGOD, FineInfer, RewardlessGuidance, make_baselines
 from repro.core.constraints import ConstraintSlacks, evaluate_constraints
 from repro.core.scheduler import PerLLMScheduler
 
 __all__ = [
-    "AGOD", "CSUCB", "CSUCBParams", "ConstraintSlacks", "FineInfer",
-    "PerLLMScheduler", "RewardlessGuidance", "evaluate_constraints",
-    "make_baselines",
+    "AGOD", "CSUCB", "CSUCBParams", "ClusterView", "ConstraintSlacks",
+    "Decision", "FineInfer", "LegacyPolicyAdapter", "PerLLMScheduler",
+    "RewardlessGuidance", "SchedulerBase", "SchedulingPolicy", "as_policy",
+    "available_policies", "drive_slot", "evaluate_constraints",
+    "make_baselines", "make_policy", "register_policy",
 ]

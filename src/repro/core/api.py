@@ -1,0 +1,347 @@
+"""The unified scheduling contract shared by the simulator and live server.
+
+One protocol, two runtimes. A scheduler is a `SchedulingPolicy`: per
+request it returns a `Decision` (server, optional dispatch deferral, an
+inference-time correction, and per-constraint slack diagnostics); after the
+request completes it receives the realized `feedback`. The *runtime* — the
+discrete-event `Simulator` or the live `PerLLMServer` — owns the
+`ClusterView` it exposes, applies each Decision's residual accounting via
+`ClusterView.commit`, and applies the deferral. Policies never mutate
+requests or runtime state directly; the old protocol's bare server indices
+plus `req.defer_until` side effects are gone.
+
+Layering: this module is the bottom of the scheduling stack. It imports
+nothing from `repro.cluster`; server specs and requests are structural
+(anything with `bandwidth`, `max_concurrency`, `service_time`, …), so both
+the simulated testbed and the live engine fleet satisfy it.
+
+Policies register themselves by name (`@register_policy("perllm")`) and are
+constructed with `make_policy(name, n_servers, **kw)` — benchmarks,
+examples, and the serve CLI all go through the registry.
+
+A thin deprecation shim keeps out-of-tree `SchedulerBase` subclasses (the
+old batch `schedule() -> List[int]` protocol) runnable: `as_policy()` wraps
+them and `drive_slot()` routes them through their original batch call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (
+    TYPE_CHECKING, Any, Callable, Dict, List, Optional, Sequence, Tuple,
+)
+
+import numpy as np
+
+if TYPE_CHECKING:  # type-only: keeps core.api free of upward imports
+    from repro.core.constraints import ConstraintSlacks
+
+
+# ---------------------------------------------------------------------------
+# Decision — what a policy returns for one request
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One request's placement, returned by `SchedulingPolicy.assign`.
+
+    server       index of the chosen server (C4: exactly one per request)
+    defer_until  earliest dispatch time; 0.0 = dispatch on arrival (used by
+                 deferred-batching policies such as FineInfer)
+    infer_scale  multiplicative correction the policy has learned for the
+                 nominal inference-time model on this server; the runtime
+                 commits lane residuals scaled by it
+    slacks       per-constraint slack diagnostics (C1/C2/C3) at decision
+                 time, if the policy evaluated them — purely observational
+    """
+
+    server: int
+    defer_until: float = 0.0
+    infer_scale: float = 1.0
+    slacks: Optional["ConstraintSlacks"] = None
+
+
+# ---------------------------------------------------------------------------
+# ClusterView — the one observation object both runtimes build
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusterView:
+    """What a policy may observe when assigning one slot's arrivals.
+
+    Built by the runtime from *real* state: per-server uplink occupancy,
+    batch-lane occupancy, and the current bandwidth factor of each link.
+    Mutable residuals (`uplink_free_at`, `lane_free`) are advanced by the
+    runtime's `commit` after each Decision, so later requests in the same
+    slot see the reduced capacity (the combinatorial super-arm accounting).
+    Hidden runtime state (efficiency, noise) is NOT here.
+    """
+
+    t: float
+    specs: Sequence[Any]            # ServerSpec-shaped objects
+    bw_factor: List[float]
+    uplink_free_at: List[float]
+    lane_free: List[List[float]]
+
+    @property
+    def n_servers(self) -> int:
+        return len(self.specs)
+
+    # ---------------- nominal predictors (no hidden factors) -------------
+    def predict_tx(self, req, j: int) -> float:
+        spec = self.specs[j]
+        start = max(self.t, self.uplink_free_at[j])
+        dur = req.payload_bytes * 8.0 / (spec.bandwidth * self.bw_factor[j])
+        return (start - self.t) + dur
+
+    def predict_queue(self, req, j: int) -> float:
+        ready = self.t + self.predict_tx(req, j)
+        lane = min(self.lane_free[j])
+        return max(lane - ready, 0.0)
+
+    def predict_infer(self, req, j: int) -> float:
+        return self.specs[j].service_time(req.prompt_tokens,
+                                          req.output_tokens)
+
+    def predict_total(self, req, j: int) -> float:
+        return (self.predict_tx(req, j) + self.predict_queue(req, j)
+                + self.predict_infer(req, j))
+
+    # ---------------- residual accounting (runtime-applied) --------------
+    def commit(self, req, j: int, infer_scale: float = 1.0) -> None:
+        """Update residuals as if req were placed on j.
+
+        Called by the runtime (`drive_slot`), not by policies — that is what
+        guarantees C2/C3 accounting cannot be silently skipped."""
+        spec = self.specs[j]
+        start = max(self.t, self.uplink_free_at[j])
+        dur = req.payload_bytes * 8.0 / (spec.bandwidth * self.bw_factor[j])
+        self.uplink_free_at[j] = start + dur
+        ready = start + dur
+        lanes = self.lane_free[j]
+        li = int(np.argmin(lanes))
+        begin = max(ready, lanes[li])
+        lanes[li] = begin + self.predict_infer(req, j) * infer_scale
+
+    def apply(self, req, decision: Decision) -> None:
+        """Commit one Decision's residuals."""
+        self.commit(req, decision.server, infer_scale=decision.infer_scale)
+
+
+# ---------------------------------------------------------------------------
+# SchedulingPolicy — the contract
+# ---------------------------------------------------------------------------
+
+
+class SchedulingPolicy:
+    """Per-request scheduling contract.
+
+    Subclasses implement `assign` (pure with respect to the view: no
+    `commit`, no request mutation) and optionally `feedback`. The legacy
+    batch entry points `schedule`/`observe` are provided for backward
+    compatibility and route through the runtime driver.
+    """
+
+    name = "policy"
+
+    def assign(self, request, view: ClusterView) -> Decision:
+        raise NotImplementedError
+
+    def feedback(self, request, outcome) -> None:
+        """Realized outcome for a previously assigned request."""
+
+    # ---------------- deprecated batch protocol (shim) -------------------
+    def schedule(self, arrivals: Sequence[Any], view: ClusterView,
+                 t_slot: int = 0) -> List[int]:
+        """Deprecated: old `SchedulerBase.schedule` signature.
+
+        Drives this policy through the runtime loop (commit included) and
+        returns bare server indices, so pre-redesign call sites keep
+        working."""
+        return [d.server for d in drive_slot(self, arrivals, view, t_slot)]
+
+    def observe(self, request, outcome) -> None:
+        """Deprecated alias for `feedback`."""
+        self.feedback(request, outcome)
+
+
+class SchedulerBase:
+    """Deprecated legacy contract (batch `schedule() -> List[int]` with
+    policy-side `view.commit` and `req.defer_until` mutation).
+
+    Kept so out-of-tree subclasses still run: both runtimes wrap instances
+    with `as_policy()` and drive them through their original batch call.
+    New code should subclass `SchedulingPolicy`."""
+
+    name = "base"
+
+    def schedule(self, arrivals: List[Any], view: ClusterView,
+                 t_slot: int) -> List[int]:
+        raise NotImplementedError
+
+    def observe(self, request, outcome) -> None:
+        pass
+
+
+class LegacyPolicyAdapter(SchedulingPolicy):
+    """Wraps an old-protocol scheduler as a `SchedulingPolicy`.
+
+    Inside `drive_slot` the wrapped scheduler runs through its original
+    batch `schedule` call (committing on the view itself, exactly as
+    before); its side effects are lifted into `Decision` objects. The
+    per-request `assign` below honors the new contract instead: the legacy
+    scheduler runs on a *shadow copy* of the view, so the caller's view is
+    untouched and the runtime's `view.apply` commits exactly once.
+    `assign` passes `int(view.t)` as a pseudo slot index (the adapter
+    cannot know the runtime's slot length); exact slot indices flow through
+    `drive_slot`'s batch path, and no in-repo scheduler reads `t_slot`."""
+
+    def __init__(self, legacy):
+        self.legacy = legacy
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return getattr(self.legacy, "name", type(self.legacy).__name__)
+
+    def assign(self, request, view: ClusterView) -> Decision:
+        shadow = ClusterView(
+            t=view.t, specs=view.specs, bw_factor=list(view.bw_factor),
+            uplink_free_at=list(view.uplink_free_at),
+            lane_free=[list(lf) for lf in view.lane_free])
+        (j,) = self.legacy.schedule([request], shadow, int(view.t))
+        j = int(j)
+        # Lift the legacy commit's lane booking into the Decision so the
+        # runtime's single commit reproduces it (the old protocol let the
+        # scheduler scale the nominal inference time, e.g. the seed
+        # PerLLMScheduler's learned infer_ratio).
+        infer_scale = 1.0
+        changed = [i for i, (a, b) in
+                   enumerate(zip(view.lane_free[j], shadow.lane_free[j]))
+                   if a != b]
+        if len(changed) == 1:
+            li = changed[0]
+            begin = max(shadow.uplink_free_at[j], view.lane_free[j][li])
+            nominal = view.predict_infer(request, j)
+            booked = shadow.lane_free[j][li] - begin
+            if nominal > 0 and booked > 0:
+                infer_scale = booked / nominal
+        return Decision(server=j,
+                        defer_until=float(getattr(request, "defer_until",
+                                                  0.0)),
+                        infer_scale=infer_scale)
+
+    def feedback(self, request, outcome) -> None:
+        self.legacy.observe(request, outcome)
+
+
+def as_policy(scheduler) -> SchedulingPolicy:
+    """Coerce a scheduler of either protocol into a `SchedulingPolicy`."""
+    if isinstance(scheduler, SchedulingPolicy):
+        return scheduler
+    if callable(getattr(scheduler, "schedule", None)):
+        return LegacyPolicyAdapter(scheduler)
+    raise TypeError(
+        f"{type(scheduler).__name__} implements neither SchedulingPolicy "
+        "(.assign) nor the legacy SchedulerBase protocol (.schedule)")
+
+
+# ---------------------------------------------------------------------------
+# Runtime driver — the one place Decisions are applied
+# ---------------------------------------------------------------------------
+
+
+def drive_slot(policy, arrivals: Sequence[Any], view: ClusterView,
+               t_slot: int = 0) -> List[Decision]:
+    """Ask `policy` for one Decision per arrival and apply each to `view`.
+
+    This is the runtime side of the contract: the policy only *returns*
+    Decisions; residual accounting (`view.commit`) happens here, in arrival
+    order, so within-slot C2/C3 consumption is always recorded. Legacy
+    schedulers (old batch protocol) are driven through their original
+    `schedule` call — they commit themselves — and their side effects are
+    lifted into Decisions.
+    """
+    legacy = None
+    if isinstance(policy, LegacyPolicyAdapter):
+        legacy = policy.legacy
+    elif not isinstance(policy, SchedulingPolicy) \
+            and callable(getattr(policy, "schedule", None)):
+        legacy = policy
+    if legacy is not None:
+        choices = legacy.schedule(list(arrivals), view, t_slot)
+        assert len(choices) == len(arrivals)
+        return [Decision(server=int(j),
+                         defer_until=float(getattr(r, "defer_until", 0.0)))
+                for r, j in zip(arrivals, choices)]
+
+    decisions: List[Decision] = []
+    for req in arrivals:
+        d = policy.assign(req, view)
+        view.apply(req, d)
+        decisions.append(d)
+    return decisions
+
+
+# ---------------------------------------------------------------------------
+# Policy registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Tuple[str, Callable[..., SchedulingPolicy]]] = {}
+
+
+def _normalize(name: str) -> str:
+    return "".join(c for c in name.lower() if c.isalnum())
+
+
+def register_policy(name: str, factory: Optional[Callable] = None):
+    """Register a policy factory under `name` (case/punctuation-insensitive).
+
+    Usable as a decorator on a `SchedulingPolicy` subclass::
+
+        @register_policy("perllm")
+        class PerLLMScheduler(SchedulingPolicy): ...
+
+    or directly with any callable `factory(n_servers, **kw)`.
+    """
+    def _register(fac):
+        key = _normalize(name)
+        _REGISTRY[key] = (name, fac)
+        return fac
+
+    return _register(factory) if factory is not None else _register
+
+
+def available_policies() -> List[str]:
+    """Canonical names of every registered policy, sorted."""
+    _load_builtin_policies()
+    return sorted(display for display, _ in _REGISTRY.values())
+
+
+def make_policy(name: str, n_servers: int, **kwargs) -> SchedulingPolicy:
+    """Construct a registered policy by name.
+
+    Lookup ignores case and punctuation, so "PerLLM", "perllm" and
+    "rewardless-guidance" all resolve. Raises KeyError (listing the known
+    names) for anything unregistered."""
+    _load_builtin_policies()
+    key = _normalize(name)
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown scheduling policy {name!r}; available: "
+            + ", ".join(available_policies()))
+    _, factory = _REGISTRY[key]
+    return factory(n_servers, **kwargs)
+
+
+def _load_builtin_policies() -> None:
+    """Import the modules whose import side effect registers the built-ins."""
+    import repro.core.baselines  # noqa: F401
+    import repro.core.scheduler  # noqa: F401
+
+
+__all__ = [
+    "ClusterView", "Decision", "LegacyPolicyAdapter", "SchedulerBase",
+    "SchedulingPolicy", "as_policy", "available_policies", "drive_slot",
+    "make_policy", "register_policy",
+]

@@ -55,8 +55,10 @@ class CSUCB:
 
     # ------------------------------------------------------------------
     def ucb(self, cls: int, feasible_mask: np.ndarray) -> np.ndarray:
-        """Eq. 6 scores for one service class; −inf outside the mask."""
-        self.t += 1
+        """Eq. 6 scores for one service class; −inf outside the mask.
+
+        Pure scoring: bandit time `t` only advances in `update()`, so
+        diagnostics (or double scoring) never perturb exploration."""
         logt = math.log(max(self.t, 2))
         cnt = np.maximum(self.count[cls], 1)
         explore = self.p.delta * np.sqrt(logt / cnt)
@@ -80,6 +82,7 @@ class CSUCB:
 
     def update(self, cls: int, server: int, reward: float,
                violation_severity: float) -> None:
+        self.t += 1
         self.count[cls, server] += 1
         n = self.count[cls, server]
         self.mean[cls, server] += (reward - self.mean[cls, server]) / n

@@ -1,7 +1,13 @@
 """Baseline schedulers the paper compares against (§4.1).
 
+All three are `SchedulingPolicy` implementations: they return `Decision`
+objects and never touch the view's residuals themselves (the runtime
+commits between `assign` calls, so within-slot load observations still
+reflect the policy's own earlier placements).
+
 FineInfer [He et al., EuroMLSys'24] — cloud-only with *deferred continuous
-batching*: requests are held and dispatched at batching-window boundaries.
+batching*: requests are held and dispatched at batching-window boundaries
+(expressed as `Decision.defer_until`, applied by the runtime).
 
 AGOD [Du et al., TMC'24] — edge-only; the diffusion-model + DRL offloading
 policy is represented by its decision rule: an ε-greedy learned value per
@@ -16,15 +22,17 @@ congestion dynamics, which is exactly what the paper exploits.
 """
 from __future__ import annotations
 
-from typing import List
+import math
 
 import numpy as np
 
-from repro.cluster.simulator import Outcome, SchedulerBase, SlotView
-from repro.cluster.workload import N_CLASSES, ServiceRequest
+from repro.cluster.workload import N_CLASSES
+from repro.core.api import ClusterView, Decision, SchedulingPolicy, \
+    register_policy
 
 
-class FineInfer(SchedulerBase):
+@register_policy("fineinfer")
+class FineInfer(SchedulingPolicy):
     name = "FineInfer"
 
     def __init__(self, n_servers: int, batch_window: float = 1.0, **_):
@@ -32,19 +40,15 @@ class FineInfer(SchedulerBase):
         self.cloud = n_servers - 1          # convention: last server = cloud
         self.batch_window = batch_window
 
-    def schedule(self, arrivals: List[ServiceRequest], view: SlotView,
-                 t_slot: int) -> List[int]:
+    def assign(self, req, view: ClusterView) -> Decision:
         # deferred batching: requests are held until the next batching
         # window boundary before dispatch
-        import math
-        for req in arrivals:
-            req.defer_until = math.ceil(req.arrival / self.batch_window) \
-                * self.batch_window
-            view.commit(req, self.cloud)
-        return [self.cloud] * len(arrivals)
+        defer = math.ceil(req.arrival / self.batch_window) * self.batch_window
+        return Decision(server=self.cloud, defer_until=defer)
 
 
-class AGOD(SchedulerBase):
+@register_policy("agod")
+class AGOD(SchedulingPolicy):
     name = "AGOD"
 
     def __init__(self, n_servers: int, epsilon: float = 0.08, seed: int = 0,
@@ -55,22 +59,17 @@ class AGOD(SchedulerBase):
         self.value = np.zeros((N_CLASSES, self.n_edges))
         self.count = np.zeros((N_CLASSES, self.n_edges), np.int64)
 
-    def schedule(self, arrivals: List[ServiceRequest], view: SlotView,
-                 t_slot: int) -> List[int]:
-        out = []
-        for req in arrivals:
-            if self.rng.uniform() < self.eps:
-                j = int(self.rng.integers(self.n_edges))
-            else:
-                load = np.array([min(view.lane_free[e]) for e
-                                 in range(self.n_edges)])
-                score = self.value[req.class_id] - 0.2 * (load - view.t)
-                j = int(np.argmax(score))
-            view.commit(req, j)
-            out.append(j)
-        return out
+    def assign(self, req, view: ClusterView) -> Decision:
+        if self.rng.uniform() < self.eps:
+            j = int(self.rng.integers(self.n_edges))
+        else:
+            load = np.array([min(view.lane_free[e]) for e
+                             in range(self.n_edges)])
+            score = self.value[req.class_id] - 0.2 * (load - view.t)
+            j = int(np.argmax(score))
+        return Decision(server=j)
 
-    def observe(self, req: ServiceRequest, out: Outcome) -> None:
+    def feedback(self, req, out) -> None:
         if out.server >= self.n_edges:
             return
         cls = req.class_id
@@ -80,7 +79,8 @@ class AGOD(SchedulerBase):
         self.value[cls, out.server] += (r - self.value[cls, out.server]) / n
 
 
-class RewardlessGuidance(SchedulerBase):
+@register_policy("rewardless-guidance")
+class RewardlessGuidance(SchedulingPolicy):
     name = "RewardlessGuidance"
 
     def __init__(self, n_servers: int, w_time: float = 0.6,
@@ -99,38 +99,31 @@ class RewardlessGuidance(SchedulerBase):
         self.belief_rate = belief_rate
         self.lag_belief = np.zeros(n_servers)
 
-    def _expected_energy(self, req: ServiceRequest, j: int,
-                         view: SlotView) -> float:
+    def _expected_energy(self, req, j: int, view: ClusterView) -> float:
         spec = view.specs[j]
         t_inf = view.predict_infer(req, j)
         t_tx = req.payload_bytes * 8.0 / spec.bandwidth
         return ((spec.power_active - spec.power_idle)
                 / spec.max_concurrency * t_inf + spec.tx_power * t_tx)
 
-    def schedule(self, arrivals: List[ServiceRequest], view: SlotView,
-                 t_slot: int) -> List[int]:
-        out = []
-        for req in arrivals:
-            # expected free energy from *static nominal* models (rewardless:
-            # no learning, no live congestion state — the method's premise)
-            efe = []
-            for j in range(self.n_servers):
-                spec = view.specs[j]
-                t_stat = (view.predict_infer(req, j)
-                          + req.payload_bytes * 8.0 / spec.bandwidth
-                          + self.lag_belief[j])
-                t = t_stat / max(req.deadline, 1e-9)
-                e = self._expected_energy(req, j, view) / 500.0
-                efe.append(self.w_time * t + self.w_energy * e)
-            efe = np.asarray(efe)
-            p = np.exp(-(efe - efe.min()) / self.temp)
-            p /= p.sum()
-            j = int(self.rng.choice(self.n_servers, p=p))
-            view.commit(req, j)
-            out.append(j)
-        return out
+    def assign(self, req, view: ClusterView) -> Decision:
+        # expected free energy from *static nominal* models (rewardless:
+        # no learning, no live congestion state — the method's premise)
+        efe = []
+        for j in range(self.n_servers):
+            spec = view.specs[j]
+            t_stat = (view.predict_infer(req, j)
+                      + req.payload_bytes * 8.0 / spec.bandwidth
+                      + self.lag_belief[j])
+            t = t_stat / max(req.deadline, 1e-9)
+            e = self._expected_energy(req, j, view) / 500.0
+            efe.append(self.w_time * t + self.w_energy * e)
+        efe = np.asarray(efe)
+        p = np.exp(-(efe - efe.min()) / self.temp)
+        p /= p.sum()
+        return Decision(server=int(self.rng.choice(self.n_servers, p=p)))
 
-    def observe(self, req: ServiceRequest, out: Outcome) -> None:
+    def feedback(self, req, out) -> None:
         j = out.server
         spec_nominal = out.infer_time  # realized; belief tracks extra lag
         lag = max(out.processing_time - spec_nominal, 0.0)

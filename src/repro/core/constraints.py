@@ -15,8 +15,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.cluster.simulator import SlotView
 from repro.cluster.workload import ServiceRequest
+from repro.core.api import ClusterView
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,7 +35,7 @@ class ConstraintSlacks:
         return self.f >= 0.0
 
 
-def evaluate_constraints(req: ServiceRequest, j: int, view: SlotView,
+def evaluate_constraints(req: ServiceRequest, j: int, view: ClusterView,
                          predicted_time: Optional[float] = None,
                          ) -> ConstraintSlacks:
     """Normalized slacks for assigning `req` to server `j` given residuals.

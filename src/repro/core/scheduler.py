@@ -1,24 +1,26 @@
 """PerLLM scheduler: CS-UCB service scheduling + resource allocation.
 
-Implements paper Algorithm 1. Per slot, arrivals are assigned sequentially
-(building the super arm): for each service the constraint-satisfaction
-mechanism filters the feasible servers using *learned* processing-time
-estimates, CS-UCB picks the feasible arm with the best UCB score, and the
-slot view's residuals are committed so later services in the same slot see
-the reduced capacity (C2/C3 accounting).
+Implements paper Algorithm 1 as a `SchedulingPolicy`. Per slot, arrivals
+are assigned sequentially (building the super arm): for each service the
+constraint-satisfaction mechanism filters the feasible servers using
+*learned* processing-time estimates and CS-UCB picks the feasible arm with
+the best UCB score. The runtime commits each `Decision`'s residuals before
+asking for the next one, so later services in the same slot see the reduced
+capacity (C2/C3 accounting).
 
-Observed outcomes feed back: reward = −energy_norm + λ·f(y) (Eq. 4), plus a
-violation-severity update that drives the penalty term P(t).
+Observed outcomes arrive via `feedback`: reward = −energy_norm + λ·f(y)
+(Eq. 4), plus a violation-severity update that drives the penalty term P(t).
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.cluster.simulator import Outcome, SchedulerBase, SlotView
-from repro.cluster.workload import N_CLASSES, ServiceRequest
+from repro.cluster.workload import N_CLASSES
+from repro.core.api import ClusterView, Decision, SchedulingPolicy, \
+    register_policy
 from repro.core.bandit import CSUCB, CSUCBParams
 from repro.core.constraints import ConstraintSlacks, evaluate_constraints
 
@@ -27,7 +29,8 @@ from repro.core.constraints import ConstraintSlacks, evaluate_constraints
 E_SCALE = 100.0
 
 
-class PerLLMScheduler(SchedulerBase):
+@register_policy("perllm")
+class PerLLMScheduler(SchedulingPolicy):
     name = "PerLLM"
 
     def __init__(self, n_servers: int, params: Optional[CSUCBParams] = None,
@@ -51,47 +54,42 @@ class PerLLMScheduler(SchedulerBase):
     # queue drift when checking the processing-time constraint.
     SAFETY = 1.05
 
-    def predicted_time(self, req: ServiceRequest, j: int,
-                       view: SlotView) -> float:
+    def predicted_time(self, req, j: int, view: ClusterView) -> float:
         cls = req.class_id
         d_hat = (view.predict_tx(req, j) + view.predict_queue(req, j)
                  + view.predict_infer(req, j) * self.infer_ratio[cls, j])
         margin = math.sqrt(self.err_var[cls, j])
         return d_hat * self.time_ratio[cls, j] * self.SAFETY + margin
 
-    def schedule(self, arrivals: List[ServiceRequest], view: SlotView,
-                 t_slot: int) -> List[int]:
-        choices = []
-        for req in arrivals:
-            slacks = []
-            feasible = np.zeros(self.n_servers, bool)
-            for j in range(self.n_servers):
-                d_hat = self.predicted_time(req, j, view)
-                s = evaluate_constraints(req, j, view, predicted_time=d_hat)
-                slacks.append(s)
-                feasible[j] = s.satisfied
-            if feasible.any():
-                j = self.bandit.select(req.class_id, feasible)
-            else:
-                # C1 failover (paper §3.1): no feasible server -> assign to
-                # the most resource-rich one, i.e. minimum predicted time
-                j = int(np.argmin([self.predicted_time(req, jj, view)
-                                   for jj in range(self.n_servers)]))
-            self._pending_slacks[req.sid] = slacks[j]
-            self._nominal_pred[req.sid] = self.predicted_time(req, j, view) \
-                / self.SAFETY
-            self._last_nominal_infer[req.sid] = view.predict_infer(req, j)
-            view.commit(req, j,
-                        infer_scale=self.infer_ratio[req.class_id, j])
-            choices.append(j)
-        return choices
+    def assign(self, req, view: ClusterView) -> Decision:
+        slacks: List[ConstraintSlacks] = []
+        feasible = np.zeros(self.n_servers, bool)
+        for j in range(self.n_servers):
+            d_hat = self.predicted_time(req, j, view)
+            s = evaluate_constraints(req, j, view, predicted_time=d_hat)
+            slacks.append(s)
+            feasible[j] = s.satisfied
+        if feasible.any():
+            j = self.bandit.select(req.class_id, feasible)
+        else:
+            # C1 failover (paper §3.1): no feasible server -> assign to
+            # the most resource-rich one, i.e. minimum predicted time
+            j = int(np.argmin([self.predicted_time(req, jj, view)
+                               for jj in range(self.n_servers)]))
+        self._pending_slacks[req.sid] = slacks[j]
+        self._nominal_pred[req.sid] = self.predicted_time(req, j, view) \
+            / self.SAFETY
+        self._last_nominal_infer[req.sid] = view.predict_infer(req, j)
+        return Decision(server=j,
+                        infer_scale=float(self.infer_ratio[req.class_id, j]),
+                        slacks=slacks[j])
 
-    def observe(self, req: ServiceRequest, out: Outcome) -> None:
+    def feedback(self, req, out) -> None:
         slacks = self._pending_slacks.pop(req.sid, None)
         nominal = self._nominal_pred.pop(req.sid, None)
         cls, j = req.class_id, out.server
 
-        # realized constraint slack (C1 realized; C2/C3 from schedule time)
+        # realized constraint slack (C1 realized; C2/C3 from decision time)
         time_slack = (req.deadline - out.processing_time) / req.deadline
         f_y = min(time_slack,
                   slacks.compute if slacks else 0.0,

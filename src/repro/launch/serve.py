@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
         --requests 16 --max-new 8
+
+With `--policy NAME` the launcher instead serves through a PerLLM fleet
+(2 reduced edge engines + 1 reduced cloud engine) scheduled by the named
+policy from the registry (see `repro.core.available_policies()`):
+
+    PYTHONPATH=src python -m repro.launch.serve --policy perllm --requests 12
 """
 import argparse
 import time
@@ -14,6 +20,46 @@ from repro.models import init_params
 from repro.serving import ServingEngine
 
 
+def _run_fleet(args) -> None:
+    """Edge-cloud fleet scheduled by a registry policy (`--policy`)."""
+    from repro.cluster import paper_testbed
+    from repro.core import available_policies, make_policy
+    from repro.serving.perllm_server import PerLLMServer
+
+    specs = paper_testbed(n_edge=2)
+    try:
+        policy = make_policy(args.policy, len(specs))
+    except KeyError:
+        raise SystemExit(f"unknown policy {args.policy!r}; available: "
+                         + ", ".join(available_policies()))
+    key = jax.random.key(0)
+    edge_cfg = get_config("gemma-2b").reduced(n_layers=2, d_model=64,
+                                              vocab_size=256)
+    cloud_cfg = get_config("gemma3-12b").reduced(n_layers=2, d_model=128,
+                                                 vocab_size=256)
+    engines = [ServingEngine(edge_cfg, init_params(key, edge_cfg),
+                             max_batch=2, max_seq=64) for _ in range(2)]
+    engines.append(ServingEngine(cloud_cfg, init_params(key, cloud_cfg),
+                                 max_batch=4, max_seq=64))
+    srv = PerLLMServer(specs, engines, scheduler=policy)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for _ in range(args.requests):
+        plen = int(rng.integers(4, 16))
+        srv.submit(list(rng.integers(0, 256, plen)),
+                   max_new_tokens=args.max_new)
+    srv.run_until_idle()
+    dt = time.time() - t0
+    s = srv.stats
+    if not s["served"]:
+        print(f"{policy.name}: served 0 requests in {dt:.1f}s")
+        return
+    print(f"{policy.name}: served {s['served']} requests in {dt:.1f}s — "
+          f"deadline_met={s['deadline_met']*100:.0f}% "
+          f"mean_latency={s['mean_latency']:.2f}s "
+          f"per_server={s['per_server']}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=list_archs())
@@ -23,7 +69,14 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--policy", default=None,
+                    help="serve through an edge-cloud fleet scheduled by "
+                         "this registered policy (perllm, fineinfer, ...)")
     args = ap.parse_args(argv)
+
+    if args.policy:
+        _run_fleet(args)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -1,10 +1,18 @@
 """PerLLMServer: the paper's system as a deployable service object.
 
-Owns N `ServingEngine`s (the edge/cloud fleet), a `PerLLMScheduler` and a
+Owns N `ServingEngine`s (the edge/cloud fleet), a scheduling policy and a
 cluster spec; callers `submit()` requests with deadlines and `step()` the
 service. Scheduling decisions route requests to a concrete engine, real
-prefill/decode runs there, and realized latencies feed the CS-UCB learner —
-the full loop of Fig. 3 in one class.
+prefill/decode runs there, and realized latencies feed the learner — the
+full loop of Fig. 3 in one class.
+
+Scheduling goes through the same `SchedulingPolicy` API as the simulator:
+each `step()` builds a `ClusterView` from *real* fleet state — persistent
+per-server uplink occupancy, the link bandwidth model's current factor, and
+engine batch-lane occupancy — and `drive_slot` applies every `Decision`'s
+residual accounting. The learner therefore sees the same observation
+surface in the live server as in the simulator (previously the live view
+was degenerate: unit bandwidth factors and no uplink state).
 
 Time handling: the server runs on a logical clock advanced by `step()`;
 each engine-step costs its server's analytic per-step latency, so the
@@ -19,9 +27,11 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.cluster.network import BandwidthModel
 from repro.cluster.server import ServerSpec
-from repro.cluster.simulator import Outcome, SlotView
+from repro.cluster.simulator import Outcome
 from repro.cluster.workload import ServiceRequest, classify
+from repro.core.api import ClusterView, Decision, as_policy, drive_slot
 from repro.core.scheduler import PerLLMScheduler
 from repro.serving.engine import Request, ServingEngine
 
@@ -33,6 +43,8 @@ class ServedRequest:
     server: int = -1
     submitted_clock: float = 0.0
     done_clock: float = -1.0
+    decision: Optional[Decision] = None
+    tx_time: float = 0.0          # uplink occupancy charged at routing time
 
     @property
     def done(self) -> bool:
@@ -50,16 +62,24 @@ class ServedRequest:
 class PerLLMServer:
     def __init__(self, specs: Sequence[ServerSpec],
                  engines: Sequence[ServingEngine],
-                 scheduler: Optional[PerLLMScheduler] = None,
-                 slot: float = 0.5):
+                 scheduler=None, slot: float = 0.5,
+                 bandwidth: Optional[BandwidthModel] = None):
         assert len(specs) == len(engines)
         self.specs = list(specs)
         self.engines = list(engines)
         self.scheduler = scheduler or PerLLMScheduler(len(specs))
+        self.policy = as_policy(self.scheduler)
+        self.bandwidth = bandwidth or BandwidthModel()
         self.slot = slot
         self.clock = 0.0
+        # real uplink occupancy: advanced by each committed Decision,
+        # shared across steps (the fleet's links are stateful)
+        self.uplink_free_at = [0.0] * len(specs)
         self._sid = itertools.count()
         self._pending: List[ServedRequest] = []
+        # routed but held back by Decision.defer_until (deferred batching):
+        # the runtime — not the policy — applies the deferral
+        self._deferred: List[ServedRequest] = []
         self.active: Dict[int, ServedRequest] = {}
         self.completed: List[ServedRequest] = []
 
@@ -77,7 +97,11 @@ class PerLLMServer:
         self._pending.append(sr)
         return sr
 
-    def _view(self) -> SlotView:
+    def _view(self) -> ClusterView:
+        """Snapshot real fleet state for the policy: live uplink residuals,
+        the bandwidth model's current per-link factor, and engine batch-lane
+        occupancy."""
+        t_slot = int(self.clock / self.slot)
         lane_free = []
         for j, eng in enumerate(self.engines):
             spec = self.specs[j]
@@ -87,26 +111,51 @@ class PerLLMServer:
             for i in range(min(busy, spec.max_concurrency)):
                 lanes[i] = self.clock + 8 * step_t  # coarse occupancy
             lane_free.append(lanes)
-        return SlotView(
+        return ClusterView(
             t=self.clock, specs=self.specs,
-            bw_factor=[1.0] * len(self.specs),
-            uplink_free_at=[self.clock] * len(self.specs),
+            bw_factor=[self.bandwidth.factor(t_slot, j)
+                       for j in range(len(self.specs))],
+            uplink_free_at=list(self.uplink_free_at),
             lane_free=lane_free)
 
     # ------------------------------------------------------------------
+    def _dispatch(self, sr: ServedRequest) -> None:
+        sr.engine_req = self.engines[sr.server].submit(
+            sr._prompt, max_new_tokens=sr.service.output_tokens)
+        self.active[sr.service.sid] = sr
+
     def step(self) -> int:
         """Route pending requests, advance every engine one decode step."""
+        # dispatch deferred requests whose batching window has arrived
+        held = []
+        for sr in self._deferred:
+            if sr.decision.defer_until <= self.clock:
+                self._dispatch(sr)
+            else:
+                held.append(sr)
+        self._deferred = held
+
         if self._pending:
             view = self._view()
             batch = self._pending
             self._pending = []
-            choices = self.scheduler.schedule(
-                [sr.service for sr in batch], view, int(self.clock / self.slot))
-            for sr, j in zip(batch, choices):
+            decisions = drive_slot(
+                self.policy, [sr.service for sr in batch], view,
+                int(self.clock / self.slot))
+            # persist the committed uplink residuals: the fleet's links
+            # stay occupied across steps
+            self.uplink_free_at = list(view.uplink_free_at)
+            for sr, d in zip(batch, decisions):
+                j = d.server
                 sr.server = j
-                sr.engine_req = self.engines[j].submit(
-                    sr._prompt, max_new_tokens=sr.service.output_tokens)
-                self.active[sr.service.sid] = sr
+                sr.decision = d
+                spec = self.specs[j]
+                sr.tx_time = sr.service.payload_bytes * 8.0 \
+                    / (spec.bandwidth * view.bw_factor[j])
+                if d.defer_until > self.clock:
+                    self._deferred.append(sr)
+                else:
+                    self._dispatch(sr)
 
         n_active = 0
         for j, eng in enumerate(self.engines):
@@ -128,19 +177,20 @@ class PerLLMServer:
         spec = self.specs[sr.server]
         t_inf = spec.service_time(sr.service.prompt_tokens,
                                   sr.service.output_tokens)
-        energy = ((spec.power_active - spec.power_idle)
-                  / spec.max_concurrency) * t_inf
-        out = Outcome(server=sr.server, tx_time=0.0, queue_time=0.0,
+        energy = (((spec.power_active - spec.power_idle)
+                   / spec.max_concurrency) * t_inf
+                  + spec.tx_power * sr.tx_time)
+        out = Outcome(server=sr.server, tx_time=sr.tx_time, queue_time=0.0,
                       infer_time=t_inf, finish=sr.done_clock,
                       processing_time=sr.latency,
                       success=sr.met_deadline, energy=energy)
-        self.scheduler.observe(sr.service, out)
+        self.policy.feedback(sr.service, out)
         self.completed.append(sr)
         del self.active[sr.service.sid]
 
     def run_until_idle(self, max_steps: int = 10_000) -> List[ServedRequest]:
         for _ in range(max_steps):
-            if not self._pending and not self.active:
+            if not self._pending and not self._deferred and not self.active:
                 break
             self.step()
         return self.completed

@@ -1,0 +1,115 @@
+"""Minimal deterministic fallback for `hypothesis` when it isn't installed.
+
+The tier-1 suite property-tests with hypothesis, but the pinned runtime
+image may not ship it (it IS declared in pyproject's test extra and
+installed in CI). To keep the suite collectable and meaningful everywhere,
+`conftest.py` injects this stub into `sys.modules` only when the real
+library is missing.
+
+Scope: exactly what the tests here use — `given` (positional or keyword
+strategies), `settings(max_examples=..., deadline=...)`, and the
+`integers` / `floats` / `lists` strategies. Drawing is deterministic
+(seeded per test) and always includes the strategy bounds, so boundary
+cases are exercised on every run. It is NOT a general hypothesis
+replacement: no shrinking, no database, no stateful testing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+
+import numpy as np
+
+
+class _Strategy:
+    """A sampler: `draw(rng, i)` returns the i-th example."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng, i: int):
+        return self._draw(rng, i)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    def draw(rng, i):
+        if i == 0:
+            return int(min_value)
+        if i == 1:
+            return int(max_value)
+        return int(rng.integers(min_value, max_value + 1))
+    return _Strategy(draw)
+
+
+def floats(min_value: float, max_value: float, **_) -> _Strategy:
+    def draw(rng, i):
+        if i == 0:
+            return float(min_value)
+        if i == 1:
+            return float(max_value)
+        return float(rng.uniform(min_value, max_value))
+    return _Strategy(draw)
+
+
+def sampled_from(values) -> _Strategy:
+    values = list(values)
+
+    def draw(rng, i):
+        if i < len(values):
+            return values[i]
+        return values[int(rng.integers(len(values)))]
+    return _Strategy(draw)
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng, i):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng, 2 + int(rng.integers(0, 1 << 16)))
+                for _ in range(size)]
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = 10, **_):
+    """Records `max_examples` on the function for `given` to honor."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", 10))
+            rng = np.random.default_rng(0)
+            for i in range(n):
+                drawn_args = [s.draw(rng, i) for s in arg_strategies]
+                drawn_kwargs = {name: s.draw(rng, i)
+                                for name, s in kw_strategies.items()}
+                fn(*args, *drawn_args, **kwargs, **drawn_kwargs)
+        # all params are strategy-drawn: hide them so pytest doesn't go
+        # looking for fixtures with those names
+        wrapper.__signature__ = inspect.Signature(parameters=[])
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this stub as `hypothesis` in sys.modules."""
+    import sys
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.floats = floats
+    strategies.lists = lists
+    strategies.sampled_from = sampled_from
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

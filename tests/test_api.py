@@ -1,0 +1,397 @@
+"""Unified SchedulingPolicy API: golden equivalence, registry, regressions.
+
+The golden test freezes the *seed scheduling protocol* — a verbatim copy of
+the pre-redesign `PerLLMScheduler` that returns bare server indices and
+calls `view.commit` itself — and checks that the migrated policy, driven
+through the new Decision path by the runtime, reproduces its `SimResult`
+bit-for-bit (success rate, energy components, per-request choices) on a
+fixed-seed workload. The legacy copy runs through the `as_policy`
+deprecation shim, so the test also proves out-of-tree `SchedulerBase`
+subclasses still behave identically.
+
+Scope note: both sides share today's `CSUCB`, whose time-advance semantics
+this same PR intentionally changed (`t` now ticks in `update()`, not
+`ucb()`). The equivalence therefore isolates the *API migration* — bare
+indices + policy-side commit vs Decision + runtime commit — rather than
+reproducing the pre-PR commit's absolute numbers, which differ by design.
+"""
+import copy
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    BandwidthModel, ClusterView, SchedulerBase, Simulator, SlotView,
+    generate_workload, paper_testbed,
+)
+from repro.cluster.workload import N_CLASSES
+from repro.core import (
+    CSUCB, CSUCBParams, Decision, LegacyPolicyAdapter, PerLLMScheduler,
+    SchedulingPolicy, as_policy, available_policies, drive_slot, make_policy,
+)
+from repro.core.bandit import CSUCB as _CSUCB
+from repro.core.constraints import evaluate_constraints
+from repro.core.scheduler import E_SCALE
+
+
+# ---------------------------------------------------------------------------
+# Frozen seed protocol: the pre-redesign PerLLM scheduler, verbatim
+# ---------------------------------------------------------------------------
+
+
+class SeedPerLLM(SchedulerBase):
+    """The seed `PerLLMScheduler` under the old batch contract: bare index
+    list, policy-side `view.commit`, `observe` feedback."""
+
+    name = "PerLLM"
+    SAFETY = 1.05
+
+    def __init__(self, n_servers, params=None, seed=0):
+        self.n_servers = n_servers
+        self.bandit = _CSUCB(N_CLASSES, n_servers, params, seed=seed)
+        self.time_ratio = np.ones((N_CLASSES, n_servers), np.float64)
+        self.ratio_count = np.zeros((N_CLASSES, n_servers), np.int64)
+        self.err_var = np.zeros((N_CLASSES, n_servers), np.float64)
+        self.infer_ratio = np.ones((N_CLASSES, n_servers), np.float64)
+        self._pending_slacks = {}
+        self._nominal_pred = {}
+        self._last_nominal_infer = {}
+
+    def predicted_time(self, req, j, view):
+        cls = req.class_id
+        d_hat = (view.predict_tx(req, j) + view.predict_queue(req, j)
+                 + view.predict_infer(req, j) * self.infer_ratio[cls, j])
+        margin = math.sqrt(self.err_var[cls, j])
+        return d_hat * self.time_ratio[cls, j] * self.SAFETY + margin
+
+    def schedule(self, arrivals, view, t_slot):
+        choices = []
+        for req in arrivals:
+            slacks = []
+            feasible = np.zeros(self.n_servers, bool)
+            for j in range(self.n_servers):
+                d_hat = self.predicted_time(req, j, view)
+                s = evaluate_constraints(req, j, view, predicted_time=d_hat)
+                slacks.append(s)
+                feasible[j] = s.satisfied
+            if feasible.any():
+                j = self.bandit.select(req.class_id, feasible)
+            else:
+                j = int(np.argmin([self.predicted_time(req, jj, view)
+                                   for jj in range(self.n_servers)]))
+            self._pending_slacks[req.sid] = slacks[j]
+            self._nominal_pred[req.sid] = self.predicted_time(req, j, view) \
+                / self.SAFETY
+            self._last_nominal_infer[req.sid] = view.predict_infer(req, j)
+            view.commit(req, j,
+                        infer_scale=self.infer_ratio[req.class_id, j])
+            choices.append(j)
+        return choices
+
+    def observe(self, req, out):
+        slacks = self._pending_slacks.pop(req.sid, None)
+        nominal = self._nominal_pred.pop(req.sid, None)
+        cls, j = req.class_id, out.server
+        time_slack = (req.deadline - out.processing_time) / req.deadline
+        f_y = min(time_slack,
+                  slacks.compute if slacks else 0.0,
+                  slacks.bandwidth if slacks else 0.0)
+        reward = self.bandit.shaped_reward(out.energy / E_SCALE, f_y)
+        violation = max(-f_y, 0.0)
+        self.bandit.update(cls, j, reward, violation)
+        nom_inf = out.infer_time
+        self.infer_ratio[cls, j] += 0.1 * (
+            out.infer_time / max(self._last_nominal_infer.pop(req.sid,
+                                                              nom_inf),
+                                 1e-9) - self.infer_ratio[cls, j])
+        if nominal and nominal > 0:
+            ratio = out.processing_time / nominal
+            self.ratio_count[cls, j] += 1
+            n = self.ratio_count[cls, j]
+            self.time_ratio[cls, j] += (ratio - self.time_ratio[cls, j]) / n
+            err = out.processing_time - nominal * self.time_ratio[cls, j]
+            self.err_var[cls, j] += (err * err - self.err_var[cls, j]) \
+                / max(n, 1)
+
+
+def _run(scheduler, n=600, wl_seed=3, sim_seed=5):
+    specs = paper_testbed()
+    services = [copy.copy(s) for s in generate_workload(n, seed=wl_seed)]
+    sim = Simulator(specs, BandwidthModel(fluctuating=True, seed=2),
+                    seed=sim_seed)
+    res = sim.run(services, scheduler)
+    return res, [r.server for r in sorted(services, key=lambda r: r.sid)]
+
+
+def test_golden_equivalence_perllm():
+    """make_policy("perllm") through the Decision path == seed protocol."""
+    res_new, choices_new = _run(make_policy("perllm", 6))
+    res_old, choices_old = _run(SeedPerLLM(6))
+    assert choices_new == choices_old
+    assert res_new.success_rate == res_old.success_rate
+    assert res_new.per_server_served == res_old.per_server_served
+    assert res_new.e_tx == pytest.approx(res_old.e_tx)
+    assert res_new.e_infer == pytest.approx(res_old.e_infer)
+    assert res_new.e_idle == pytest.approx(res_old.e_idle)
+    assert res_new.avg_processing_time == pytest.approx(
+        res_old.avg_processing_time)
+    assert res_new.makespan == pytest.approx(res_old.makespan)
+
+
+def test_golden_equivalence_native_vs_compat_schedule():
+    """The deprecated batch `schedule()` wrapper is the same computation."""
+    res_a, choices_a = _run(make_policy("perllm", 6), n=300)
+    res_b, choices_b = _run(as_policy(make_policy("perllm", 6)), n=300)
+    assert choices_a == choices_b
+    assert res_a.success_rate == res_b.success_rate
+
+
+# ---------------------------------------------------------------------------
+# Decision semantics
+# ---------------------------------------------------------------------------
+
+
+def test_policies_do_not_mutate_requests():
+    """Deferral is Decision data now — FineInfer no longer stamps
+    `req.defer_until` onto requests."""
+    specs = paper_testbed()
+    services = [copy.copy(s) for s in generate_workload(150, seed=1)]
+    sim = Simulator(specs, BandwidthModel(), seed=1)
+    sim.run(services, make_policy("fineinfer", len(specs)))
+    assert not any(hasattr(r, "defer_until") for r in services)
+
+
+def test_fineinfer_defer_applied_by_runtime():
+    """Deferred batching still delays dispatch (tx starts at the window)."""
+    specs = paper_testbed()
+    services = [copy.copy(s) for s in generate_workload(80, seed=1)]
+    sim = Simulator(specs, BandwidthModel(), seed=1)
+    res = sim.run(services, make_policy("fineinfer", len(specs),
+                                        batch_window=1.0))
+    # every request finishes after its batching-window boundary
+    for r in sorted(services, key=lambda r: r.sid):
+        assert r.finish >= math.ceil(r.arrival / 1.0) * 1.0
+
+
+def test_legacy_scheduler_base_still_runs():
+    class Old(SchedulerBase):
+        name = "old"
+
+        def schedule(self, arrivals, view, t_slot):
+            out = []
+            for r in arrivals:
+                view.commit(r, 0)
+                out.append(0)
+            return out
+
+    specs = paper_testbed()
+    services = [copy.copy(s) for s in generate_workload(60, seed=0)]
+    res = Simulator(specs, seed=1).run(services, Old())
+    assert res.name == "old"
+    assert res.per_server_served[0] == 60
+
+
+def test_drive_slot_commits_residuals():
+    """The runtime, not the policy, consumes capacity per Decision."""
+    specs = paper_testbed()
+    view = ClusterView(t=0.0, specs=specs, bw_factor=[1.0] * len(specs),
+                       uplink_free_at=[0.0] * len(specs),
+                       lane_free=[[0.0] * s.max_concurrency for s in specs])
+
+    class Fixed(SchedulingPolicy):
+        def assign(self, req, v):
+            return Decision(server=0)
+
+    services = generate_workload(5, seed=0)
+    from repro.cluster.workload import classify
+    for s in services:
+        s.class_id = classify(s)
+    before = view.uplink_free_at[0]
+    decisions = drive_slot(Fixed(), services, view)
+    assert [d.server for d in decisions] == [0] * 5
+    assert view.uplink_free_at[0] > before
+    assert sorted(view.lane_free[0]) != [0.0] * specs[0].max_concurrency
+
+
+def test_slotview_is_clusterview_alias():
+    assert SlotView is ClusterView
+
+
+def test_legacy_adapter_assign_does_not_touch_callers_view():
+    """Per the contract, `assign` is pure w.r.t. the view: the adapter runs
+    the legacy scheduler on a shadow copy, so a runtime doing
+    assign + view.apply commits exactly once (no double-commit)."""
+    class Old(SchedulerBase):
+        name = "old"
+
+        def schedule(self, arrivals, view, t_slot):
+            out = []
+            for r in arrivals:
+                view.commit(r, 0)
+                out.append(0)
+            return out
+
+    specs = paper_testbed()
+    view = ClusterView(t=0.0, specs=specs, bw_factor=[1.0] * len(specs),
+                       uplink_free_at=[0.0] * len(specs),
+                       lane_free=[[0.0] * s.max_concurrency for s in specs])
+    req = copy.copy(generate_workload(1, seed=0)[0])
+    from repro.cluster.workload import classify
+    req.class_id = classify(req)
+    adapter = as_policy(Old())
+    assert isinstance(adapter, LegacyPolicyAdapter)
+    d = adapter.assign(req, view)
+    assert view.uplink_free_at[0] == 0.0        # caller's view untouched
+    assert view.lane_free[0] == [0.0] * specs[0].max_concurrency
+    view.apply(req, d)
+    assert view.uplink_free_at[0] > 0.0         # committed exactly once
+
+
+def test_legacy_adapter_assign_lifts_infer_scale():
+    """A legacy scheduler's scaled lane booking survives the shim: the
+    adapter derives infer_scale from the shadow commit so the runtime's
+    single apply reproduces it."""
+    class OldScaled(SchedulerBase):
+        name = "old-scaled"
+
+        def schedule(self, arrivals, view, t_slot):
+            out = []
+            for r in arrivals:
+                view.commit(r, 1, infer_scale=2.0)
+                out.append(1)
+            return out
+
+    specs = paper_testbed()
+    view = ClusterView(t=0.0, specs=specs, bw_factor=[1.0] * len(specs),
+                       uplink_free_at=[0.0] * len(specs),
+                       lane_free=[[0.0] * s.max_concurrency for s in specs])
+    req = copy.copy(generate_workload(1, seed=0)[0])
+    from repro.cluster.workload import classify
+    req.class_id = classify(req)
+    d = as_policy(OldScaled()).assign(req, view)
+    assert d.infer_scale == pytest.approx(2.0)
+    # applying the Decision books the same lane time the legacy commit did
+    nominal = view.predict_infer(req, 1)
+    ready = view.predict_tx(req, 1)
+    view.apply(req, d)
+    assert max(view.lane_free[1]) == pytest.approx(ready + 2.0 * nominal)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_round_trip():
+    for name in ("perllm", "PerLLM", "FineInfer", "agod",
+                 "rewardless-guidance", "RewardlessGuidance"):
+        p = make_policy(name, 6)
+        assert isinstance(p, SchedulingPolicy)
+    assert {"agod", "fineinfer", "perllm", "rewardless-guidance"} \
+        <= set(available_policies())
+
+
+def test_registry_kwargs_forwarded():
+    p = make_policy("fineinfer", 6, batch_window=2.5)
+    assert p.batch_window == 2.5
+    p = make_policy("perllm", 4, params=CSUCBParams(delta=0.123))
+    assert p.bandit.p.delta == 0.123
+    assert p.n_servers == 4
+
+
+def test_registry_unknown_name_raises():
+    with pytest.raises(KeyError, match="unknown scheduling policy"):
+        make_policy("nope-not-a-policy", 6)
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions
+# ---------------------------------------------------------------------------
+
+
+def test_csucb_ucb_is_side_effect_free():
+    bandit = CSUCB(1, 3)
+    mask = np.ones(3, bool)
+    t0 = bandit.t
+    s1 = bandit.ucb(0, mask)
+    s2 = bandit.ucb(0, mask)
+    assert bandit.t == t0            # scoring does not advance bandit time
+    assert np.array_equal(s1, s2)    # double scoring is idempotent
+    bandit.select(0, mask)
+    assert bandit.t == t0
+    bandit.update(0, 0, 0.5, 0.0)
+    assert bandit.t == t0 + 1        # time advances only on feedback
+
+
+def test_simulator_empty_services():
+    specs = paper_testbed()
+    res = Simulator(specs, seed=0).run([], make_policy("perllm", len(specs)))
+    assert res.n_services == 0
+    assert res.success_rate == 0.0
+    assert res.total_energy == 0.0
+    assert res.makespan == 0.0
+    assert res.per_server_served == [0] * len(specs)
+
+
+def test_perllm_server_view_not_degenerate():
+    """The live server observes real bandwidth factors and persistent
+    uplink state (previously hardcoded to 1.0 / clock)."""
+    pytest.importorskip("jax")
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import ServingEngine
+    from repro.serving.perllm_server import PerLLMServer
+
+    cfg = get_config("gemma-2b").reduced(n_layers=1, d_model=32,
+                                         vocab_size=128)
+    key = jax.random.key(0)
+    specs = paper_testbed(n_edge=1)[:1] + [paper_testbed()[-1]]
+    engines = [ServingEngine(cfg, init_params(key, cfg), max_batch=2,
+                             max_seq=32) for _ in range(2)]
+    srv = PerLLMServer(specs, engines,
+                       bandwidth=BandwidthModel(fluctuating=True, seed=3))
+    for _ in range(4):
+        srv.submit([1, 2, 3], max_new_tokens=2, payload_bytes=4e6)
+    srv.step()
+    # routing committed real uplink occupancy that persists across steps
+    assert max(srv.uplink_free_at) > 0.0
+    view = srv._view()
+    assert list(view.uplink_free_at) == list(srv.uplink_free_at)
+    assert any(f != 1.0 for f in view.bw_factor)
+    srv.run_until_idle()
+    assert srv.stats["served"] == 4
+
+
+def test_perllm_server_applies_defer_until():
+    """The live runtime honors Decision.defer_until: deferred-batching
+    requests are held out of the engines until their window boundary."""
+    pytest.importorskip("jax")
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import ServingEngine
+    from repro.serving.perllm_server import PerLLMServer
+
+    cfg = get_config("gemma-2b").reduced(n_layers=1, d_model=32,
+                                         vocab_size=128)
+    key = jax.random.key(0)
+    specs = paper_testbed(n_edge=1)[:1] + [paper_testbed()[-1]]
+    engines = [ServingEngine(cfg, init_params(key, cfg), max_batch=2,
+                             max_seq=32) for _ in range(2)]
+    srv = PerLLMServer(specs, engines,
+                       scheduler=make_policy("fineinfer", 2,
+                                             batch_window=1.0))
+    srv.step()                       # advance the clock off zero
+    assert 0.0 < srv.clock < 1.0
+    sr = srv.submit([1, 2, 3], max_new_tokens=2)
+    srv.step()                       # routed: window boundary is at t=1.0
+    assert sr.decision.defer_until == 1.0
+    assert sr.engine_req is None     # held — not yet in any engine
+    assert sr in srv._deferred
+    done = srv.run_until_idle()
+    assert sr in done and sr.done
+    assert sr.done_clock >= 1.0      # dispatched only after the window
