@@ -5,6 +5,15 @@ All Table-1/Fig-4/Fig-6 numbers come from the same simulation matrix
 once and cached; Fig 5 runs its own saturation sweep. `BENCH_N` scales the
 workload (default 6000 services; the paper uses 10000 — set BENCH_N=10000
 for the full run).
+
+Scenario/runtime plumbing (also settable via `python -m benchmarks.run
+--scenario/--runtime`):
+
+* `BENCH_SCENARIO` — a registered scenario name (`burst`, `diurnal`,
+  `bwdrop`, ...) shaping the matrix's arrival process and injecting its
+  bandwidth events into every simulation cell.
+* `BENCH_RUNTIME` — `slot` (default, quantized 0.5 s slots) or `event`
+  (pure event-driven scheduling, fresh per-arrival views).
 """
 from __future__ import annotations
 
@@ -22,6 +31,11 @@ from repro.core import make_policy
 EDGE_MODELS = ("yi-6b", "llama2-7b", "llama3-8b", "yi-9b")
 METHODS = ("PerLLM", "FineInfer", "AGOD", "RewardlessGuidance")
 BENCH_N = int(os.environ.get("BENCH_N", "6000"))
+SCENARIO = os.environ.get("BENCH_SCENARIO") or None
+RUNTIME = os.environ.get("BENCH_RUNTIME", "slot")
+if RUNTIME not in ("slot", "event"):
+    raise SystemExit(f"BENCH_RUNTIME={RUNTIME!r} is not one of "
+                     "'slot'/'event'")
 SIM_SEED = 42
 BW_SEED = 1
 
@@ -33,16 +47,22 @@ def make_scheduler(name: str, n_servers: int):
 
 @functools.lru_cache(maxsize=None)
 def run_cell(edge_model: str, fluctuating: bool, method: str,
-             n: int = BENCH_N) -> Tuple[SimResult, float]:
+             n: int = BENCH_N,
+             scenario: str = None) -> Tuple[SimResult, float]:
     """One (deployment × bandwidth × scheduler) simulation. Returns
-    (result, wall_seconds)."""
+    (result, wall_seconds). `scenario=None` resolves the module-level
+    SCENARIO at call time (benchmarks.run may rebind it after import)."""
+    if scenario is None:
+        scenario = SCENARIO
     specs = paper_testbed(edge_model)
-    services = generate_workload(n, seed=0)
+    services = generate_workload(n, seed=0, scenario=scenario)
     sim = Simulator(specs, BandwidthModel(fluctuating=fluctuating,
-                                          seed=BW_SEED), seed=SIM_SEED)
+                                          seed=BW_SEED), seed=SIM_SEED,
+                    slot=None if RUNTIME == "event" else 0.5)
     sched = make_scheduler(method, len(specs))
     t0 = time.time()
-    res = sim.run([copy.copy(s) for s in services], sched)
+    res = sim.run([copy.copy(s) for s in services], sched,
+                  scenario=scenario)
     return res, time.time() - t0
 
 

@@ -6,14 +6,66 @@ Prints each experiment's human-readable table, then a final CSV block:
   BENCH_N=10000 PYTHONPATH=src python -m benchmarks.run        # paper scale
   PYTHONPATH=src python -m benchmarks.run                      # default 6000
   BENCH_N=200 python -m benchmarks.run table1_success_rate     # smoke subset
+
+Scenario and runtime shaping (the event-driven runtime's `Scenario` hooks):
+
+  python -m benchmarks.run table1_success_rate --scenario burst
+  python -m benchmarks.run fig4_processing_time --scenario bwdrop \
+      --runtime event
+
+`--scenario` picks a registered arrival/bandwidth scenario (burst, diurnal,
+bwdrop, trace, poisson) for the shared simulation matrix; `--runtime event`
+switches those cells from quantized 0.5 s slots to pure event-driven
+scheduling. Equivalent env vars: BENCH_SCENARIO / BENCH_RUNTIME.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
 
 
 def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description="Run the paper-reproduction benchmark suite.")
+    ap.add_argument("experiments", nargs="*",
+                    help="subset of experiments to run (default: all)")
+    ap.add_argument("--scenario", default=None, metavar="NAME",
+                    help="arrival/bandwidth scenario for the simulation "
+                         "matrix: burst, diurnal, bwdrop, trace, poisson "
+                         "(default: stationary poisson)")
+    ap.add_argument("--runtime", default=None, choices=("slot", "event"),
+                    help="simulation runtime mode: quantized 0.5s slots "
+                         "(default) or pure event-driven scheduling")
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+    # benchmarks.common reads these at import time, so set them before the
+    # experiment imports below
+    if args.scenario:
+        from repro.core import available_scenarios, make_scenario
+        try:
+            make_scenario(args.scenario)
+        except KeyError:
+            sys.exit(f"unknown scenario {args.scenario!r}; choose from "
+                     + ", ".join(available_scenarios()))
+        except TypeError:
+            sys.exit(f"scenario {args.scenario!r} needs constructor "
+                     "arguments (e.g. trace times) — use it "
+                     "programmatically via repro.core.make_scenario")
+        os.environ["BENCH_SCENARIO"] = args.scenario
+    if args.runtime:
+        os.environ["BENCH_RUNTIME"] = args.runtime
+    if (args.scenario or args.runtime) and "benchmarks.common" in sys.modules:
+        # already imported (programmatic/repeat use): env vars were read at
+        # import time, so rebind and drop the stale cell cache
+        common = sys.modules["benchmarks.common"]
+        if args.scenario:
+            common.SCENARIO = args.scenario
+        if args.runtime:
+            common.RUNTIME = args.runtime
+        common.run_cell.cache_clear()
+
     from benchmarks import (
         ablation_csucb, fig2_motivation, fig4_processing_time,
         fig5_throughput, fig6_energy, hetero_edges, regret_bound, roofline,
@@ -31,7 +83,7 @@ def main(argv=None) -> None:
         ("hetero_edges", hetero_edges.run),
         ("roofline", roofline.run),
     ]
-    selected = list(argv if argv is not None else sys.argv[1:])
+    selected = args.experiments
     if selected:
         known = {name for name, _ in experiments}
         unknown = [s for s in selected if s not in known]

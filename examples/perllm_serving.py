@@ -41,6 +41,15 @@ def main():
                       make_policy(name, len(specs)))
         print(res.row())
 
+    # --- the same cluster, event-driven: per-arrival views, feedback at
+    # true completion time, plus a bursty workload with a mid-run cloud
+    # bandwidth drop (Scenario hooks on the shared event loop) -----------
+    bursty = generate_workload(600, rate=8.0, seed=0, scenario="burst")
+    sim = Simulator(specs, BandwidthModel(False, seed=1), slot=None, seed=42)
+    res = sim.run([copy.copy(s) for s in bursty],
+                  make_policy("perllm", len(specs)), scenario="bwdrop")
+    print("event-driven burst+bwdrop:", res.row())
+
     # --- drive a slice of real tokens through the chosen engines --------
     policy = make_policy("perllm", len(specs))
     from repro.cluster.workload import classify

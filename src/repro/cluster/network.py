@@ -1,5 +1,13 @@
-"""Bandwidth models: stable and ±20%-fluctuating links (paper §4.1)."""
+"""Bandwidth models: stable and ±20%-fluctuating links (paper §4.1).
+
+In the slotted simulator `factor(t_slot, j)` is sampled once per non-empty
+slot; the event-driven runtimes resample on a periodic `BandwidthChange`
+stream instead (see `repro.core.runtime`), and scenario events may overlay
+additional multiplicative scales (congestion/outage windows) on top.
+"""
 from __future__ import annotations
+
+from typing import List
 
 import numpy as np
 
@@ -22,3 +30,8 @@ class BandwidthModel:
         f = 1.0 + self.amplitude * float(np.clip(0.6 * base + 0.4 * noise,
                                                  -1.0, 1.0))
         return f
+
+    def factors(self, t_slot: int, n_servers: int) -> List[float]:
+        """All links' factors for one sample instant (stable draw order:
+        server 0 first — both runtimes use this so RNG streams agree)."""
+        return [self.factor(t_slot, j) for j in range(n_servers)]

@@ -57,6 +57,12 @@ class ServerSpec:
         """share: fraction of the uplink granted to this transfer."""
         return payload_bytes * 8.0 / (self.bandwidth * max(share, 1e-9))
 
+    def infer_energy(self, t_inf: float) -> float:
+        """Active-over-idle energy for `t_inf` seconds on one batch lane —
+        the one formula every runtime charges inference with."""
+        return (self.power_active - self.power_idle) \
+            / self.max_concurrency * t_inf
+
 
 @dataclasses.dataclass
 class ServerState:

@@ -1,4 +1,4 @@
-"""Time-slotted discrete-event simulator for edge-cloud LLM serving.
+"""Discrete-event simulator for edge-cloud LLM serving.
 
 Faithful to the paper's evaluation protocol (§4): services arrive in real
 time, are scheduled to a server, upload over that server's (shared, possibly
@@ -6,12 +6,25 @@ fluctuating) uplink, then occupy a batch lane for prefill+decode. Processing
 time = transmission + queue + inference; energy = transmission + inference +
 idle (idle accrues over the run's makespan).
 
-Scheduling goes through the unified `SchedulingPolicy` API
-(`repro.core.api`): per slot the simulator builds a `ClusterView` from real
-uplink/lane/bandwidth state, `drive_slot` collects one `Decision` per
-arrival (committing residuals between requests), and realized `Outcome`s
-feed back to the policy. Legacy `SchedulerBase` subclasses still run via
-the `as_policy` shim.
+Both execution modes run on the shared event-driven `Runtime` / `EventLoop`
+from `repro.core.runtime`:
+
+* **Slotted-compat mode** (default, `slot=0.5`): arrivals are quantized —
+  each non-empty slot becomes one batched `Arrival` event at the slot
+  boundary, scheduled against a slot-start `ClusterView` and realized
+  synchronously (feedback at decision time). This reproduces the PR 1
+  slotted simulator bit-for-bit (see the golden tests).
+* **Event-driven mode** (`slot=None`): every service is its own `Arrival`
+  at its true timestamp, observed against a *fresh* view of live uplink/
+  lane state; transmission and completion unfold as `TxDone`/`InferDone`
+  events and the policy's `feedback` fires at the request's actual
+  completion time. Bandwidth fluctuation is a periodic `BandwidthChange`
+  resample stream.
+
+Scenario hooks (`repro.core.runtime.Scenario`) inject extra event streams —
+bursty/diurnal/trace arrivals shape the workload (see
+`workload.generate_workload`), and mid-run bandwidth drops arrive as
+`BandwidthChange` scale overlays honored by both modes.
 
 Servers have *hidden* efficiency factors and per-request noise — schedulers
 only observe realized outcomes, which is what makes the bandit formulation
@@ -20,8 +33,7 @@ meaningful (and is how the real testbed behaves).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -30,6 +42,10 @@ from repro.cluster.server import ServerSpec, ServerState
 from repro.cluster.workload import ServiceRequest, classify
 from repro.core.api import (
     ClusterView, Decision, SchedulerBase, as_policy, drive_slot,
+)
+from repro.core.runtime import (
+    Arrival, BandwidthChange, InferDone, Runtime, Scenario, TxDone,
+    make_scenario,
 )
 
 # Deprecated alias: the per-slot observation object is now the shared
@@ -85,13 +101,173 @@ class SimResult:
                 f"idle={self.e_idle/1e3:.1f})")
 
 
+# ---------------------------------------------------------------------------
+# Runtimes — simulator physics behind the shared event loop
+# ---------------------------------------------------------------------------
+
+
+class _SimRuntimeBase(Runtime):
+    """Shared state for both simulator modes: server bookkeeping, the lane
+    ledger, the bandwidth model plus scenario scale overlay."""
+
+    def __init__(self, sim: "Simulator", policy) -> None:
+        super().__init__(policy)
+        self.sim = sim
+        self.specs = sim.specs
+        self.states = [ServerState(spec=s) for s in self.specs]
+        self.lane_free = [[0.0] * s.max_concurrency for s in self.specs]
+        self.bw_scale = [1.0] * len(self.specs)
+        self.outcomes: List[Outcome] = []
+
+    def on_bandwidth_change(self, ev: BandwidthChange) -> None:
+        if ev.scale:
+            for j, s in ev.scale.items():
+                self.bw_scale[j] = s
+
+
+class _SlottedSimRuntime(_SimRuntimeBase):
+    """Legacy quantized-slot semantics as events.
+
+    Each non-empty slot is one batched Arrival at the slot boundary; the
+    whole slot is assigned against the slot-start view and realized
+    synchronously, so feedback reaches the learner at decision time —
+    exactly the PR 1 slotted loop, bit-for-bit when no scenario overlay is
+    active.
+    """
+
+    def on_arrival(self, ev: Arrival) -> None:
+        ts = ev.slot_index
+        sim = self.sim
+        factors = [sim.bandwidth.factor(ts, j) * self.bw_scale[j]
+                   for j in range(len(self.specs))]
+        view = ClusterView(
+            t=ev.time, specs=self.specs, bw_factor=list(factors),
+            uplink_free_at=[st.uplink_free_at for st in self.states],
+            lane_free=[list(lf) for lf in self.lane_free],
+        )
+        decisions = drive_slot(self.policy, ev.requests, view, ts)
+        for req, d in zip(ev.requests, decisions):
+            out = sim._realize(req, d, self.states, self.lane_free, factors)
+            self.outcomes.append(out)
+            self.policy.feedback(req, out)
+
+
+class _EventSimRuntime(_SimRuntimeBase):
+    """Pure event-driven semantics.
+
+    Every arrival observes a fresh view of the cluster at its actual
+    timestamp; physics are resolved at dispatch (uplink and lane booked
+    immediately, so later arrivals see the consumed capacity) while the
+    timeline unfolds as TxDone → InferStart → InferDone events, with energy
+    accounting and policy feedback at the times things actually happen.
+    """
+
+    def __init__(self, sim: "Simulator", policy) -> None:
+        super().__init__(sim, policy)
+        self._model_factors = [1.0] * len(self.specs)
+        if sim.bandwidth.fluctuating:
+            self._resample_factors(0.0)
+
+    # ---------------- bandwidth as an event stream -----------------------
+    def _resample_factors(self, t: float) -> None:
+        k = int(round(t / self.sim.bw_interval))
+        self._model_factors = self.sim.bandwidth.factors(k, len(self.specs))
+        self.loop.push(BandwidthChange(t + self.sim.bw_interval,
+                                       resample=True))
+
+    def on_bandwidth_change(self, ev: BandwidthChange) -> None:
+        super().on_bandwidth_change(ev)
+        if ev.resample:
+            self._resample_factors(ev.time)
+
+    def _factor(self, j: int) -> float:
+        return self._model_factors[j] * self.bw_scale[j]
+
+    # ---------------- the Runtime contract -------------------------------
+    def slot_index(self, t: float) -> int:
+        return int(t / self.sim.bw_interval)
+
+    def build_view(self, t: float) -> ClusterView:
+        return ClusterView(
+            t=t, specs=self.specs,
+            bw_factor=[self._factor(j) for j in range(len(self.specs))],
+            uplink_free_at=[st.uplink_free_at for st in self.states],
+            lane_free=[list(lf) for lf in self.lane_free],
+        )
+
+    def dispatch(self, t: float, req: ServiceRequest,
+                 decision: Decision) -> None:
+        j = decision.server
+        spec = self.specs[j]
+        st = self.states[j]
+        tx_start = max(t, st.uplink_free_at)
+        tx_dur = spec.tx_time(req.payload_bytes, self._factor(j))
+        st.uplink_free_at = tx_start + tx_dur
+        ready = tx_start + tx_dur
+        # the lane is booked at dispatch — the routed request is committed
+        # capacity, visible to every later arrival's fresh view — while the
+        # events below mark when its phases actually happen
+        lanes = self.lane_free[j]
+        li = int(np.argmin(lanes))
+        begin = max(ready, lanes[li])
+        t_inf = self.sim._draw_infer(req, j)
+        finish = begin + t_inf
+        lanes[li] = finish
+        ctx = (j, tx_dur, ready, begin, t_inf)
+        self.loop.push(TxDone(ready, request=req, decision=decision,
+                              context=ctx))
+        self.loop.push(InferDone(finish, request=req, context=ctx))
+
+    def on_tx_done(self, ev: TxDone) -> None:
+        j, tx_dur, ready, _begin, _t_inf = ev.context
+        st = self.states[j]
+        # transmission energy accrues over the whole transfer window,
+        # including the congestion queue (paper §2.3)
+        st.e_tx += (ready - ev.request.arrival) * self.specs[j].tx_power
+        st.tx_busy_time += tx_dur
+
+    def on_infer_done(self, ev: InferDone) -> None:
+        j, tx_dur, ready, begin, t_inf = ev.context
+        req = ev.request
+        spec = self.specs[j]
+        st = self.states[j]
+        finish = ev.time
+        st.busy_time += t_inf / spec.max_concurrency
+        st.e_infer += spec.infer_energy(t_inf)
+        st.tokens_out += req.output_tokens
+        st.served += 1
+        req.finish = finish
+        req.server = j
+        proc = finish - req.arrival
+        out = Outcome(
+            server=j, tx_time=(ready - req.arrival),
+            queue_time=max(begin - ready, 0.0), infer_time=t_inf,
+            finish=finish, processing_time=proc,
+            success=proc <= req.deadline,
+            energy=tx_dur * spec.tx_power + spec.infer_energy(t_inf))
+        self.outcomes.append(out)
+        self.policy.feedback(req, out)
+
+
+# ---------------------------------------------------------------------------
+# Simulator — seeds the event streams and aggregates results
+# ---------------------------------------------------------------------------
+
+
 class Simulator:
+    """`slot=0.5` (default) runs the slotted-compat mode; `slot=None` runs
+    pure event-driven scheduling. `bw_interval` is the fluctuating
+    bandwidth model's resample cadence in event mode (and the pseudo-slot
+    length reported to legacy batch schedulers)."""
+
     def __init__(self, specs: Sequence[ServerSpec],
                  bandwidth: Optional[BandwidthModel] = None,
-                 slot: float = 0.5, seed: int = 0):
+                 slot: Optional[float] = 0.5, seed: int = 0,
+                 bw_interval: float = 0.5):
         self.specs = list(specs)
         self.bandwidth = bandwidth or BandwidthModel()
         self.slot = slot
+        self.bw_interval = bw_interval
         rng = np.random.default_rng(seed)
         # hidden per-(service-class, server) efficiency (unknown to
         # schedulers): the paper's "diversity of task requirements" — e.g.
@@ -101,14 +277,16 @@ class Simulator:
         self.efficiency = rng.uniform(0.7, 1.0, (N_CLASSES, len(specs)))
         self.noise_rng = np.random.default_rng(seed + 1)
 
-    def run(self, services: List[ServiceRequest], scheduler) -> SimResult:
+    def run(self, services: List[ServiceRequest], scheduler,
+            scenario: Union[Scenario, str, None] = None) -> SimResult:
         """Simulate `services` under `scheduler` (a `SchedulingPolicy`, or a
-        legacy `SchedulerBase` — coerced through the deprecation shim)."""
+        legacy `SchedulerBase` — coerced through the deprecation shim).
+        `scenario` (instance or registered name) may inject extra
+        bandwidth events; arrival shaping happens in the workload
+        generator."""
         policy = as_policy(scheduler)
-        specs = self.specs
-        states = [ServerState(spec=s) for s in specs]
-        lane_free = [[0.0] * s.max_concurrency for s in specs]
-        outcomes: List[Outcome] = []
+        if isinstance(scenario, str):
+            scenario = make_scenario(scenario)
 
         services = sorted(services, key=lambda r: r.arrival)
         for r in services:
@@ -116,34 +294,46 @@ class Simulator:
             r.finish = -1.0
             r.server = -1
         if not services:
-            return SimResult.empty(policy.name, len(specs))
-        horizon_slots = int(math.ceil(services[-1].arrival / self.slot)) + 1
+            return SimResult.empty(policy.name, len(self.specs))
 
+        if self.slot is not None:
+            rt: _SimRuntimeBase = _SlottedSimRuntime(self, policy)
+            self._seed_slotted(rt, services)
+        else:
+            rt = _EventSimRuntime(self, policy)
+            for r in services:
+                rt.loop.push(Arrival(r.arrival, requests=(r,)))
+        if scenario is not None:
+            horizon = services[-1].arrival
+            for ev in scenario.bandwidth_events(horizon, len(self.specs)):
+                rt.loop.push(ev)
+        rt.drain()
+        return self._aggregate(policy.name, services, rt)
+
+    def _seed_slotted(self, rt: _SimRuntimeBase,
+                      services: List[ServiceRequest]) -> None:
+        """Quantized arrivals: one batched Arrival event per non-empty
+        slot, grouped by the same boundary scan as the PR 1 slot loop (so
+        float-boundary membership is bit-identical)."""
         idx = 0
-        for ts in range(horizon_slots):
+        ts = 0
+        while idx < len(services):
             t0 = ts * self.slot
             t1 = t0 + self.slot
-            arrivals = []
+            batch = []
             while idx < len(services) and services[idx].arrival < t1:
-                arrivals.append(services[idx])
+                batch.append(services[idx])
                 idx += 1
-            if not arrivals:
-                continue
-            factors = [self.bandwidth.factor(ts, j)
-                       for j in range(len(specs))]
-            view = ClusterView(
-                t=t0, specs=specs, bw_factor=list(factors),
-                uplink_free_at=[st.uplink_free_at for st in states],
-                lane_free=[list(lf) for lf in lane_free],
-            )
-            decisions = drive_slot(policy, arrivals, view, ts)
-            for req, d in zip(arrivals, decisions):
-                out = self._realize(req, d, states, lane_free, factors)
-                outcomes.append(out)
-                policy.feedback(req, out)
+            if batch:
+                rt.loop.push(Arrival(t0, requests=tuple(batch),
+                                     slot_index=ts))
+            ts += 1
 
+    def _aggregate(self, name: str, services: List[ServiceRequest],
+                   rt: _SimRuntimeBase) -> SimResult:
+        outcomes, states = rt.outcomes, rt.states
         if not outcomes:
-            return SimResult.empty(policy.name, len(specs))
+            return SimResult.empty(name, len(self.specs))
         makespan = max(o.finish for o in outcomes)
         for st in states:
             st.finalize_idle(makespan)
@@ -152,7 +342,7 @@ class Simulator:
         succ = np.array([o.success for o in outcomes])
         tokens = sum(r.prompt_tokens + r.output_tokens for r in services)
         return SimResult(
-            name=policy.name,
+            name=name,
             n_services=len(services),
             success_rate=float(np.mean(succ)),
             avg_processing_time=float(np.mean(times)),
@@ -166,6 +356,18 @@ class Simulator:
         )
 
     # ------------------------------------------------------------------
+    # Shared physics: both execution modes realize requests with exactly
+    # these draws/formulas, so slot-vs-event comparisons measure the
+    # *scheduling* semantics, never drifting cost models.
+    # ------------------------------------------------------------------
+    def _draw_infer(self, req: ServiceRequest, j: int) -> float:
+        """Realized inference time: nominal / hidden efficiency × noise.
+        Consumes one noise draw — call once per realized request."""
+        noise = float(self.noise_rng.lognormal(0.0, 0.08))
+        return (self.specs[j].service_time(req.prompt_tokens,
+                                           req.output_tokens)
+                / self.efficiency[req.class_id, j]) * noise
+
     def _realize(self, req: ServiceRequest, decision: Decision,
                  states: List[ServerState], lane_free: List[List[float]],
                  factors: List[float]) -> Outcome:
@@ -176,7 +378,7 @@ class Simulator:
         # Decision's dispatch deferral (e.g. FineInfer's batching windows)
         dispatch = max(req.arrival, decision.defer_until)
         tx_start = max(dispatch, st.uplink_free_at)
-        tx_dur = req.payload_bytes * 8.0 / (spec.bandwidth * factors[j])
+        tx_dur = spec.tx_time(req.payload_bytes, factors[j])
         st.uplink_free_at = tx_start + tx_dur
         ready = tx_start + tx_dur
         # transmission energy accrues over the whole transfer window,
@@ -189,14 +391,11 @@ class Simulator:
         lanes = lane_free[j]
         li = int(np.argmin(lanes))
         begin = max(ready, lanes[li])
-        noise = float(self.noise_rng.lognormal(0.0, 0.08))
-        t_inf = (spec.service_time(req.prompt_tokens, req.output_tokens)
-                 / self.efficiency[req.class_id, j]) * noise
+        t_inf = self._draw_infer(req, j)
         finish = begin + t_inf
         lanes[li] = finish
         st.busy_time += t_inf / spec.max_concurrency
-        st.e_infer += ((spec.power_active - spec.power_idle)
-                       / spec.max_concurrency) * t_inf
+        st.e_infer += spec.infer_energy(t_inf)
         st.tokens_out += req.output_tokens
         st.served += 1
 
@@ -207,6 +406,4 @@ class Simulator:
             server=j, tx_time=(ready - req.arrival), queue_time=max(
                 begin - ready, 0.0), infer_time=t_inf, finish=finish,
             processing_time=proc, success=proc <= req.deadline,
-            energy=tx_dur * spec.tx_power
-            + ((spec.power_active - spec.power_idle)
-               / spec.max_concurrency) * t_inf)
+            energy=tx_dur * spec.tx_power + spec.infer_energy(t_inf))

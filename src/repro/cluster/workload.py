@@ -36,11 +36,33 @@ class ServiceRequest:
 
 
 def generate_workload(n_services: int = 10_000, rate: float = 10.0,
-                      seed: int = 0) -> List[ServiceRequest]:
-    """Poisson arrivals at `rate` req/s with diverse requirements."""
+                      seed: int = 0, scenario=None) -> List[ServiceRequest]:
+    """Arrivals at `rate` req/s with diverse requirements.
+
+    `scenario` (a `repro.core.runtime.Scenario` instance or registered
+    name, e.g. ``"burst"``/``"diurnal"``/``"trace"``) shapes *when*
+    services arrive; `None` keeps the paper's stationary Poisson process.
+    Per-request requirements are drawn identically either way, so two
+    scenarios at the same seed differ only in their arrival processes.
+    """
     rng = np.random.default_rng(seed)
+    # the Poisson gaps are always drawn so the requirement draws below sit
+    # at the same rng state for every scenario (same services, new timing)
     gaps = rng.exponential(1.0 / rate, size=n_services)
-    arrivals = np.cumsum(gaps)
+    if scenario is not None:
+        from repro.core.runtime import Scenario, make_scenario
+        if isinstance(scenario, str):
+            scenario = make_scenario(scenario)
+        if type(scenario).arrival_times is Scenario.arrival_times:
+            # stationary Poisson (incl. scenarios that only inject
+            # bandwidth events, e.g. bwdrop): keep the baseline arrivals so
+            # the scenario's effect can be isolated arrival-for-arrival
+            scenario = None
+    if scenario is None:
+        arrivals = np.cumsum(gaps)
+    else:
+        arrivals = scenario.arrival_times(
+            n_services, rate, np.random.default_rng([seed, 0x5CEA]))
     prompt = np.clip(rng.lognormal(5.0, 0.8, n_services), 32, 2048).astype(int)
     out = np.clip(rng.lognormal(2.8, 0.6, n_services), 4, 96).astype(int)
     deadline = rng.uniform(2.0, 6.0, n_services)

@@ -7,14 +7,22 @@ from repro.core.api import (
     register_policy,
 )
 from repro.core.bandit import CSUCB, CSUCBParams
+from repro.core.runtime import (
+    Arrival, BandwidthChange, Deferred, Event, EventLoop, InferDone,
+    InferStart, Runtime, Scenario, TxDone, available_scenarios,
+    make_scenario, register_scenario,
+)
 from repro.core.baselines import AGOD, FineInfer, RewardlessGuidance, make_baselines
 from repro.core.constraints import ConstraintSlacks, evaluate_constraints
 from repro.core.scheduler import PerLLMScheduler
 
 __all__ = [
-    "AGOD", "CSUCB", "CSUCBParams", "ClusterView", "ConstraintSlacks",
-    "Decision", "FineInfer", "LegacyPolicyAdapter", "PerLLMScheduler",
-    "RewardlessGuidance", "SchedulerBase", "SchedulingPolicy", "as_policy",
-    "available_policies", "drive_slot", "evaluate_constraints",
-    "make_baselines", "make_policy", "register_policy",
+    "AGOD", "Arrival", "BandwidthChange", "CSUCB", "CSUCBParams",
+    "ClusterView", "ConstraintSlacks", "Decision", "Deferred", "Event",
+    "EventLoop", "FineInfer", "InferDone", "InferStart",
+    "LegacyPolicyAdapter", "PerLLMScheduler", "RewardlessGuidance",
+    "Runtime", "Scenario", "SchedulerBase", "SchedulingPolicy", "TxDone",
+    "as_policy", "available_policies", "available_scenarios", "drive_slot",
+    "evaluate_constraints", "make_baselines", "make_policy", "make_scenario",
+    "register_policy", "register_scenario",
 ]

@@ -6,18 +6,20 @@ service. Scheduling decisions route requests to a concrete engine, real
 prefill/decode runs there, and realized latencies feed the learner — the
 full loop of Fig. 3 in one class.
 
-Scheduling goes through the same `SchedulingPolicy` API as the simulator:
-each `step()` builds a `ClusterView` from *real* fleet state — persistent
-per-server uplink occupancy, the link bandwidth model's current factor, and
-engine batch-lane occupancy — and `drive_slot` applies every `Decision`'s
-residual accounting. The learner therefore sees the same observation
-surface in the live server as in the simulator (previously the live view
-was degenerate: unit bandwidth factors and no uplink state).
-
-Time handling: the server runs on a logical clock advanced by `step()`;
-each engine-step costs its server's analytic per-step latency, so the
-learner sees the same cost surface the cluster simulator models while the
-tokens themselves are produced by the real models.
+The server is a `repro.core.runtime.Runtime`: the same event loop that
+drives the simulator drives the fleet. Each submission becomes an `Arrival`
+event; routing builds a *fresh* `ClusterView` at the arrival's timestamp
+from real state — persistent uplink occupancy, the link bandwidth model's
+current factor, and per-engine batch-lane occupancy derived from each
+active request's **actual remaining decode tokens** (plus nominal bookings
+for queued/in-flight work). Transmission completes as a `TxDone` event that
+hands the request to the engine; each engine advances on its own
+`InferStart` tick cadence (one real `ServingEngine.step` per tick, costing
+that server's analytic per-step latency) instead of a fleet-wide lock-step
+clock, so a fast edge is never held hostage to the cloud's step time.
+Realized completions report the true transmission/queue/inference split and
+energy from the realized inference window, so the live learner's feedback
+matches the simulator's semantics.
 """
 from __future__ import annotations
 
@@ -31,7 +33,8 @@ from repro.cluster.network import BandwidthModel
 from repro.cluster.server import ServerSpec
 from repro.cluster.simulator import Outcome
 from repro.cluster.workload import ServiceRequest, classify
-from repro.core.api import ClusterView, Decision, as_policy, drive_slot
+from repro.core.api import ClusterView, Decision
+from repro.core.runtime import Arrival, InferStart, Runtime, TxDone
 from repro.core.scheduler import PerLLMScheduler
 from repro.serving.engine import Request, ServingEngine
 
@@ -44,7 +47,10 @@ class ServedRequest:
     submitted_clock: float = 0.0
     done_clock: float = -1.0
     decision: Optional[Decision] = None
-    tx_time: float = 0.0          # uplink occupancy charged at routing time
+    tx_time: float = 0.0          # arrival -> uplink transfer complete
+    tx_dur: float = 0.0           # pure transfer duration (energy basis)
+    dispatch_clock: float = -1.0  # entered the engine (TxDone)
+    admit_clock: float = -1.0     # admitted to a batch lane (prefill start)
 
     @property
     def done(self) -> bool:
@@ -59,23 +65,37 @@ class ServedRequest:
         return self.done and self.latency <= self.service.deadline
 
 
-class PerLLMServer:
+class PerLLMServer(Runtime):
     def __init__(self, specs: Sequence[ServerSpec],
                  engines: Sequence[ServingEngine],
                  scheduler=None, slot: float = 0.5,
                  bandwidth: Optional[BandwidthModel] = None):
         assert len(specs) == len(engines)
+        self.scheduler = scheduler or PerLLMScheduler(len(specs))
+        super().__init__(self.scheduler)
         self.specs = list(specs)
         self.engines = list(engines)
-        self.scheduler = scheduler or PerLLMScheduler(len(specs))
-        self.policy = as_policy(self.scheduler)
         self.bandwidth = bandwidth or BandwidthModel()
+        # `slot` survives only as the bandwidth model's sampling cadence;
+        # execution itself is event-driven
         self.slot = slot
-        self.clock = 0.0
-        # real uplink occupancy: advanced by each committed Decision,
+        # per-slot factor cache: the factor the policy observed in a view
+        # is the factor dispatch realizes (a fluctuating model's RNG
+        # advances per draw, so repeated draws would diverge)
+        self._factor_cache = (-1, [1.0] * len(specs))
+        # real uplink occupancy: advanced by each dispatched request,
         # shared across steps (the fleet's links are stateful)
         self.uplink_free_at = [0.0] * len(specs)
+        # per-engine logical clocks: each engine ticks at its own analytic
+        # decode-step cadence, driven by InferStart events
+        self.engine_clock = [0.0] * len(specs)
+        self._tick_scheduled = [False] * len(specs)
+        # completion cursor per engine: eng.completed is append-only, so
+        # each tick only inspects the new tail
+        self._completed_seen = [0] * len(specs)
+        self._idle_tick = min(s.decode_step_time() for s in self.specs)
         self._sid = itertools.count()
+        self._by_sid: Dict[int, ServedRequest] = {}
         self._pending: List[ServedRequest] = []
         # routed but held back by Decision.defer_until (deferred batching):
         # the runtime — not the policy — applies the deferral
@@ -94,101 +114,168 @@ class PerLLMServer:
         svc.class_id = classify(svc)
         sr = ServedRequest(service=svc, submitted_clock=self.clock)
         sr._prompt = list(prompt)
+        self._by_sid[svc.sid] = sr
         self._pending.append(sr)
+        self.loop.push(Arrival(self.clock, requests=(svc,)))
         return sr
 
-    def _view(self) -> ClusterView:
-        """Snapshot real fleet state for the policy: live uplink residuals,
-        the bandwidth model's current per-link factor, and engine batch-lane
-        occupancy."""
-        t_slot = int(self.clock / self.slot)
+    # ------------------------------------------------------------------
+    # Runtime contract: fresh views from real fleet state
+    # ------------------------------------------------------------------
+    def _bw_factor(self, t: float, j: int) -> float:
+        k = int(t / self.slot)
+        if self._factor_cache[0] != k:
+            self._factor_cache = (
+                k, self.bandwidth.factors(k, len(self.specs)))
+        return self._factor_cache[1][j]
+
+    def build_view(self, t: float) -> ClusterView:
+        """Snapshot real fleet state: live uplink residuals, the bandwidth
+        model's current per-link factor, and batch-lane occupancy from each
+        active request's actual remaining decode tokens (queued and
+        in-transit requests stack on as nominal bookings)."""
         lane_free = []
         for j, eng in enumerate(self.engines):
             spec = self.specs[j]
-            busy = len(eng.active_slots) + len(eng.queue)
-            lanes = [0.0] * spec.max_concurrency
             step_t = spec.decode_step_time()
-            for i in range(min(busy, spec.max_concurrency)):
-                lanes[i] = self.clock + 8 * step_t  # coarse occupancy
+            base = max(self.engine_clock[j], t)
+            lanes = [t] * spec.max_concurrency
+            for slot in eng.active_slots:
+                r = eng.slot_req[slot]
+                remaining = max(r.max_new_tokens - len(r.generated), 0)
+                li = int(np.argmin(lanes))
+                lanes[li] = base + remaining * step_t
+            for r in eng.queue:
+                li = int(np.argmin(lanes))
+                lanes[li] = max(lanes[li], base) + spec.service_time(
+                    len(r.prompt), r.max_new_tokens)
+            for sr in self.active.values():
+                if sr.server == j and sr.engine_req is None:
+                    li = int(np.argmin(lanes))
+                    lanes[li] = max(lanes[li], sr.dispatch_clock) \
+                        + spec.service_time(len(sr._prompt),
+                                            sr.service.output_tokens)
             lane_free.append(lanes)
         return ClusterView(
-            t=self.clock, specs=self.specs,
-            bw_factor=[self.bandwidth.factor(t_slot, j)
+            t=t, specs=self.specs,
+            bw_factor=[self._bw_factor(t, j)
                        for j in range(len(self.specs))],
             uplink_free_at=list(self.uplink_free_at),
             lane_free=lane_free)
 
+    def _view(self) -> ClusterView:
+        """Deprecated alias: the view at the current clock."""
+        return self.build_view(self.clock)
+
+    def slot_index(self, t: float) -> int:
+        return int(t / self.slot)
+
     # ------------------------------------------------------------------
-    def _dispatch(self, sr: ServedRequest) -> None:
-        sr.engine_req = self.engines[sr.server].submit(
+    # Event handlers: route -> transmit -> engine ticks -> finish
+    # ------------------------------------------------------------------
+    def place(self, t: float, svc: ServiceRequest,
+              decision: Decision) -> None:
+        sr = self._by_sid[svc.sid]
+        sr.server = decision.server
+        sr.decision = decision
+        self._pending.remove(sr)
+        super().place(t, svc, decision)
+
+    def defer(self, t: float, when: float, svc: ServiceRequest,
+              decision: Decision) -> None:
+        self._deferred.append(self._by_sid[svc.sid])
+        super().defer(t, when, svc, decision)
+
+    def dispatch(self, t: float, svc: ServiceRequest,
+                 decision: Decision) -> None:
+        """Start the uplink transfer; the engine takes over at TxDone."""
+        sr = self._by_sid[svc.sid]
+        if sr in self._deferred:
+            self._deferred.remove(sr)
+        j = decision.server
+        spec = self.specs[j]
+        tx_start = max(t, self.uplink_free_at[j])
+        tx_dur = spec.tx_time(svc.payload_bytes, self._bw_factor(t, j))
+        self.uplink_free_at[j] = tx_start + tx_dur
+        ready = tx_start + tx_dur
+        sr.tx_dur = tx_dur
+        sr.tx_time = ready - svc.arrival
+        sr.dispatch_clock = ready
+        self.active[svc.sid] = sr
+        self.loop.push(TxDone(ready, request=svc, decision=decision))
+
+    def on_tx_done(self, ev: TxDone) -> None:
+        sr = self.active[ev.request.sid]
+        j = sr.server
+        sr.engine_req = self.engines[j].submit(
             sr._prompt, max_new_tokens=sr.service.output_tokens)
-        self.active[sr.service.sid] = sr
+        self._ensure_tick(j, ev.time)
 
-    def step(self) -> int:
-        """Route pending requests, advance every engine one decode step."""
-        # dispatch deferred requests whose batching window has arrived
-        held = []
-        for sr in self._deferred:
-            if sr.decision.defer_until <= self.clock:
-                self._dispatch(sr)
-            else:
-                held.append(sr)
-        self._deferred = held
+    def _ensure_tick(self, j: int, t: float) -> None:
+        if not self._tick_scheduled[j]:
+            self._tick_scheduled[j] = True
+            self.loop.push(InferStart(max(t, self.engine_clock[j]),
+                                      server=j))
 
-        if self._pending:
-            view = self._view()
-            batch = self._pending
-            self._pending = []
-            decisions = drive_slot(
-                self.policy, [sr.service for sr in batch], view,
-                int(self.clock / self.slot))
-            # persist the committed uplink residuals: the fleet's links
-            # stay occupied across steps
-            self.uplink_free_at = list(view.uplink_free_at)
-            for sr, d in zip(batch, decisions):
-                j = d.server
-                sr.server = j
-                sr.decision = d
-                spec = self.specs[j]
-                sr.tx_time = sr.service.payload_bytes * 8.0 \
-                    / (spec.bandwidth * view.bw_factor[j])
-                if d.defer_until > self.clock:
-                    self._deferred.append(sr)
-                else:
-                    self._dispatch(sr)
+    def on_infer_start(self, ev: InferStart) -> None:
+        """One engine tick: admit + one real decode step on engine j,
+        costing that server's analytic per-step latency."""
+        j = ev.server
+        eng = self.engines[j]
+        self._tick_scheduled[j] = False
+        eng.step()
+        t_end = ev.time + self.specs[j].decode_step_time()
+        self.engine_clock[j] = t_end
+        self.clock = max(self.clock, t_end)
+        for sr in self.active.values():
+            if (sr.server == j and sr.engine_req is not None
+                    and sr.admit_clock < 0 and sr.engine_req.slot >= 0):
+                sr.admit_clock = ev.time
+        new_done = eng.completed[self._completed_seen[j]:]
+        self._completed_seen[j] = len(eng.completed)
+        for r in new_done:
+            for sr in list(self.active.values()):
+                if sr.engine_req is r:
+                    self._finish(sr, t_end)
+        if eng.queue or eng.active_slots:
+            self._ensure_tick(j, t_end)
 
-        n_active = 0
-        for j, eng in enumerate(self.engines):
-            before = {r.rid for r in eng.completed}
-            n_active += eng.step()
-            for r in eng.completed:
-                if r.rid in before:
-                    continue
-                for sr in list(self.active.values()):
-                    if sr.engine_req is r:
-                        self._finish(sr)
-        # logical time: the slowest engine's decode step dominates the tick
-        self.clock += max(self.specs[j].decode_step_time()
-                          for j in range(len(self.specs)))
-        return n_active
-
-    def _finish(self, sr: ServedRequest) -> None:
-        sr.done_clock = self.clock
+    def _finish(self, sr: ServedRequest, t: float) -> None:
+        sr.done_clock = t
         spec = self.specs[sr.server]
-        t_inf = spec.service_time(sr.service.prompt_tokens,
-                                  sr.service.output_tokens)
-        energy = (((spec.power_active - spec.power_idle)
-                   / spec.max_concurrency) * t_inf
-                  + spec.tx_power * sr.tx_time)
-        out = Outcome(server=sr.server, tx_time=sr.tx_time, queue_time=0.0,
-                      infer_time=t_inf, finish=sr.done_clock,
-                      processing_time=sr.latency,
+        # realized split: transmission (uplink wait + transfer), lane wait
+        # (engine queue until prefill admission), inference window
+        admit = sr.admit_clock if sr.admit_clock >= 0 else sr.dispatch_clock
+        queue_time = max(admit - sr.dispatch_clock, 0.0)
+        infer_time = max(sr.done_clock - admit, 0.0)
+        energy = spec.infer_energy(infer_time) + spec.tx_power * sr.tx_dur
+        out = Outcome(server=sr.server, tx_time=sr.tx_time,
+                      queue_time=queue_time, infer_time=infer_time,
+                      finish=sr.done_clock, processing_time=sr.latency,
                       success=sr.met_deadline, energy=energy)
         self.policy.feedback(sr.service, out)
         self.completed.append(sr)
         del self.active[sr.service.sid]
+        del self._by_sid[sr.service.sid]
 
-    def run_until_idle(self, max_steps: int = 10_000) -> List[ServedRequest]:
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Process the next event on the runtime loop (an arrival batch, a
+        dispatch window, an uplink completion, or one engine's decode
+        tick). With nothing scheduled the clock idles forward one minimal
+        engine tick."""
+        if not self.loop:
+            self.clock += self._idle_tick
+            return 0
+        self.handle(self.loop.pop())
+        return sum(len(e.active_slots) for e in self.engines)
+
+    def run_until_idle(self,
+                       max_steps: int = 1_000_000) -> List[ServedRequest]:
+        """Drain the service. `max_steps` counts *events* (finer-grained
+        than the old fleet-wide steps: each engine tick, transfer
+        completion and routing is one step), so the default budget is a
+        runaway backstop, not a workload bound."""
         for _ in range(max_steps):
             if not self._pending and not self._deferred and not self.active:
                 break

@@ -1,0 +1,456 @@
+"""Event-driven runtime: golden slotted equivalence, event ordering,
+scenario hooks, and the live server's realized outcome semantics.
+
+The golden test freezes the *PR 1 slotted loop* — a verbatim copy of the
+pre-redesign `Simulator.run` body — and checks that the event-loop
+simulator in slotted-compat mode (quantized batched `Arrival` events)
+reproduces its `SimResult` bit-for-bit on the seeded benchmark workload.
+"""
+import copy
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (
+    BandwidthModel, ClusterView, ServerState, Simulator, generate_workload,
+    paper_testbed,
+)
+from repro.cluster.workload import classify
+from repro.core import (
+    Arrival, BandwidthChange, Decision, Deferred, EventLoop, InferDone,
+    InferStart, SchedulingPolicy, TxDone, as_policy, available_scenarios,
+    drive_slot, make_policy, make_scenario,
+)
+from repro.core.runtime import TraceScenario
+
+
+# ---------------------------------------------------------------------------
+# Frozen PR 1 slotted loop (reference implementation, verbatim)
+# ---------------------------------------------------------------------------
+
+
+def _pr1_slotted_run(sim, services, scheduler):
+    """The pre-redesign `Simulator.run` slot loop, frozen for comparison."""
+    policy = as_policy(scheduler)
+    specs = sim.specs
+    states = [ServerState(spec=s) for s in specs]
+    lane_free = [[0.0] * s.max_concurrency for s in specs]
+    outcomes = []
+
+    services = sorted(services, key=lambda r: r.arrival)
+    for r in services:
+        r.class_id = classify(r)
+        r.finish = -1.0
+        r.server = -1
+    horizon_slots = int(math.ceil(services[-1].arrival / sim.slot)) + 1
+
+    idx = 0
+    for ts in range(horizon_slots):
+        t0 = ts * sim.slot
+        t1 = t0 + sim.slot
+        arrivals = []
+        while idx < len(services) and services[idx].arrival < t1:
+            arrivals.append(services[idx])
+            idx += 1
+        if not arrivals:
+            continue
+        factors = [sim.bandwidth.factor(ts, j) for j in range(len(specs))]
+        view = ClusterView(
+            t=t0, specs=specs, bw_factor=list(factors),
+            uplink_free_at=[st_.uplink_free_at for st_ in states],
+            lane_free=[list(lf) for lf in lane_free],
+        )
+        decisions = drive_slot(policy, arrivals, view, ts)
+        for req, d in zip(arrivals, decisions):
+            out = sim._realize(req, d, states, lane_free, factors)
+            outcomes.append(out)
+            policy.feedback(req, out)
+
+    makespan = max(o.finish for o in outcomes)
+    for st_ in states:
+        st_.finalize_idle(makespan)
+    times = np.array([o.processing_time for o in outcomes])
+    succ = np.array([o.success for o in outcomes])
+    return {
+        "success_rate": float(np.mean(succ)),
+        "avg_processing_time": float(np.mean(times)),
+        "p95_processing_time": float(np.percentile(times, 95)),
+        "makespan": float(makespan),
+        "e_tx": sum(st_.e_tx for st_ in states),
+        "e_infer": sum(st_.e_infer for st_ in states),
+        "e_idle": sum(st_.e_idle for st_ in states),
+        "per_server_served": [st_.served for st_ in states],
+        "servers": [r.server for r in sorted(services, key=lambda r: r.sid)],
+    }
+
+
+# Seeded benchmark workload parameters (benchmarks/common.py at smoke scale)
+_BENCH = dict(edge="llama2-7b", n=400, wl_seed=0, bw_seed=1, sim_seed=42)
+
+
+@pytest.mark.parametrize("policy_name,fluctuating", [
+    ("perllm", True), ("perllm", False), ("fineinfer", True),
+])
+def test_golden_slotted_compat_bit_exact(policy_name, fluctuating):
+    """Event-loop simulator in slotted-compat mode == PR 1 slot loop,
+    bit-for-bit, on the seeded benchmark workload."""
+    specs = paper_testbed(_BENCH["edge"])
+    services = generate_workload(_BENCH["n"], seed=_BENCH["wl_seed"])
+
+    sim_ref = Simulator(specs, BandwidthModel(fluctuating=fluctuating,
+                                              seed=_BENCH["bw_seed"]),
+                        seed=_BENCH["sim_seed"])
+    ref = _pr1_slotted_run(sim_ref, [copy.copy(s) for s in services],
+                           make_policy(policy_name, len(specs)))
+
+    sim_new = Simulator(specs, BandwidthModel(fluctuating=fluctuating,
+                                              seed=_BENCH["bw_seed"]),
+                        seed=_BENCH["sim_seed"])
+    new_services = [copy.copy(s) for s in services]
+    res = sim_new.run(new_services, make_policy(policy_name, len(specs)))
+
+    assert res.success_rate == ref["success_rate"]
+    assert res.avg_processing_time == ref["avg_processing_time"]
+    assert res.p95_processing_time == ref["p95_processing_time"]
+    assert res.makespan == ref["makespan"]
+    assert res.e_tx == ref["e_tx"]
+    assert res.e_infer == ref["e_infer"]
+    assert res.e_idle == ref["e_idle"]
+    assert res.per_server_served == ref["per_server_served"]
+    assert [r.server for r in sorted(new_services, key=lambda r: r.sid)] \
+        == ref["servers"]
+
+
+# ---------------------------------------------------------------------------
+# EventLoop ordering
+# ---------------------------------------------------------------------------
+
+
+def test_event_loop_time_order_and_kind_priority():
+    loop = EventLoop()
+    loop.push(Arrival(2.0, requests=("late",)))
+    loop.push(InferDone(1.0, request="done"))
+    loop.push(Arrival(1.0, requests=("tie",)))
+    loop.push(TxDone(1.0, request="tx"))
+    loop.push(BandwidthChange(1.0))
+    popped = [loop.pop() for _ in range(len(loop))]
+    # time first; at t=1.0 kind priority: bandwidth < done < tx < arrival
+    assert isinstance(popped[0], BandwidthChange)
+    assert isinstance(popped[1], InferDone)
+    assert isinstance(popped[2], TxDone)
+    assert isinstance(popped[3], Arrival) and popped[3].requests == ("tie",)
+    assert isinstance(popped[4], Arrival) and popped[4].requests == ("late",)
+
+
+def test_event_loop_fifo_within_kind():
+    loop = EventLoop()
+    for tag in ("a", "b", "c"):
+        loop.push(Deferred(3.0, request=tag))
+    assert [loop.pop().request for _ in range(3)] == ["a", "b", "c"]
+
+
+class _PinTo0(SchedulingPolicy):
+    """Deterministic single-server policy that records what it saw."""
+
+    name = "pin0"
+
+    def __init__(self):
+        self.assign_log = []          # (sid, view.t)
+        self.feedback_log = []        # (sid, Outcome)
+
+    def assign(self, req, view):
+        self.assign_log.append((req.sid, view.t))
+        return Decision(server=0)
+
+    def feedback(self, req, out):
+        self.feedback_log.append((req.sid, out))
+
+
+def _two_requests(t_first, t_second):
+    a, b = [copy.copy(s) for s in generate_workload(2, seed=0)]
+    a.arrival, b.arrival = float(t_first), float(t_second)
+    a.payload_bytes = b.payload_bytes = 2e6
+    return a, b
+
+
+@given(st.floats(0.0, 5.0), st.floats(0.0, 5.0))
+@settings(max_examples=25, deadline=None)
+def test_event_ordering_fifo_uplink(t_first, t_second):
+    """Out-of-order insertion cannot reorder the shared uplink: the loop
+    pops arrivals by timestamp, so the earlier request transmits first."""
+    specs = paper_testbed(n_edge=1)
+    a, b = _two_requests(t_first, t_second)
+    policy = _PinTo0()
+    sim = Simulator(specs, slot=None, seed=0)
+    # push order is b-then-a inside run() only if sorted — bypass run's
+    # sort by seeding the loop directly, mimicking live out-of-order pushes
+    from repro.cluster.simulator import _EventSimRuntime
+    for r in (a, b):
+        r.class_id = classify(r)
+    rt = _EventSimRuntime(sim, policy)
+    rt.loop.push(Arrival(b.arrival, requests=(b,)))   # inserted first
+    rt.loop.push(Arrival(a.arrival, requests=(a,)))   # but may arrive earlier
+    rt.drain()
+
+    order = [sid for sid, _t in policy.assign_log]
+    if a.arrival < b.arrival:
+        expected = [a.sid, b.sid]
+    elif b.arrival < a.arrival:
+        expected = [b.sid, a.sid]
+    else:
+        expected = [b.sid, a.sid]     # exact tie: FIFO by insertion
+    assert order == expected
+    # FIFO uplink: the shared link serves transfers in pop order without
+    # overlap — the second transfer completes a full tx after the first
+    by_sid = {a.sid: a, b.sid: b}
+    ready = {sid: by_sid[sid].arrival + out.tx_time
+             for sid, out in policy.feedback_log}
+    tx_dur = 2e6 * 8.0 / specs[0].bandwidth     # stable bandwidth, factor 1
+    first, second = expected
+    assert ready[first] <= ready[second] + 1e-9
+    assert ready[second] >= max(by_sid[second].arrival, ready[first]) \
+        + tx_dur - 1e-9
+
+
+def test_event_mode_views_are_fresh_per_arrival():
+    """Each arrival is scheduled against a view at its true timestamp (the
+    slotted runtime quantizes to slot boundaries)."""
+    specs = paper_testbed()
+    services = [copy.copy(s) for s in generate_workload(40, seed=2)]
+    pin = _PinTo0()
+    Simulator(specs, slot=None, seed=1).run(services, pin)
+    arrivals = {r.sid: r.arrival for r in services}
+    assert all(t == arrivals[sid] for sid, t in pin.assign_log)
+
+    pin2 = _PinTo0()
+    Simulator(specs, slot=0.5, seed=1).run(
+        [copy.copy(s) for s in generate_workload(40, seed=2)], pin2)
+    assert all(t == round(t / 0.5) * 0.5 or t % 0.5 == 0.0
+               for _sid, t in pin2.assign_log)
+
+
+def test_event_mode_feedback_at_true_completion():
+    """In event mode the learner hears about a request only when it
+    actually finishes — a later arrival can be assigned first."""
+    specs = paper_testbed(n_edge=1)
+    a, b = _two_requests(0.1, 0.9)    # different slots, a finishes > 0.9
+    a.prompt_tokens, a.output_tokens = 2048, 96
+    policy = _PinTo0()
+    Simulator(specs, slot=None, seed=0).run([a, b], policy)
+    assert [sid for sid, _ in policy.assign_log] == [a.sid, b.sid]
+    # a's feedback arrived after b was assigned (interleaved timeline) —
+    # under slotted semantics a's feedback precedes b's slot
+    assert policy.feedback_log[0][1].finish > 0.9
+
+    policy2 = _PinTo0()
+    a2, b2 = _two_requests(0.1, 0.9)
+    a2.prompt_tokens, a2.output_tokens = 2048, 96
+    Simulator(specs, slot=0.5, seed=0).run([a2, b2], policy2)
+    assert [sid for sid, _ in policy2.assign_log] == [a2.sid, b2.sid]
+
+
+def test_deferral_applied_by_event_runtime():
+    """Decision.defer_until becomes a Deferred event; dispatch (and hence
+    transmission) cannot start before the window."""
+    specs = paper_testbed()
+    services = [copy.copy(s) for s in generate_workload(50, seed=1)]
+    sim = Simulator(specs, slot=None, seed=1)
+    res = sim.run(services, make_policy("fineinfer", len(specs),
+                                        batch_window=1.0))
+    assert res.n_services == 50
+    for r in sorted(services, key=lambda r: r.sid):
+        assert r.finish >= math.ceil(r.arrival / 1.0) * 1.0
+
+
+# ---------------------------------------------------------------------------
+# Scenario hooks
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_registry():
+    assert {"burst", "bwdrop", "diurnal", "poisson", "trace"} \
+        <= set(available_scenarios())
+    with pytest.raises(KeyError, match="unknown scenario"):
+        make_scenario("not-a-scenario")
+    sc = make_scenario("burst", burst_factor=6.0)
+    assert sc.burst_factor == 6.0
+
+
+def _dispersion(workload, window=1.0):
+    t = np.array([r.arrival for r in workload])
+    counts = np.bincount((t // window).astype(int))
+    return counts.var() / counts.mean()
+
+
+def test_burst_and_diurnal_arrivals_are_overdispersed():
+    poisson = generate_workload(2000, rate=10.0, seed=7)
+    burst = generate_workload(2000, rate=10.0, seed=7, scenario="burst")
+    diurnal = generate_workload(2000, rate=10.0, seed=7, scenario="diurnal")
+    assert _dispersion(poisson) < 1.5            # ≈1 for Poisson
+    assert _dispersion(burst) > 3.0
+    assert 1.5 < _dispersion(diurnal)
+    # requirements draw identically: only arrival times differ
+    assert [r.prompt_tokens for r in poisson] \
+        == [r.prompt_tokens for r in burst]
+    # burst preserves the long-run average rate for any burst_factor
+    for bf in (4.0, 8.0):
+        sc = make_scenario("burst", burst_factor=bf)
+        t = sc.arrival_times(20000, 10.0, np.random.default_rng(0))
+        assert 20000 / t[-1] == pytest.approx(10.0, rel=0.1)
+
+
+def test_bandwidth_only_scenarios_keep_baseline_arrivals():
+    """`poisson` and `bwdrop` (no arrival shaping) replay the exact
+    no-scenario arrival stream, so their effects isolate per arrival."""
+    base = generate_workload(300, rate=10.0, seed=7)
+    for name in ("poisson", "bwdrop"):
+        wl = generate_workload(300, rate=10.0, seed=7, scenario=name)
+        assert [r.arrival for r in wl] == [r.arrival for r in base]
+
+
+def test_trace_scenario_replays_and_cycles():
+    times = [0.5, 1.25, 3.0]
+    wl = generate_workload(3, rate=10.0, seed=0,
+                           scenario=TraceScenario(times))
+    assert [r.arrival for r in wl] == times
+    wl = generate_workload(7, rate=10.0, seed=0,
+                           scenario=TraceScenario(times))
+    assert len(wl) == 7
+    assert all(wl[i].arrival < wl[i + 1].arrival for i in range(6))
+
+
+def test_bwdrop_scenario_degrades_the_dropped_link():
+    """A mid-run cloud bandwidth drop injected as BandwidthChange events
+    slows cloud-bound transfers in both runtime modes."""
+    specs = paper_testbed()
+    cloud = len(specs) - 1
+
+    class PinCloud(SchedulingPolicy):
+        name = "pin-cloud"
+
+        def assign(self, req, view):
+            return Decision(server=cloud)
+
+    sc = make_scenario("bwdrop", scale=0.25, start_frac=0.0, stop_frac=1.0)
+    events = sc.bandwidth_events(10.0, len(specs))
+    assert [ev.scale for ev in events] == [{cloud: 0.25}, {cloud: 1.0}]
+
+    for slot in (0.5, None):
+        services = [copy.copy(s) for s in generate_workload(150, seed=4)]
+        base = Simulator(specs, slot=slot, seed=3).run(services, PinCloud())
+        services = [copy.copy(s) for s in generate_workload(150, seed=4)]
+        dropped = Simulator(specs, slot=slot, seed=3).run(
+            services, PinCloud(), scenario=sc)
+        assert dropped.avg_processing_time > base.avg_processing_time
+        assert dropped.e_tx > base.e_tx
+
+
+# ---------------------------------------------------------------------------
+# Live server: realized outcome semantics on the shared loop
+# ---------------------------------------------------------------------------
+
+
+def _tiny_fleet():
+    pytest.importorskip("jax")
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import ServingEngine
+
+    cfg = get_config("gemma-2b").reduced(n_layers=1, d_model=32,
+                                         vocab_size=128)
+    key = jax.random.key(0)
+    specs = paper_testbed(n_edge=1)[:1] + [paper_testbed()[-1]]
+    engines = [ServingEngine(cfg, init_params(key, cfg), max_batch=2,
+                             max_seq=32) for _ in range(2)]
+    return specs, engines
+
+
+def test_server_outcome_has_real_tx_queue_split_and_realized_energy():
+    from repro.serving.perllm_server import PerLLMServer
+
+    specs, engines = _tiny_fleet()
+    policy = _PinTo0()
+    srv = PerLLMServer(specs, engines, scheduler=policy)   # stable bw
+    for _ in range(3):
+        srv.submit([1, 2, 3], max_new_tokens=4, payload_bytes=4e6)
+    srv.run_until_idle()
+    assert len(policy.feedback_log) == 3
+    spec = specs[0]
+    tx_dur = 4e6 * 8.0 / spec.bandwidth
+    by_sid = {sr.service.sid: sr for sr in srv.completed}
+    for sid, out in policy.feedback_log:
+        sr = by_sid[sid]
+        # transmission includes the serialized uplink wait, not 0.0
+        assert out.tx_time == pytest.approx(sr.tx_time)
+        assert out.tx_time >= tx_dur - 1e-9
+        # real queue split: engine wait between TxDone and lane admission
+        assert sr.admit_clock >= sr.dispatch_clock >= 0
+        assert out.queue_time == pytest.approx(
+            sr.admit_clock - sr.dispatch_clock)
+        # inference is the realized window, and the split sums to latency
+        assert out.infer_time == pytest.approx(
+            sr.done_clock - sr.admit_clock)
+        assert out.processing_time == pytest.approx(
+            out.tx_time + out.queue_time + out.infer_time)
+        # energy charges the realized window (not nominal service_time)
+        expected = ((spec.power_active - spec.power_idle)
+                    / spec.max_concurrency) * out.infer_time \
+            + spec.tx_power * tx_dur
+        assert out.energy == pytest.approx(expected)
+    # the 4e6 payloads serialize on one uplink: later requests queued
+    tx_times = [out.tx_time for _sid, out in policy.feedback_log]
+    assert max(tx_times) > tx_dur + 1e-6
+
+
+def test_server_bandwidth_factor_stable_within_slot():
+    """The factor the policy observed is the factor dispatch realizes:
+    repeated view builds within a slot don't advance the fluctuating
+    model's RNG."""
+    from repro.serving.perllm_server import PerLLMServer
+
+    specs, engines = _tiny_fleet()
+    srv = PerLLMServer(specs, engines, scheduler=_PinTo0(),
+                       bandwidth=BandwidthModel(fluctuating=True, seed=3))
+    v1 = srv.build_view(srv.clock)
+    v2 = srv.build_view(srv.clock)
+    assert v1.bw_factor == v2.bw_factor
+    assert any(f != 1.0 for f in v1.bw_factor)
+
+
+def test_server_lane_occupancy_tracks_remaining_tokens():
+    """The live view's lane occupancy comes from each active request's
+    actual remaining decode tokens — no hardcoded occupancy constant."""
+    from repro.serving.perllm_server import PerLLMServer
+
+    specs, engines = _tiny_fleet()
+    srv = PerLLMServer(specs, engines, scheduler=_PinTo0())
+    srv.submit([1, 2, 3], max_new_tokens=8, payload_bytes=1e4)
+    # route + transmit + first engine tick (admission)
+    for _ in range(40):
+        if srv.engines[0].active_slots:
+            break
+        srv.step()
+    assert srv.engines[0].active_slots
+    eng = srv.engines[0]
+    spec = specs[0]
+    r = eng.slot_req[eng.active_slots[0]]
+    remaining = r.max_new_tokens - len(r.generated)
+    assert 0 < remaining < 8
+    view = srv.build_view(srv.clock)
+    base = max(srv.engine_clock[0], srv.clock)
+    expected = base + remaining * spec.decode_step_time()
+    assert max(view.lane_free[0]) == pytest.approx(expected)
+    # one more decode tick shrinks the booked occupancy by one step
+    srv.step()
+    r2 = eng.slot_req[eng.active_slots[0]] if eng.active_slots else None
+    if r2 is not None:
+        view2 = srv.build_view(srv.clock)
+        remaining2 = r2.max_new_tokens - len(r2.generated)
+        assert remaining2 == remaining - 1
+        base2 = max(srv.engine_clock[0], srv.clock)
+        assert max(view2.lane_free[0]) == pytest.approx(
+            base2 + remaining2 * spec.decode_step_time())
