@@ -10,10 +10,18 @@ Scenario/runtime plumbing (also settable via `python -m benchmarks.run
 --scenario/--runtime`):
 
 * `BENCH_SCENARIO` — a registered scenario name (`burst`, `diurnal`,
-  `bwdrop`, ...) shaping the matrix's arrival process and injecting its
-  bandwidth events into every simulation cell.
+  `bwdrop`, `overload`, `cloud-outage`, ...) shaping the matrix's arrival
+  process and injecting its bandwidth events into every simulation cell.
 * `BENCH_RUNTIME` — `slot` (default, quantized 0.5 s slots) or `event`
   (pure event-driven scheduling, fresh per-arrival views).
+* `BENCH_ADMISSION` — any non-empty value other than `0` gives PerLLM
+  admission control (`Decision.admit`): infeasible requests are shed with
+  an SLO-violation cost instead of queueing; results report the
+  admitted-request SLO rate alongside overall success.
+* `BENCH_TOPOLOGY` — `degenerate` (default, the legacy one-private-link
+  per server) or `edge-cloud` (per-link graph: private edge access links,
+  cloud reached over user-cloud + the shared edge-cloud backhaul, each
+  link on an independent fluctuation substream).
 """
 from __future__ import annotations
 
@@ -21,10 +29,11 @@ import copy
 import functools
 import os
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 from repro.cluster import (
-    BandwidthModel, SimResult, Simulator, generate_workload, paper_testbed,
+    BandwidthModel, SimResult, Simulator, generate_workload, make_topology,
+    paper_testbed,
 )
 from repro.core import make_policy
 
@@ -33,6 +42,8 @@ METHODS = ("PerLLM", "FineInfer", "AGOD", "RewardlessGuidance")
 BENCH_N = int(os.environ.get("BENCH_N", "6000"))
 SCENARIO = os.environ.get("BENCH_SCENARIO") or None
 RUNTIME = os.environ.get("BENCH_RUNTIME", "slot")
+ADMISSION = os.environ.get("BENCH_ADMISSION", "") not in ("", "0")
+TOPOLOGY = os.environ.get("BENCH_TOPOLOGY", "degenerate")
 if RUNTIME not in ("slot", "event"):
     raise SystemExit(f"BENCH_RUNTIME={RUNTIME!r} is not one of "
                      "'slot'/'event'")
@@ -41,8 +52,13 @@ BW_SEED = 1
 
 
 def make_scheduler(name: str, n_servers: int):
-    """All benchmark schedulers come from the policy registry."""
-    return make_policy(name, n_servers)
+    """All benchmark schedulers come from the policy registry. With
+    BENCH_ADMISSION set, PerLLM runs with admission control (the paper
+    baselines have no shedding mechanism and always admit)."""
+    kwargs = {}
+    if ADMISSION and name.lower() == "perllm":
+        kwargs["admission"] = True
+    return make_policy(name, n_servers, **kwargs)
 
 
 @functools.lru_cache(maxsize=None)
@@ -51,14 +67,20 @@ def run_cell(edge_model: str, fluctuating: bool, method: str,
              scenario: str = None) -> Tuple[SimResult, float]:
     """One (deployment × bandwidth × scheduler) simulation. Returns
     (result, wall_seconds). `scenario=None` resolves the module-level
-    SCENARIO at call time (benchmarks.run may rebind it after import)."""
+    SCENARIO at call time (benchmarks.run may rebind it after import;
+    ADMISSION/TOPOLOGY are module-level reads for the same reason)."""
     if scenario is None:
         scenario = SCENARIO
     specs = paper_testbed(edge_model)
     services = generate_workload(n, seed=0, scenario=scenario)
+    topology = None
+    if TOPOLOGY != "degenerate":
+        topology = make_topology(TOPOLOGY, specs, fluctuating=fluctuating,
+                                 seed=BW_SEED)
     sim = Simulator(specs, BandwidthModel(fluctuating=fluctuating,
                                           seed=BW_SEED), seed=SIM_SEED,
-                    slot=None if RUNTIME == "event" else 0.5)
+                    slot=None if RUNTIME == "event" else 0.5,
+                    topology=topology)
     sched = make_scheduler(method, len(specs))
     t0 = time.time()
     res = sim.run([copy.copy(s) for s in services], sched,

@@ -1,0 +1,94 @@
+"""Benchmark regression gate: compare a run's JSON against the baseline.
+
+Usage (what CI runs after the smoke benchmarks)::
+
+    python -m benchmarks.run table1_success_rate fig5_throughput \
+        --json BENCH_smoke.json
+    python benchmarks/compare_baseline.py BENCH_smoke.json \
+        benchmarks/baseline.json
+
+Gated metrics are the quality-style ones (names containing ``success``,
+``thpt``/``throughput`` or ``goodput`` — higher is better; ``*ratio*``
+names are excluded, since a PerLLM/baseline ratio shrinks when the
+*baseline* improves); the job fails
+if any falls more than ``--tolerance`` (default 5%) below the committed
+baseline. Wall-clock (`us_per_call`) is reported but never gated: CI
+runners are too noisy for latency gates. Regenerate the baseline with the
+exact smoke-scale command above after an intentional behavior change.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_TAGS = ("success", "thpt", "throughput", "goodput")
+
+
+def gated(metric_name: str) -> bool:
+    name = metric_name.lower()
+    # PerLLM-vs-baseline ratios are NOT gated: improving a baseline's
+    # absolute goodput shrinks the ratio without any regression
+    if "ratio" in name:
+        return False
+    return any(tag in name for tag in GATED_TAGS)
+
+
+def compare(current: dict, baseline: dict, tolerance: float) -> list:
+    """Failure messages for every gated metric below baseline×(1−tol)."""
+    failures = []
+    checked = 0
+    for exp, info in sorted(baseline.items()):
+        cur = current.get(exp)
+        if cur is None:
+            failures.append(f"{exp}: missing from current run")
+            continue
+        for key, base_val in sorted(info.get("metrics", {}).items()):
+            if not gated(key):
+                continue
+            cur_val = cur.get("metrics", {}).get(key)
+            if cur_val is None:
+                failures.append(f"{exp}.{key}: metric missing "
+                                f"(baseline {base_val:g})")
+                continue
+            checked += 1
+            floor = base_val * (1.0 - tolerance)
+            status = "ok" if cur_val >= floor else "REGRESSION"
+            print(f"{status:10s} {exp}.{key}: {cur_val:g} "
+                  f"(baseline {base_val:g}, floor {floor:g})")
+            if cur_val < floor:
+                failures.append(
+                    f"{exp}.{key}: {cur_val:g} < floor {floor:g} "
+                    f"({(1 - cur_val / base_val) * 100:.1f}% below "
+                    f"baseline {base_val:g})")
+    if checked == 0:
+        failures.append("no gated metrics were compared — baseline or "
+                        "current JSON is empty/malformed")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail if gated benchmark metrics regress vs baseline.")
+    ap.add_argument("current", help="JSON written by benchmarks.run --json")
+    ap.add_argument("baseline", help="committed benchmarks/baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="allowed fractional drop below baseline "
+                         "(default 0.05)")
+    args = ap.parse_args(argv)
+    with open(args.current) as fh:
+        current = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    failures = compare(current, baseline, args.tolerance)
+    if failures:
+        print("\nbenchmark regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nbenchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,5 +47,6 @@ def run(edge_model: str = "llama2-7b") -> str:
     print("\n".join(lines))
     derived = (f"thpt_ratio_fineinfer={ratios['FineInfer']:.2f}x;"
                f"agod={ratios['AGOD']:.2f}x;"
-               f"rg={ratios['RewardlessGuidance']:.2f}x")
+               f"rg={ratios['RewardlessGuidance']:.2f}x;"
+               f"perllm_goodput={best['PerLLM']:.1f}")
     return csv_row("fig5_throughput", (time.time() - t0) * 1e6, derived)

@@ -14,16 +14,51 @@ Scenario and runtime shaping (the event-driven runtime's `Scenario` hooks):
       --runtime event
 
 `--scenario` picks a registered arrival/bandwidth scenario (burst, diurnal,
-bwdrop, trace, poisson) for the shared simulation matrix; `--runtime event`
-switches those cells from quantized 0.5 s slots to pure event-driven
-scheduling. Equivalent env vars: BENCH_SCENARIO / BENCH_RUNTIME.
+bwdrop, overload, cloud-outage, trace, poisson) for the shared simulation
+matrix; `--runtime event` switches those cells from quantized 0.5 s slots
+to pure event-driven scheduling; `--admission` gives PerLLM admission
+control; `--topology edge-cloud` swaps the per-server bandwidth model for
+the explicit link graph. Equivalent env vars: BENCH_SCENARIO /
+BENCH_RUNTIME / BENCH_ADMISSION / BENCH_TOPOLOGY.
+
+`--json PATH` additionally writes the run's derived metrics as JSON —
+the artifact the CI regression gate feeds to
+`benchmarks/compare_baseline.py`.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import traceback
+
+
+def _parse_derived(derived: str) -> dict:
+    """`k=v;k2=v2` pairs -> numeric metrics (%/x suffixes stripped)."""
+    metrics = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        key, val = part.split("=", 1)
+        try:
+            metrics[key.strip()] = float(val.strip().rstrip("%x"))
+        except ValueError:
+            pass
+    return metrics
+
+
+def write_json(rows, path: str) -> None:
+    """Dump each experiment's wall time + parsed derived metrics."""
+    out = {}
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        out[name] = {"us_per_call": float(us), "derived": derived,
+                     "metrics": _parse_derived(derived)}
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"# wrote {path}")
 
 
 def main(argv=None) -> None:
@@ -34,11 +69,24 @@ def main(argv=None) -> None:
                     help="subset of experiments to run (default: all)")
     ap.add_argument("--scenario", default=None, metavar="NAME",
                     help="arrival/bandwidth scenario for the simulation "
-                         "matrix: burst, diurnal, bwdrop, trace, poisson "
+                         "matrix: burst, diurnal, bwdrop, overload, "
+                         "cloud-outage, trace, poisson "
                          "(default: stationary poisson)")
     ap.add_argument("--runtime", default=None, choices=("slot", "event"),
                     help="simulation runtime mode: quantized 0.5s slots "
                          "(default) or pure event-driven scheduling")
+    ap.add_argument("--admission", action="store_true",
+                    help="run PerLLM with admission control: infeasible "
+                         "requests are shed (SLO-violation cost) instead "
+                         "of queueing forever")
+    ap.add_argument("--topology", default=None,
+                    choices=("degenerate", "edge-cloud"),
+                    help="network model for the simulation matrix: the "
+                         "legacy per-server links (default) or the "
+                         "explicit edge-cloud link graph")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write derived metrics as JSON (the CI "
+                         "regression-gate artifact)")
     args = ap.parse_args(argv if argv is not None else sys.argv[1:])
     # benchmarks.common reads these at import time, so set them before the
     # experiment imports below
@@ -56,7 +104,13 @@ def main(argv=None) -> None:
         os.environ["BENCH_SCENARIO"] = args.scenario
     if args.runtime:
         os.environ["BENCH_RUNTIME"] = args.runtime
-    if (args.scenario or args.runtime) and "benchmarks.common" in sys.modules:
+    if args.admission:
+        os.environ["BENCH_ADMISSION"] = "1"
+    if args.topology:
+        os.environ["BENCH_TOPOLOGY"] = args.topology
+    rebind = (args.scenario or args.runtime or args.admission
+              or args.topology)
+    if rebind and "benchmarks.common" in sys.modules:
         # already imported (programmatic/repeat use): env vars were read at
         # import time, so rebind and drop the stale cell cache
         common = sys.modules["benchmarks.common"]
@@ -64,6 +118,10 @@ def main(argv=None) -> None:
             common.SCENARIO = args.scenario
         if args.runtime:
             common.RUNTIME = args.runtime
+        if args.admission:
+            common.ADMISSION = True
+        if args.topology:
+            common.TOPOLOGY = args.topology
         common.run_cell.cache_clear()
 
     from benchmarks import (
@@ -102,6 +160,9 @@ def main(argv=None) -> None:
     print("\n# name,us_per_call,derived")
     for r in rows:
         print(r)
+    json_path = args.json or os.environ.get("BENCH_JSON")
+    if json_path:
+        write_json(rows, json_path)
     if any(r.endswith("ERROR") for r in rows):
         sys.exit(1)
 

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.models import (
-    cpu_context, decode_step, dummy_batch, forward, init_cache, init_params,
+    cpu_context, decode_step, dummy_batch, init_cache, init_params,
     prefill,
 )
 

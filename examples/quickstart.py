@@ -2,7 +2,6 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 
 from repro.configs import get_config
 from repro.serving import ServingEngine

@@ -1,4 +1,6 @@
-from repro.cluster.network import BandwidthModel
+from repro.cluster.network import (
+    BandwidthModel, Link, LinkStateMixin, LinkTopology, make_topology,
+)
 from repro.cluster.server import ServerSpec, ServerState
 from repro.cluster.simulator import (
     ClusterView, Outcome, SchedulerBase, SimResult, Simulator, SlotView,
@@ -9,8 +11,9 @@ from repro.cluster.workload import (
 )
 
 __all__ = [
-    "BandwidthModel", "ClusterView", "N_CLASSES", "Outcome", "SchedulerBase",
-    "ServerSpec", "ServerState", "ServiceRequest", "SimResult", "Simulator",
-    "SlotView", "classify", "generate_workload", "paper_testbed",
+    "BandwidthModel", "ClusterView", "Link", "LinkStateMixin",
+    "LinkTopology", "N_CLASSES", "Outcome", "SchedulerBase", "ServerSpec",
+    "ServerState", "ServiceRequest", "SimResult", "Simulator", "SlotView",
+    "classify", "generate_workload", "make_topology", "paper_testbed",
     "tpu_testbed",
 ]

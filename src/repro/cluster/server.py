@@ -8,8 +8,6 @@ same roofline logic used for the TPU dry-run, applied to the cluster.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 from repro.configs import get_config
 
 

@@ -24,7 +24,18 @@ from `repro.core.runtime`:
 Scenario hooks (`repro.core.runtime.Scenario`) inject extra event streams —
 bursty/diurnal/trace arrivals shape the workload (see
 `workload.generate_workload`), and mid-run bandwidth drops arrive as
-`BandwidthChange` scale overlays honored by both modes.
+`BandwidthChange` scale overlays (per server or per named link) honored by
+both modes.
+
+The network is a `LinkTopology` (default: the degenerate one-private-link
+per server, bit-exact with the legacy per-server `BandwidthModel`):
+transfers serialize on every link of the target server's path at the
+path's bottleneck bandwidth. Policies may shed arrivals
+(`Decision.admit=False` — a `Reject` event emits the SLO-violation
+Outcome with zero server energy) and, in event mode, reclaim a running
+victim's lane (`Decision.preempt_victim` — the victim's remaining decode
+tokens requeue as a fresh Arrival; slotted mode raises, since it realizes
+outcomes synchronously).
 
 Servers have *hidden* efficiency factors and per-request noise — schedulers
 only observe realized outcomes, which is what makes the bandit formulation
@@ -33,19 +44,21 @@ meaningful (and is how the real testbed behaves).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Union
+import math
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.cluster.network import BandwidthModel
+from repro.cluster.network import BandwidthModel, LinkStateMixin, LinkTopology
 from repro.cluster.server import ServerSpec, ServerState
 from repro.cluster.workload import ServiceRequest, classify
 from repro.core.api import (
-    ClusterView, Decision, SchedulerBase, as_policy, drive_slot,
+    ClusterView, Decision, RunningTask, as_policy, drive_slot,
 )
+from repro.core.api import SchedulerBase as SchedulerBase  # noqa: PLC0414 — compat re-export
 from repro.core.runtime import (
-    Arrival, BandwidthChange, InferDone, Runtime, Scenario, TxDone,
-    make_scenario,
+    Arrival, BandwidthChange, InferDone, Preempt, Reject, Runtime, Scenario,
+    TxDone, make_scenario,
 )
 
 # Deprecated alias: the per-slot observation object is now the shared
@@ -63,6 +76,7 @@ class Outcome:
     processing_time: float
     success: bool
     energy: float               # incremental (tx + active-infer) energy
+    rejected: bool = False      # admission control shed this request
 
 
 @dataclasses.dataclass
@@ -78,6 +92,10 @@ class SimResult:
     e_infer: float
     e_idle: float
     per_server_served: List[int]
+    # admission control & preemption (0 when disabled — legacy behavior)
+    n_rejected: int = 0
+    n_preempted: int = 0
+    admitted_success_rate: float = 0.0   # SLO rate among admitted requests
 
     @property
     def total_energy(self) -> float:
@@ -93,12 +111,16 @@ class SimResult:
                    per_server_served=[0] * n_servers)
 
     def row(self) -> str:
+        extra = ""
+        if self.n_rejected or self.n_preempted:
+            extra = (f" adm_succ={self.admitted_success_rate*100:5.1f}%"
+                     f" rej={self.n_rejected} pre={self.n_preempted}")
         return (f"{self.name:22s} succ={self.success_rate*100:5.1f}% "
                 f"time={self.avg_processing_time:6.2f}s "
                 f"thpt={self.throughput_tokens_per_s:8.1f} tok/s "
                 f"energy={self.total_energy/1e3:8.1f} kJ "
                 f"(tx={self.e_tx/1e3:.1f} inf={self.e_infer/1e3:.1f} "
-                f"idle={self.e_idle/1e3:.1f})")
+                f"idle={self.e_idle/1e3:.1f})" + extra)
 
 
 # ---------------------------------------------------------------------------
@@ -106,23 +128,54 @@ class SimResult:
 # ---------------------------------------------------------------------------
 
 
-class _SimRuntimeBase(Runtime):
+def rejected_outcome(req, decision: Decision, t: float) -> Outcome:
+    """The Outcome admission control emits for a shed request.
+
+    The SLO-violation cost is a full deadline overshoot
+    (`processing_time = 2×deadline`, i.e. normalized time slack −1) with
+    success False; the request never touches a server, so no transmission
+    or inference energy is charged anywhere. One definition shared by the
+    simulator and the live server."""
+    return Outcome(server=decision.server, tx_time=0.0, queue_time=0.0,
+                   infer_time=0.0, finish=t,
+                   processing_time=2.0 * req.deadline, success=False,
+                   energy=0.0, rejected=True)
+
+
+class _SimRuntimeBase(Runtime, LinkStateMixin):
     """Shared state for both simulator modes: server bookkeeping, the lane
-    ledger, the bandwidth model plus scenario scale overlay."""
+    ledger, and the link topology's mutable state (per-link backlog and
+    scenario scale overlays)."""
 
     def __init__(self, sim: "Simulator", policy) -> None:
         super().__init__(policy)
         self.sim = sim
         self.specs = sim.specs
+        self.init_link_state(sim.topology)
+        self.topo = self.topology
         self.states = [ServerState(spec=s) for s in self.specs]
         self.lane_free = [[0.0] * s.max_concurrency for s in self.specs]
-        self.bw_scale = [1.0] * len(self.specs)
         self.outcomes: List[Outcome] = []
+        self.n_rejected = 0
+        self.n_preempted = 0
 
     def on_bandwidth_change(self, ev: BandwidthChange) -> None:
-        if ev.scale:
-            for j, s in ev.scale.items():
-                self.bw_scale[j] = s
+        self.apply_bandwidth_scales(ev)
+
+    def server_factor(self, j: int, link_factors: Dict[str, float]) -> float:
+        """Effective per-server bandwidth factor under current overlays."""
+        return self.topo.server_factor(j, self.specs[j].bandwidth,
+                                       link_factors, self.link_scale)
+
+    def on_reject(self, ev: Reject) -> None:
+        """Admission control shed a request: emit the rejected Outcome."""
+        req = ev.request
+        out = rejected_outcome(req, ev.decision, ev.time)
+        req.finish = -1.0
+        req.server = -1
+        self.n_rejected += 1
+        self.outcomes.append(out)
+        self.policy.feedback(req, out)
 
 
 class _SlottedSimRuntime(_SimRuntimeBase):
@@ -138,40 +191,78 @@ class _SlottedSimRuntime(_SimRuntimeBase):
     def on_arrival(self, ev: Arrival) -> None:
         ts = ev.slot_index
         sim = self.sim
-        factors = [sim.bandwidth.factor(ts, j) * self.bw_scale[j]
+        link_factors = self.topo.factors(ts)
+        factors = [self.server_factor(j, link_factors)
                    for j in range(len(self.specs))]
         view = ClusterView(
             t=ev.time, specs=self.specs, bw_factor=list(factors),
-            uplink_free_at=[st.uplink_free_at for st in self.states],
+            uplink_free_at=[self.topo.path_free_at(j, self.link_free)
+                            for j in range(len(self.specs))],
             lane_free=[list(lf) for lf in self.lane_free],
+            **self.link_view_kwargs(ev.time, link_factors),
         )
         decisions = drive_slot(self.policy, ev.requests, view, ts)
         for req, d in zip(ev.requests, decisions):
-            out = sim._realize(req, d, self.states, self.lane_free, factors)
+            if not d.admit:
+                self.handle(Reject(ev.time, request=req, decision=d))
+                continue
+            if d.preempt_victim is not None:
+                raise ValueError(
+                    "preemption needs the event-driven simulator "
+                    "(slot=None): slotted mode realizes outcomes "
+                    "synchronously, so there is no in-flight victim to "
+                    "return a lane from")
+            out = sim._realize(req, d, self.states, self.lane_free, factors,
+                               links=self.link_free,
+                               path=self.topo.paths[d.server])
             self.outcomes.append(out)
             self.policy.feedback(req, out)
+
+
+@dataclasses.dataclass(eq=False)
+class _Booking:
+    """One dispatched request's committed physics (identity-hashed so a
+    cancelled booking can never be confused with its requeue's)."""
+
+    request: ServiceRequest
+    j: int
+    li: int                 # lane index booked on server j
+    lane_prev: float        # lane value before this booking (for rollback)
+    tx_dur: float
+    charge_from: float      # tx-energy window start (arrival, or the
+    #                         requeue instant for preempted continuations —
+    #                         the pre-preemption window was already billed)
+    ready: float            # transfer complete (uplink wait + tx)
+    begin: float            # lane booking start
+    t_inf: float
+    finish: float
+    cancelled: bool = False
 
 
 class _EventSimRuntime(_SimRuntimeBase):
     """Pure event-driven semantics.
 
     Every arrival observes a fresh view of the cluster at its actual
-    timestamp; physics are resolved at dispatch (uplink and lane booked
+    timestamp; physics are resolved at dispatch (links and lane booked
     immediately, so later arrivals see the consumed capacity) while the
     timeline unfolds as TxDone → InferStart → InferDone events, with energy
     accounting and policy feedback at the times things actually happen.
+    Bookings stay in `_inflight` until completion, which is what gives
+    views their `running` tasks and `Preempt` a victim ledger to roll back.
     """
 
     def __init__(self, sim: "Simulator", policy) -> None:
         super().__init__(sim, policy)
-        self._model_factors = [1.0] * len(self.specs)
-        if sim.bandwidth.fluctuating:
+        self._link_factors: Dict[str, float] = \
+            {n: 1.0 for n in self.topo.links}
+        self._inflight: Dict[int, _Booking] = {}
+        if any(link.fluctuating for link in self.topo.links.values()):
             self._resample_factors(0.0)
 
     # ---------------- bandwidth as an event stream -----------------------
     def _resample_factors(self, t: float) -> None:
         k = int(round(t / self.sim.bw_interval))
-        self._model_factors = self.sim.bandwidth.factors(k, len(self.specs))
+        self._link_factors = self.topo.factors(k)
         self.loop.push(BandwidthChange(t + self.sim.bw_interval,
                                        resample=True))
 
@@ -181,18 +272,28 @@ class _EventSimRuntime(_SimRuntimeBase):
             self._resample_factors(ev.time)
 
     def _factor(self, j: int) -> float:
-        return self._model_factors[j] * self.bw_scale[j]
+        return self.server_factor(j, self._link_factors)
 
     # ---------------- the Runtime contract -------------------------------
     def slot_index(self, t: float) -> int:
         return int(t / self.sim.bw_interval)
 
     def build_view(self, t: float) -> ClusterView:
+        n = len(self.specs)
+        running: List[List[RunningTask]] = [[] for _ in range(n)]
+        for sid, b in self._inflight.items():
+            running[b.j].append(RunningTask(
+                sid=sid, server=b.j, class_id=b.request.class_id,
+                deadline_at=b.request.arrival + b.request.deadline,
+                begin=b.begin, finish_est=b.finish))
         return ClusterView(
             t=t, specs=self.specs,
-            bw_factor=[self._factor(j) for j in range(len(self.specs))],
-            uplink_free_at=[st.uplink_free_at for st in self.states],
+            bw_factor=[self._factor(j) for j in range(n)],
+            uplink_free_at=[self.topo.path_free_at(j, self.link_free)
+                            for j in range(n)],
             lane_free=[list(lf) for lf in self.lane_free],
+            running=running,
+            **self.link_view_kwargs(t, self._link_factors),
         )
 
     def dispatch(self, t: float, req: ServiceRequest,
@@ -200,51 +301,112 @@ class _EventSimRuntime(_SimRuntimeBase):
         j = decision.server
         spec = self.specs[j]
         st = self.states[j]
-        tx_start = max(t, st.uplink_free_at)
+        tx_start = max(t, self.topo.path_free_at(j, self.link_free))
         tx_dur = spec.tx_time(req.payload_bytes, self._factor(j))
-        st.uplink_free_at = tx_start + tx_dur
-        ready = tx_start + tx_dur
+        end = tx_start + tx_dur
+        # a transfer occupies its whole path
+        for name in self.topo.paths[j]:
+            self.link_free[name] = end
+        st.uplink_free_at = end
+        ready = end
         # the lane is booked at dispatch — the routed request is committed
         # capacity, visible to every later arrival's fresh view — while the
         # events below mark when its phases actually happen
         lanes = self.lane_free[j]
         li = int(np.argmin(lanes))
-        begin = max(ready, lanes[li])
+        lane_prev = lanes[li]
+        begin = max(ready, lane_prev)
         t_inf = self.sim._draw_infer(req, j)
         finish = begin + t_inf
         lanes[li] = finish
-        ctx = (j, tx_dur, ready, begin, t_inf)
+        ctx = _Booking(request=req, j=j, li=li, lane_prev=lane_prev,
+                       tx_dur=tx_dur,
+                       charge_from=t if req.preemptions else req.arrival,
+                       ready=ready, begin=begin, t_inf=t_inf, finish=finish)
+        self._inflight[req.sid] = ctx
         self.loop.push(TxDone(ready, request=req, decision=decision,
                               context=ctx))
         self.loop.push(InferDone(finish, request=req, context=ctx))
 
     def on_tx_done(self, ev: TxDone) -> None:
-        j, tx_dur, ready, _begin, _t_inf = ev.context
-        st = self.states[j]
+        b: _Booking = ev.context
+        st = self.states[b.j]
         # transmission energy accrues over the whole transfer window,
-        # including the congestion queue (paper §2.3)
-        st.e_tx += (ready - ev.request.arrival) * self.specs[j].tx_power
-        st.tx_busy_time += tx_dur
+        # including the congestion queue (paper §2.3); for a preempted
+        # continuation the window starts at the requeue instant — the
+        # pre-preemption window was billed by the first TxDone
+        st.e_tx += (b.ready - b.charge_from) * self.specs[b.j].tx_power
+        st.tx_busy_time += b.tx_dur
+
+    def on_preempt(self, ev: Preempt) -> None:
+        """Return the victim's lane and requeue its remaining work.
+
+        Runs synchronously inside the preemptor's `place`, so the freed
+        lane is visible before the preemptor's dispatch books it. The
+        victim's booking rolls back only if it is still the last booking
+        on its lane; partial decode already burned is charged as wasted
+        inference energy, and the victim re-enters as a fresh Arrival
+        carrying its remaining decode tokens (prefill is redone — KV is
+        dropped on eviction, so preemption is never free)."""
+        b = self._inflight.get(ev.victim)
+        if b is None:
+            return       # victim already finished (or never dispatched)
+        t = ev.time
+        if t < b.ready:
+            # victim still in transit: its payload occupies the path links
+            # and its TxDone will bill the transfer — aborting here would
+            # leave ghost link occupancy and double-charge tx energy, so
+            # only lane-resident (transfer-complete) victims are preempted
+            return
+        lanes = self.lane_free[b.j]
+        if lanes[b.li] != b.finish:
+            # a later booking already stacked onto the victim's lane:
+            # cancelling would free no capacity (the stacked booking's
+            # start was computed from the victim's finish), so refuse —
+            # killing the victim here would be pure wasted work
+            return
+        del self._inflight[ev.victim]
+        b.cancelled = True
+        req = b.request
+        spec = self.specs[b.j]
+        st = self.states[b.j]
+        lanes[b.li] = b.lane_prev if t <= b.begin else t
+        if t > b.begin:
+            # wasted partial decode: the server burned real energy on it
+            done = min(t, b.finish) - b.begin
+            st.e_infer += spec.infer_energy(done)
+            st.busy_time += done / spec.max_concurrency
+            frac_left = max(b.finish - t, 0.0) / b.t_inf
+            remaining = max(1, int(math.ceil(req.output_tokens * frac_left)))
+        else:
+            remaining = req.output_tokens
+        req.output_tokens = remaining
+        req.preemptions += 1
+        self.n_preempted += 1
+        self.loop.push(Arrival(t, requests=(req,)))
 
     def on_infer_done(self, ev: InferDone) -> None:
-        j, tx_dur, ready, begin, t_inf = ev.context
+        b: _Booking = ev.context
+        if b.cancelled:
+            return                       # preempted: the requeue completes
         req = ev.request
-        spec = self.specs[j]
-        st = self.states[j]
+        self._inflight.pop(req.sid, None)
+        spec = self.specs[b.j]
+        st = self.states[b.j]
         finish = ev.time
-        st.busy_time += t_inf / spec.max_concurrency
-        st.e_infer += spec.infer_energy(t_inf)
+        st.busy_time += b.t_inf / spec.max_concurrency
+        st.e_infer += spec.infer_energy(b.t_inf)
         st.tokens_out += req.output_tokens
         st.served += 1
         req.finish = finish
-        req.server = j
+        req.server = b.j
         proc = finish - req.arrival
         out = Outcome(
-            server=j, tx_time=(ready - req.arrival),
-            queue_time=max(begin - ready, 0.0), infer_time=t_inf,
+            server=b.j, tx_time=(b.ready - req.arrival),
+            queue_time=max(b.begin - b.ready, 0.0), infer_time=b.t_inf,
             finish=finish, processing_time=proc,
             success=proc <= req.deadline,
-            energy=tx_dur * spec.tx_power + spec.infer_energy(t_inf))
+            energy=b.tx_dur * spec.tx_power + spec.infer_energy(b.t_inf))
         self.outcomes.append(out)
         self.policy.feedback(req, out)
 
@@ -258,14 +420,26 @@ class Simulator:
     """`slot=0.5` (default) runs the slotted-compat mode; `slot=None` runs
     pure event-driven scheduling. `bw_interval` is the fluctuating
     bandwidth model's resample cadence in event mode (and the pseudo-slot
-    length reported to legacy batch schedulers)."""
+    length reported to legacy batch schedulers).
+
+    `topology` is the network (`repro.cluster.network.LinkTopology`);
+    `None` builds the degenerate one-link-per-server topology around
+    `bandwidth`, which reproduces the legacy per-server model bit-exactly
+    (the frozen golden tests pin this)."""
 
     def __init__(self, specs: Sequence[ServerSpec],
                  bandwidth: Optional[BandwidthModel] = None,
                  slot: Optional[float] = 0.5, seed: int = 0,
-                 bw_interval: float = 0.5):
+                 bw_interval: float = 0.5,
+                 topology: Optional[LinkTopology] = None):
         self.specs = list(specs)
         self.bandwidth = bandwidth or BandwidthModel()
+        self.topology = topology \
+            or LinkTopology.degenerate(self.specs, self.bandwidth)
+        if self.topology.n_servers != len(self.specs):
+            raise ValueError(
+                f"topology routes {self.topology.n_servers} servers but the "
+                f"testbed has {len(self.specs)}")
         self.slot = slot
         self.bw_interval = bw_interval
         rng = np.random.default_rng(seed)
@@ -293,6 +467,7 @@ class Simulator:
             r.class_id = classify(r)
             r.finish = -1.0
             r.server = -1
+            r.preemptions = 0
         if not services:
             return SimResult.empty(policy.name, len(self.specs))
 
@@ -332,15 +507,24 @@ class Simulator:
     def _aggregate(self, name: str, services: List[ServiceRequest],
                    rt: _SimRuntimeBase) -> SimResult:
         outcomes, states = rt.outcomes, rt.states
-        if not outcomes:
-            return SimResult.empty(name, len(self.specs))
-        makespan = max(o.finish for o in outcomes)
+        completed = [o for o in outcomes if not o.rejected]
+        if not completed:
+            res = SimResult.empty(name, len(self.specs))
+            res.n_services = len(services)
+            res.n_rejected = rt.n_rejected
+            res.n_preempted = rt.n_preempted
+            return res
+        makespan = max(o.finish for o in completed)
         for st in states:
             st.finalize_idle(makespan)
 
-        times = np.array([o.processing_time for o in outcomes])
+        # success counts every service (a rejection is an SLO miss);
+        # processing-time stats describe the admitted ones
+        times = np.array([o.processing_time for o in completed])
         succ = np.array([o.success for o in outcomes])
-        tokens = sum(r.prompt_tokens + r.output_tokens for r in services)
+        adm_succ = np.array([o.success for o in completed])
+        tokens = sum(r.prompt_tokens + r.output_tokens for r in services
+                     if r.finish >= 0)
         return SimResult(
             name=name,
             n_services=len(services),
@@ -353,6 +537,9 @@ class Simulator:
             e_infer=sum(st.e_infer for st in states),
             e_idle=sum(st.e_idle for st in states),
             per_server_served=[st.served for st in states],
+            n_rejected=rt.n_rejected,
+            n_preempted=rt.n_preempted,
+            admitted_success_rate=float(np.mean(adm_succ)),
         )
 
     # ------------------------------------------------------------------
@@ -370,15 +557,25 @@ class Simulator:
 
     def _realize(self, req: ServiceRequest, decision: Decision,
                  states: List[ServerState], lane_free: List[List[float]],
-                 factors: List[float]) -> Outcome:
+                 factors: List[float], *,
+                 links: Optional[Dict[str, float]] = None,
+                 path: Optional[Sequence[str]] = None) -> Outcome:
         j = decision.server
         spec = self.specs[j]
         st = states[j]
         # upload over the shared FIFO uplink; the runtime applies the
-        # Decision's dispatch deferral (e.g. FineInfer's batching windows)
+        # Decision's dispatch deferral (e.g. FineInfer's batching windows).
+        # With a link ledger (`links` + the server's `path`) the transfer
+        # serializes on every link it traverses; the legacy per-server
+        # ledger (`st.uplink_free_at`) is the fallback and stays mirrored.
         dispatch = max(req.arrival, decision.defer_until)
-        tx_start = max(dispatch, st.uplink_free_at)
+        free = st.uplink_free_at if links is None \
+            else max(links[name] for name in path)
+        tx_start = max(dispatch, free)
         tx_dur = spec.tx_time(req.payload_bytes, factors[j])
+        if links is not None:
+            for name in path:
+                links[name] = tx_start + tx_dur
         st.uplink_free_at = tx_start + tx_dur
         ready = tx_start + tx_dur
         # transmission energy accrues over the whole transfer window,

@@ -25,6 +25,7 @@ class ServiceRequest:
     # filled by the simulator
     finish: float = -1.0
     server: int = -1
+    preemptions: int = 0     # times this request's lane was reclaimed
 
     @property
     def processing_time(self) -> float:

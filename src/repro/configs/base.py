@@ -9,7 +9,6 @@ Every assigned architecture (and the paper's own deployment models) is a
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
@@ -265,7 +264,6 @@ def _param_count(cfg: ModelConfig, active_only: bool) -> int:
         return total
 
     if cfg.rglru is not None:
-        pat = cfg.rglru.block_pattern
         d_rnn = cfg.rglru.d_rnn or d
         rec_layer = 2 * d * d_rnn + d_rnn * d + 3 * d_rnn + cfg.rglru.d_conv * d_rnn
         attn_layer = attn_params()

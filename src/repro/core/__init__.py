@@ -2,15 +2,15 @@
 collaboration (PerLLM, Alg. 1), the compared baselines, and the unified
 `SchedulingPolicy` API both runtimes drive."""
 from repro.core.api import (
-    ClusterView, Decision, LegacyPolicyAdapter, SchedulerBase,
+    ClusterView, Decision, LegacyPolicyAdapter, RunningTask, SchedulerBase,
     SchedulingPolicy, as_policy, available_policies, drive_slot, make_policy,
     register_policy,
 )
 from repro.core.bandit import CSUCB, CSUCBParams
 from repro.core.runtime import (
     Arrival, BandwidthChange, Deferred, Event, EventLoop, InferDone,
-    InferStart, Runtime, Scenario, TxDone, available_scenarios,
-    make_scenario, register_scenario,
+    InferStart, Preempt, Reject, Runtime, Scenario, TxDone,
+    available_scenarios, make_scenario, register_scenario,
 )
 from repro.core.baselines import AGOD, FineInfer, RewardlessGuidance, make_baselines
 from repro.core.constraints import ConstraintSlacks, evaluate_constraints
@@ -20,9 +20,10 @@ __all__ = [
     "AGOD", "Arrival", "BandwidthChange", "CSUCB", "CSUCBParams",
     "ClusterView", "ConstraintSlacks", "Decision", "Deferred", "Event",
     "EventLoop", "FineInfer", "InferDone", "InferStart",
-    "LegacyPolicyAdapter", "PerLLMScheduler", "RewardlessGuidance",
-    "Runtime", "Scenario", "SchedulerBase", "SchedulingPolicy", "TxDone",
-    "as_policy", "available_policies", "available_scenarios", "drive_slot",
+    "LegacyPolicyAdapter", "PerLLMScheduler", "Preempt", "Reject",
+    "RewardlessGuidance", "Runtime", "RunningTask", "Scenario",
+    "SchedulerBase", "SchedulingPolicy", "TxDone", "as_policy",
+    "available_policies", "available_scenarios", "drive_slot",
     "evaluate_constraints", "make_baselines", "make_policy", "make_scenario",
     "register_policy", "register_scenario",
 ]

@@ -45,25 +45,57 @@ if TYPE_CHECKING:  # type-only: keeps core.api free of upward imports
 class Decision:
     """One request's placement, returned by `SchedulingPolicy.assign`.
 
-    server       index of the chosen server (C4: exactly one per request)
-    defer_until  earliest dispatch time; 0.0 = dispatch on arrival (used by
-                 deferred-batching policies such as FineInfer)
-    infer_scale  multiplicative correction the policy has learned for the
-                 nominal inference-time model on this server; the runtime
-                 commits lane residuals scaled by it
-    slacks       per-constraint slack diagnostics (C1/C2/C3) at decision
-                 time, if the policy evaluated them — purely observational
+    server          index of the chosen server (C4: exactly one per
+                    request; for a rejection it names the server the
+                    policy *would* have used — learners need an arm index)
+    defer_until     earliest dispatch time; 0.0 = dispatch on arrival (used
+                    by deferred-batching policies such as FineInfer)
+    infer_scale     multiplicative correction the policy has learned for
+                    the nominal inference-time model on this server; the
+                    runtime commits lane residuals scaled by it
+    slacks          per-constraint slack diagnostics (C1/C2/C3) at decision
+                    time, if the policy evaluated them — observational
+    admit           False = admission control sheds the request: the
+                    runtime emits a rejected Outcome (SLO-violation cost,
+                    zero server energy) instead of queueing it
+    preempt_victim  sid of a running request whose batch lane should be
+                    returned before this request dispatches; the victim's
+                    remaining decode tokens are requeued as a new Arrival
     """
 
     server: int
     defer_until: float = 0.0
     infer_scale: float = 1.0
     slacks: Optional["ConstraintSlacks"] = None
+    admit: bool = True
+    preempt_victim: Optional[int] = None
 
 
 # ---------------------------------------------------------------------------
 # ClusterView — the one observation object both runtimes build
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RunningTask:
+    """One in-flight request, as exposed to preemption-capable policies.
+
+    `finish_est` is the runtime's current completion estimate for the
+    booked lane; `deadline_at` is the absolute SLO instant
+    (arrival + deadline). A task with `finish_est > deadline_at` is doomed
+    — preempting it frees its lane without costing an extra SLO miss.
+    """
+
+    sid: int
+    server: int
+    class_id: int
+    deadline_at: float
+    begin: float        # when its lane booking starts (may be in the past)
+    finish_est: float
+
+    @property
+    def doomed(self) -> bool:
+        return self.finish_est > self.deadline_at
 
 
 @dataclasses.dataclass
@@ -76,6 +108,19 @@ class ClusterView:
     runtime's `commit` after each Decision, so later requests in the same
     slot see the reduced capacity (the combinatorial super-arm accounting).
     Hidden runtime state (efficiency, noise) is NOT here.
+
+    Per-server `bw_factor` / `uplink_free_at` are *path-effective* values
+    when the runtime models a `LinkTopology` (bottleneck bandwidth over
+    the server's link path, latest path-link backlog), so the nominal
+    predictors work unchanged. Topology-aware policies can additionally
+    read the per-link fields:
+
+    link_bw     observed bits/s per named link (capacity × factor × scale)
+    link_queue  seconds of serialized backlog per named link
+    paths       link names each server's ingress traffic traverses
+    running     per-server in-flight tasks (`RunningTask`) — what a
+                preemption-capable policy may name as `preempt_victim`;
+                None when the runtime does not support preemption
     """
 
     t: float
@@ -83,6 +128,10 @@ class ClusterView:
     bw_factor: List[float]
     uplink_free_at: List[float]
     lane_free: List[List[float]]
+    link_bw: Optional[Dict[str, float]] = None
+    link_queue: Optional[Dict[str, float]] = None
+    paths: Optional[Sequence[Sequence[str]]] = None
+    running: Optional[List[List[RunningTask]]] = None
 
     @property
     def n_servers(self) -> int:
@@ -278,7 +327,9 @@ def drive_slot(policy, arrivals: Sequence[Any], view: ClusterView,
     decisions: List[Decision] = []
     for req in arrivals:
         d = policy.assign(req, view)
-        view.apply(req, d)
+        if d.admit:
+            # rejected requests consume no capacity: no residual commit
+            view.apply(req, d)
         decisions.append(d)
     return decisions
 
@@ -341,7 +392,7 @@ def _load_builtin_policies() -> None:
 
 
 __all__ = [
-    "ClusterView", "Decision", "LegacyPolicyAdapter", "SchedulerBase",
-    "SchedulingPolicy", "as_policy", "available_policies", "drive_slot",
-    "make_policy", "register_policy",
+    "ClusterView", "Decision", "LegacyPolicyAdapter", "RunningTask",
+    "SchedulerBase", "SchedulingPolicy", "as_policy", "available_policies",
+    "drive_slot", "make_policy", "register_policy",
 ]

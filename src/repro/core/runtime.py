@@ -17,8 +17,15 @@ Event taxonomy
     TxDone           a request's uplink transfer completed
     InferStart       a batch lane began prefill/decode for a request
     InferDone        inference finished; the realized Outcome exists
+    Reject           admission control shed the request (Decision.admit
+                     False): the runtime emits a rejected Outcome with an
+                     SLO-violation cost instead of queueing it forever
+    Preempt          a running victim's batch lane is returned
+                     (Decision.preempt_victim); its remaining decode
+                     tokens are requeued as a new Arrival
     BandwidthChange  a link's bandwidth factor changed (model resample or
-                     scenario-injected multiplicative scale)
+                     scenario-injected multiplicative scale, per server
+                     index or per named topology link)
 
 Ordering: the loop pops by (time, kind-priority, insertion seq). Equal-time
 ties resolve completions before new arrivals (feedback precedes the next
@@ -58,13 +65,46 @@ class BandwidthChange(Event):
     """A link's bandwidth factor changes.
 
     `scale` maps server index -> multiplicative overlay on the bandwidth
-    model's own factor (scenario-injected congestion/outage); `resample`
-    marks the runtime's periodic re-draw of the fluctuating model itself.
+    model's own factor (scenario-injected congestion/outage); `link_scale`
+    does the same for named `LinkTopology` links (runtimes without a
+    topology map unknown names onto nothing); `resample` marks the
+    runtime's periodic re-draw of the fluctuating model itself.
     """
 
     scale: Optional[Dict[int, float]] = None
+    link_scale: Optional[Dict[str, float]] = None
     resample: bool = False
     priority = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Reject(Event):
+    """Admission control shed `request` at `time` (Decision.admit False).
+
+    The runtime's `on_reject` emits a rejected Outcome — success False,
+    an SLO-violation processing-time cost, zero server energy — so the
+    policy's `feedback` still fires and aggregate metrics count the miss.
+    """
+
+    request: Any = None
+    decision: Optional[Decision] = None
+    priority = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Preempt(Event):
+    """`request` (the preemptor) reclaims `victim`'s batch lane at `time`.
+
+    Handled synchronously inside `Runtime.place`, *before* the preemptor
+    dispatches, so the victim's lane is provably free by the preemptor's
+    `InferStart`. The runtime requeues the victim's remaining decode
+    tokens as a new Arrival at `time`.
+    """
+
+    victim: Any = None          # victim request sid
+    request: Any = None         # the preemptor
+    decision: Optional[Decision] = None
+    priority = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,6 +232,12 @@ class Runtime:
     def on_bandwidth_change(self, ev: BandwidthChange) -> None:
         pass
 
+    def on_reject(self, ev: Reject) -> None:
+        pass
+
+    def on_preempt(self, ev: Preempt) -> None:
+        pass
+
     # ---------------- generic driving ------------------------------------
     def slot_index(self, t: float) -> int:
         """Slot ordinal passed to legacy batch schedulers; event-driven
@@ -207,7 +253,18 @@ class Runtime:
             self.place(ev.time, req, d)
 
     def place(self, t: float, request, decision: Decision) -> None:
-        """Apply one Decision: dispatch now, or schedule its window."""
+        """Apply one Decision: reject, preempt-then-dispatch, or defer.
+
+        Rejections and preemptions are routed through `handle` as typed
+        events — synchronously, so a preempted victim's lane is free
+        before the preemptor's dispatch books it, and a rejection's
+        feedback precedes any later arrival's `assign`."""
+        if not decision.admit:
+            self.handle(Reject(t, request=request, decision=decision))
+            return
+        if decision.preempt_victim is not None:
+            self.handle(Preempt(t, victim=decision.preempt_victim,
+                                request=request, decision=decision))
         when = max(t, decision.defer_until)
         if when > t:
             self.defer(t, when, request, decision)
@@ -225,6 +282,7 @@ class Runtime:
         Arrival: "on_arrival", Deferred: "on_deferred",
         TxDone: "on_tx_done", InferStart: "on_infer_start",
         InferDone: "on_infer_done", BandwidthChange: "on_bandwidth_change",
+        Reject: "on_reject", Preempt: "on_preempt",
     }
 
     def handle(self, ev: Event) -> None:
@@ -368,6 +426,56 @@ class TraceScenario(Scenario):
         return tiled[:n]
 
 
+class OverloadScenario(Scenario):
+    """Sustained λ above aggregate service capacity.
+
+    Arrivals are Poisson at `factor ×` the nominal rate for the whole run
+    — unlike `burst` there is no calm phase to drain the backlog, so
+    queues grow without bound and *every* admitted-by-default request
+    eventually misses its SLO. This is the regime where admission control
+    is the only way to keep admitted-request SLOs (paper §3.3's
+    constraint-satisfaction claim under overload)."""
+
+    name = "overload"
+
+    def __init__(self, factor: float = 3.0):
+        assert factor > 0
+        self.factor = factor
+
+    def arrival_times(self, n: int, rate: float, rng) -> np.ndarray:
+        return np.cumsum(rng.exponential(1.0 / (rate * self.factor), size=n))
+
+
+class CloudOutageScenario(Scenario):
+    """Mid-run cloud-uplink outage on the link topology.
+
+    Scales the shared `edge-cloud` backhaul (and the `user-cloud` access
+    link) to `scale` over the middle `[start_frac, stop_frac]` window —
+    the link-topology generalization of `bwdrop`: with a `LinkTopology`
+    every cloud-bound transfer contends on the dying backhaul; without
+    one the per-server fallback scales the last server's link."""
+
+    name = "cloud-outage"
+
+    def __init__(self, scale: float = 0.05, start_frac: float = 0.3,
+                 stop_frac: float = 0.6):
+        self.scale = scale
+        self.start_frac = start_frac
+        self.stop_frac = stop_frac
+
+    def bandwidth_events(self, horizon: float,
+                         n_servers: int) -> List[BandwidthChange]:
+        links_down = {"edge-cloud": self.scale, "user-cloud": self.scale}
+        links_up = {name: 1.0 for name in links_down}
+        j = n_servers - 1          # per-server fallback: the cloud
+        return [
+            BandwidthChange(self.start_frac * horizon,
+                            scale={j: self.scale}, link_scale=links_down),
+            BandwidthChange(self.stop_frac * horizon,
+                            scale={j: 1.0}, link_scale=links_up),
+        ]
+
+
 class BandwidthDropScenario(Scenario):
     """Poisson arrivals plus a mid-run uplink degradation: the last server
     (the cloud, by testbed convention) drops to `scale` over the middle
@@ -429,11 +537,15 @@ register_scenario("burst", BurstScenario)
 register_scenario("diurnal", DiurnalScenario)
 register_scenario("trace", TraceScenario)
 register_scenario("bwdrop", BandwidthDropScenario)
+register_scenario("overload", OverloadScenario)
+register_scenario("cloud-outage", CloudOutageScenario)
 
 
 __all__ = [
     "Arrival", "BandwidthChange", "BandwidthDropScenario", "BurstScenario",
-    "Deferred", "DiurnalScenario", "Event", "EventLoop", "InferDone",
-    "InferStart", "PoissonScenario", "Runtime", "Scenario", "TraceScenario",
-    "TxDone", "available_scenarios", "make_scenario", "register_scenario",
+    "CloudOutageScenario", "Deferred", "DiurnalScenario", "Event",
+    "EventLoop", "InferDone", "InferStart", "OverloadScenario",
+    "PoissonScenario", "Preempt", "Reject", "Runtime", "Scenario",
+    "TraceScenario", "TxDone", "available_scenarios", "make_scenario",
+    "register_scenario",
 ]

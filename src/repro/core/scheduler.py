@@ -31,11 +31,23 @@ E_SCALE = 100.0
 
 @register_policy("perllm")
 class PerLLMScheduler(SchedulingPolicy):
+    """`admission=True` turns the C1 failover into admission control: when
+    no server can satisfy the constraints, the request is shed
+    (`Decision.admit=False`) instead of being dumped on the least-bad
+    server — under sustained overload this is what keeps *admitted*
+    requests inside their SLOs. `preempt=True` additionally lets an
+    otherwise-infeasible request reclaim a lane from a running task that
+    is already doomed to miss its own deadline (`Decision.preempt_victim`,
+    event-driven runtimes only)."""
+
     name = "PerLLM"
 
     def __init__(self, n_servers: int, params: Optional[CSUCBParams] = None,
-                 seed: int = 0):
+                 seed: int = 0, admission: bool = False,
+                 preempt: bool = False):
         self.n_servers = n_servers
+        self.admission = admission
+        self.preempt = preempt
         self.bandit = CSUCB(N_CLASSES, n_servers, params, seed=seed)
         # learned per-(class, server) processing-time ratio vs the nominal
         # analytic estimate (captures hidden efficiency + congestion)
@@ -69,6 +81,8 @@ class PerLLMScheduler(SchedulingPolicy):
             s = evaluate_constraints(req, j, view, predicted_time=d_hat)
             slacks.append(s)
             feasible[j] = s.satisfied
+        admit = True
+        victim = None
         if feasible.any():
             j = self.bandit.select(req.class_id, feasible)
         else:
@@ -76,17 +90,63 @@ class PerLLMScheduler(SchedulingPolicy):
             # the most resource-rich one, i.e. minimum predicted time
             j = int(np.argmin([self.predicted_time(req, jj, view)
                                for jj in range(self.n_servers)]))
+            if self.preempt:
+                victim = self._find_victim(req, view)
+            if victim is not None:
+                j = victim.server
+            elif self.admission:
+                # admission control: shedding beats dumping doomed work on
+                # the least-bad server — the runtime emits the rejected
+                # Outcome (SLO-violation cost) and frees no capacity
+                admit = False
         self._pending_slacks[req.sid] = slacks[j]
         self._nominal_pred[req.sid] = self.predicted_time(req, j, view) \
             / self.SAFETY
         self._last_nominal_infer[req.sid] = view.predict_infer(req, j)
         return Decision(server=j,
                         infer_scale=float(self.infer_ratio[req.class_id, j]),
-                        slacks=slacks[j])
+                        slacks=slacks[j], admit=admit,
+                        preempt_victim=None if victim is None
+                        else victim.sid)
+
+    def _find_victim(self, req, view: ClusterView):
+        """A running task worth preempting for `req`, or None.
+
+        Only *doomed* tasks qualify (their estimated finish already misses
+        their own deadline — evicting them costs no extra SLO violation),
+        and only where `req` could actually meet its deadline once the
+        lane is free (transmission + inference, no lane wait). Among
+        qualifying victims, reclaim the most-doomed lane first."""
+        if not view.running:
+            return None
+        cls = req.class_id
+        best, best_over = None, 0.0
+        for tasks in view.running:
+            for task in tasks:
+                if not task.doomed or task.sid == req.sid:
+                    continue
+                j = task.server
+                d_no_queue = (view.predict_tx(req, j)
+                              + view.predict_infer(req, j)
+                              * self.infer_ratio[cls, j]) \
+                    * self.time_ratio[cls, j] * self.SAFETY
+                if d_no_queue > req.deadline:
+                    continue
+                over = task.finish_est - task.deadline_at
+                if over > best_over:
+                    best, best_over = task, over
+        return best
 
     def feedback(self, req, out) -> None:
         slacks = self._pending_slacks.pop(req.sid, None)
         nominal = self._nominal_pred.pop(req.sid, None)
+        if getattr(out, "rejected", False):
+            # the SLO-violation cost of a shed request is a system metric,
+            # not an observation: nothing ran, so there is no realized
+            # time/energy to learn from (and a zero infer_time would
+            # poison the efficiency estimators)
+            self._last_nominal_infer.pop(req.sid, None)
+            return
         cls, j = req.class_id, out.server
 
         # realized constraint slack (C1 realized; C2/C3 from decision time)

@@ -7,7 +7,6 @@ when `interpret=None` (auto) and the backend is CPU.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

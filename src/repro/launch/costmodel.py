@@ -16,11 +16,9 @@ footprints and the collective schedule.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
+from typing import Dict
 
 import jax
-import numpy as np
-from jax import core as jcore
 
 
 def _aval_bytes(aval) -> float:

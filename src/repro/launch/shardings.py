@@ -15,10 +15,7 @@ Cache rules (name + shape based, divisibility-checked):
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig

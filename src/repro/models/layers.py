@@ -15,7 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import MLAConfig, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.models.parallel import ParallelContext
 
 

@@ -6,17 +6,14 @@ arrays are ever materialized for the full-size configs.
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.models.parallel import ParallelContext, cpu_context
+from repro.models.parallel import ParallelContext
 
 
 # ---------------------------------------------------------------------------

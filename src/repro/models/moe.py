@@ -165,7 +165,6 @@ def moe_layer_ep_a2a(p, x, *, cfg: ModelConfig, ctx: ParallelContext,
                                   capacity_factor=capacity_factor)
     b, s, d = x.shape
     k = cfg.top_k
-    e_loc = e // m
     # local token count: batch over data axes, seq over model (seq-parallel)
     bdiv = ctx.batch_size_divisor if b % ctx.batch_size_divisor == 0 else 1
     s_loc = s // m if s % m == 0 else s

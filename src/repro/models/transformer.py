@@ -16,9 +16,7 @@ O(layers)), and an optional ``tail``. Examples:
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -320,7 +318,6 @@ def run_encoder(params, frames, *, cfg: ModelConfig, ctx: ParallelContext):
     """frames: (B, S_enc, D) stub conv-frontend embeddings."""
     x = frames + sinusoidal_positions(frames.shape[1],
                                       cfg.d_model).astype(frames.dtype)
-    spec = LayerSpec("attn")
 
     def body(x, p):
         h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)

@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -133,6 +133,20 @@ class ServingEngine:
             self.cur_tokens[slot] = tok
             self.slot_req[slot] = req
             self._maybe_finish(slot)
+
+    def evict(self, slot: int) -> Optional[Request]:
+        """Preempt the request occupying `slot`, returning its lane.
+
+        The request is detached un-finished (its partial generation is
+        kept on the object, its KV cache is dropped — stale cache rows are
+        harmless, the next admission overwrites them); the caller decides
+        whether to resubmit the remaining tokens here or elsewhere."""
+        req = self.slot_req[slot]
+        if req is None:
+            return None
+        self.slot_req[slot] = None
+        req.slot = -1
+        return req
 
     def _maybe_finish(self, slot: int) -> None:
         req = self.slot_req[slot]

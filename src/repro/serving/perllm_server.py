@@ -29,12 +29,14 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.cluster.network import BandwidthModel
+from repro.cluster.network import BandwidthModel, LinkStateMixin, LinkTopology
 from repro.cluster.server import ServerSpec
-from repro.cluster.simulator import Outcome
+from repro.cluster.simulator import Outcome, rejected_outcome
 from repro.cluster.workload import ServiceRequest, classify
-from repro.core.api import ClusterView, Decision
-from repro.core.runtime import Arrival, InferStart, Runtime, TxDone
+from repro.core.api import ClusterView, Decision, RunningTask
+from repro.core.runtime import (
+    Arrival, BandwidthChange, InferStart, Preempt, Reject, Runtime, TxDone,
+)
 from repro.core.scheduler import PerLLMScheduler
 from repro.serving.engine import Request, ServingEngine
 
@@ -65,26 +67,34 @@ class ServedRequest:
         return self.done and self.latency <= self.service.deadline
 
 
-class PerLLMServer(Runtime):
+class PerLLMServer(Runtime, LinkStateMixin):
     def __init__(self, specs: Sequence[ServerSpec],
                  engines: Sequence[ServingEngine],
                  scheduler=None, slot: float = 0.5,
-                 bandwidth: Optional[BandwidthModel] = None):
+                 bandwidth: Optional[BandwidthModel] = None,
+                 topology: Optional[LinkTopology] = None):
         assert len(specs) == len(engines)
         self.scheduler = scheduler or PerLLMScheduler(len(specs))
         super().__init__(self.scheduler)
         self.specs = list(specs)
         self.engines = list(engines)
         self.bandwidth = bandwidth or BandwidthModel()
+        # the fleet's network: named links + per-server paths (defaults to
+        # the degenerate one-private-link-per-server legacy model); link
+        # occupancy is advanced by each dispatched request and shared
+        # across steps (the fleet's links are stateful), `uplink_free_at`
+        # mirrors each server's path for observers
+        self.init_link_state(topology
+                             or LinkTopology.degenerate(self.specs,
+                                                        self.bandwidth))
+        assert self.topology.n_servers == len(self.specs)
         # `slot` survives only as the bandwidth model's sampling cadence;
         # execution itself is event-driven
         self.slot = slot
         # per-slot factor cache: the factor the policy observed in a view
         # is the factor dispatch realizes (a fluctuating model's RNG
         # advances per draw, so repeated draws would diverge)
-        self._factor_cache = (-1, [1.0] * len(specs))
-        # real uplink occupancy: advanced by each dispatched request,
-        # shared across steps (the fleet's links are stateful)
+        self._factor_cache = (-1, {n: 1.0 for n in self.topology.links})
         self.uplink_free_at = [0.0] * len(specs)
         # per-engine logical clocks: each engine ticks at its own analytic
         # decode-step cadence, driven by InferStart events
@@ -102,6 +112,8 @@ class PerLLMServer(Runtime):
         self._deferred: List[ServedRequest] = []
         self.active: Dict[int, ServedRequest] = {}
         self.completed: List[ServedRequest] = []
+        self.rejected: List[ServedRequest] = []
+        self.n_preempted = 0
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
@@ -122,29 +134,51 @@ class PerLLMServer(Runtime):
     # ------------------------------------------------------------------
     # Runtime contract: fresh views from real fleet state
     # ------------------------------------------------------------------
-    def _bw_factor(self, t: float, j: int) -> float:
+    def _link_factors(self, t: float) -> Dict[str, float]:
         k = int(t / self.slot)
         if self._factor_cache[0] != k:
-            self._factor_cache = (
-                k, self.bandwidth.factors(k, len(self.specs)))
-        return self._factor_cache[1][j]
+            self._factor_cache = (k, self.topology.factors(k))
+        return self._factor_cache[1]
+
+    def _bw_factor(self, t: float, j: int) -> float:
+        return self.topology.server_factor(
+            j, self.specs[j].bandwidth, self._link_factors(t),
+            self.link_scale)
+
+    def on_bandwidth_change(self, ev: BandwidthChange) -> None:
+        self.apply_bandwidth_scales(ev)
 
     def build_view(self, t: float) -> ClusterView:
-        """Snapshot real fleet state: live uplink residuals, the bandwidth
-        model's current per-link factor, and batch-lane occupancy from each
-        active request's actual remaining decode tokens (queued and
-        in-transit requests stack on as nominal bookings)."""
+        """Snapshot real fleet state: live link residuals, the topology's
+        current per-link factor, and batch-lane occupancy from each active
+        request's actual remaining decode tokens (queued and in-transit
+        requests stack on as nominal bookings). Engine-resident requests
+        are exposed as `running` tasks so preemption-capable policies can
+        name a `preempt_victim`."""
+        factors = self._link_factors(t)
         lane_free = []
+        running: List[List[RunningTask]] = []
+        by_engine_req = {id(sr.engine_req): sr for sr in self.active.values()
+                         if sr.engine_req is not None}
         for j, eng in enumerate(self.engines):
             spec = self.specs[j]
             step_t = spec.decode_step_time()
             base = max(self.engine_clock[j], t)
             lanes = [t] * spec.max_concurrency
+            tasks: List[RunningTask] = []
             for slot in eng.active_slots:
                 r = eng.slot_req[slot]
                 remaining = max(r.max_new_tokens - len(r.generated), 0)
                 li = int(np.argmin(lanes))
                 lanes[li] = base + remaining * step_t
+                sr = by_engine_req.get(id(r))
+                if sr is not None:
+                    svc = sr.service
+                    tasks.append(RunningTask(
+                        sid=svc.sid, server=j, class_id=svc.class_id,
+                        deadline_at=svc.arrival + svc.deadline,
+                        begin=sr.admit_clock if sr.admit_clock >= 0 else t,
+                        finish_est=lanes[li]))
             for r in eng.queue:
                 li = int(np.argmin(lanes))
                 lanes[li] = max(lanes[li], base) + spec.service_time(
@@ -156,12 +190,17 @@ class PerLLMServer(Runtime):
                         + spec.service_time(len(sr._prompt),
                                             sr.service.output_tokens)
             lane_free.append(lanes)
+            running.append(tasks)
+        topo = self.topology
         return ClusterView(
             t=t, specs=self.specs,
             bw_factor=[self._bw_factor(t, j)
                        for j in range(len(self.specs))],
-            uplink_free_at=list(self.uplink_free_at),
-            lane_free=lane_free)
+            uplink_free_at=[topo.path_free_at(j, self.link_free)
+                            for j in range(len(self.specs))],
+            lane_free=lane_free,
+            running=running,
+            **self.link_view_kwargs(t, factors))
 
     def _view(self) -> ClusterView:
         """Deprecated alias: the view at the current clock."""
@@ -188,14 +227,18 @@ class PerLLMServer(Runtime):
 
     def dispatch(self, t: float, svc: ServiceRequest,
                  decision: Decision) -> None:
-        """Start the uplink transfer; the engine takes over at TxDone."""
+        """Start the uplink transfer; the engine takes over at TxDone.
+        The transfer serializes on every link of the server's path."""
         sr = self._by_sid[svc.sid]
         if sr in self._deferred:
             self._deferred.remove(sr)
         j = decision.server
         spec = self.specs[j]
-        tx_start = max(t, self.uplink_free_at[j])
+        path = self.topology.paths[j]
+        tx_start = max(t, self.topology.path_free_at(j, self.link_free))
         tx_dur = spec.tx_time(svc.payload_bytes, self._bw_factor(t, j))
+        for name in path:
+            self.link_free[name] = tx_start + tx_dur
         self.uplink_free_at[j] = tx_start + tx_dur
         ready = tx_start + tx_dur
         sr.tx_dur = tx_dur
@@ -203,6 +246,47 @@ class PerLLMServer(Runtime):
         sr.dispatch_clock = ready
         self.active[svc.sid] = sr
         self.loop.push(TxDone(ready, request=svc, decision=decision))
+
+    def on_reject(self, ev: Reject) -> None:
+        """Admission control shed the submission: emit the rejected
+        Outcome (SLO-violation cost, zero fleet energy) and retire it."""
+        svc = ev.request
+        sr = self._by_sid.pop(svc.sid)
+        sr.server = -1
+        sr.decision = ev.decision
+        self.policy.feedback(svc, rejected_outcome(svc, ev.decision,
+                                                   ev.time))
+        self.rejected.append(sr)
+
+    def on_preempt(self, ev: Preempt) -> None:
+        """Evict the victim from its engine and requeue its remaining
+        decode tokens as a fresh Arrival (prefill is redone — the KV cache
+        is dropped with the slot, so preemption is never free)."""
+        sr = self.active.get(ev.victim)
+        if sr is None or sr.engine_req is None:
+            return            # finished, rejected, or still in transit
+        eng = self.engines[sr.server]
+        r = sr.engine_req
+        if r.slot >= 0:
+            eng.evict(r.slot)
+            remaining = max(r.max_new_tokens - len(r.generated), 1)
+        elif r in eng.queue:
+            eng.queue.remove(r)
+            remaining = r.max_new_tokens
+        else:
+            return            # completing this very tick — too late
+        svc = sr.service
+        svc.output_tokens = remaining
+        svc.preemptions += 1
+        sr.engine_req = None
+        sr.server = -1
+        sr.decision = None
+        sr.dispatch_clock = -1.0
+        sr.admit_clock = -1.0
+        del self.active[svc.sid]
+        self._pending.append(sr)
+        self.n_preempted += 1
+        self.loop.push(Arrival(ev.time, requests=(svc,)))
 
     def on_tx_done(self, ev: TxDone) -> None:
         sr = self.active[ev.request.sid]
@@ -287,10 +371,13 @@ class PerLLMServer(Runtime):
     def stats(self) -> dict:
         done = self.completed
         if not done:
-            return {"served": 0}
+            return {"served": 0, "rejected": len(self.rejected),
+                    "preempted": self.n_preempted}
         lat = np.array([sr.latency for sr in done])
         return {
             "served": len(done),
+            "rejected": len(self.rejected),
+            "preempted": self.n_preempted,
             "deadline_met": float(np.mean([sr.met_deadline for sr in done])),
             "mean_latency": float(lat.mean()),
             "per_server": np.bincount(

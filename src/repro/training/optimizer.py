@@ -7,7 +7,7 @@ it leaf-for-leaf.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

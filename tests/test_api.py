@@ -27,7 +27,7 @@ from repro.cluster import (
 )
 from repro.cluster.workload import N_CLASSES
 from repro.core import (
-    CSUCB, CSUCBParams, Decision, LegacyPolicyAdapter, PerLLMScheduler,
+    CSUCB, CSUCBParams, Decision, LegacyPolicyAdapter,
     SchedulingPolicy, as_policy, available_policies, drive_slot, make_policy,
 )
 from repro.core.bandit import CSUCB as _CSUCB
@@ -167,8 +167,8 @@ def test_fineinfer_defer_applied_by_runtime():
     specs = paper_testbed()
     services = [copy.copy(s) for s in generate_workload(80, seed=1)]
     sim = Simulator(specs, BandwidthModel(), seed=1)
-    res = sim.run(services, make_policy("fineinfer", len(specs),
-                                        batch_window=1.0))
+    sim.run(services, make_policy("fineinfer", len(specs),
+                                  batch_window=1.0))
     # every request finishes after its batching-window boundary
     for r in sorted(services, key=lambda r: r.sid):
         assert r.finish >= math.ceil(r.arrival / 1.0) * 1.0

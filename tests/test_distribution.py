@@ -7,7 +7,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 
 def _run(script: str, devices: int = 8, timeout: int = 420):
@@ -87,7 +86,7 @@ def test_moe_ep_a2a_matches_dense():
         # gradients flow through the a2a
         g = jax.grad(lambda p, x: jnp.sum(moe_layer_ep_a2a(
             p, x, cfg=cfg, ctx=ctx, capacity_factor=8.0)[0] ** 2))(p, x)
-        assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+        assert all(bool(jnp.isfinite(leaf).all()) for leaf in jax.tree.leaves(g))
         print('ep_a2a OK')
     """)
     assert "ep_a2a OK" in out

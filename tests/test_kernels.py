@@ -142,7 +142,6 @@ def test_ssd_chunked_matches_recurrence():
 
 def test_rglru_scan_matches_recurrence():
     from repro.models.rglru import _gates
-    import repro.models.rglru as RG
     dr = 16
     p = {"w_a": jnp.zeros(dr), "b_a": jnp.zeros(dr),
          "w_x": jnp.zeros(dr), "b_x": jnp.zeros(dr),

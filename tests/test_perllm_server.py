@@ -28,8 +28,8 @@ def _server():
 
 def test_server_serves_all_requests():
     srv = _server()
-    reqs = [srv.submit(list(range(3, 9 + i % 4)), max_new_tokens=3,
-                       deadline=4.0) for i in range(10)]
+    _reqs = [srv.submit(list(range(3, 9 + i % 4)), max_new_tokens=3,
+                        deadline=4.0) for i in range(10)]
     done = srv.run_until_idle()
     assert len(done) == 10
     assert all(len(sr.engine_req.generated) == 3 for sr in done)

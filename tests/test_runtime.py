@@ -20,7 +20,7 @@ from repro.cluster import (
 from repro.cluster.workload import classify
 from repro.core import (
     Arrival, BandwidthChange, Decision, Deferred, EventLoop, InferDone,
-    InferStart, SchedulingPolicy, TxDone, as_policy, available_scenarios,
+    SchedulingPolicy, TxDone, as_policy, available_scenarios,
     drive_slot, make_policy, make_scenario,
 )
 from repro.core.runtime import TraceScenario

@@ -12,13 +12,12 @@ Invariants from the paper's formulation (Eq. 2):
 import copy
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.cluster import (
     BandwidthModel, Simulator, SlotView, generate_workload, paper_testbed,
 )
-from repro.cluster.workload import N_CLASSES, ServiceRequest, classify
+from repro.cluster.workload import ServiceRequest, classify
 from repro.core import CSUCB, CSUCBParams, PerLLMScheduler, make_baselines
 from repro.core.constraints import evaluate_constraints
 

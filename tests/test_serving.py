@@ -1,7 +1,6 @@
 """Serving engine: continuous batching, slot reuse, per-slot positions."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.models import cpu_context, decode_step, init_cache, init_params, prefill
@@ -16,8 +15,8 @@ def _params():
 
 def test_engine_completes_all_requests():
     eng = ServingEngine(CFG, _params(), max_batch=3, max_seq=128)
-    reqs = [eng.submit(list(range(5, 12 + i)), max_new_tokens=6)
-            for i in range(7)]
+    _reqs = [eng.submit(list(range(5, 12 + i)), max_new_tokens=6)
+             for i in range(7)]
     done = eng.run_until_idle()
     assert len(done) == 7
     assert all(len(r.generated) == 6 for r in done)

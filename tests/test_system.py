@@ -8,7 +8,6 @@ import copy
 
 import jax
 import numpy as np
-import pytest
 
 from repro.cluster import (
     BandwidthModel, Simulator, generate_workload, paper_testbed,

@@ -1,5 +1,4 @@
 """Training substrate: optimizer math, loop convergence, checkpoints, data."""
-import os
 
 import jax
 import jax.numpy as jnp
