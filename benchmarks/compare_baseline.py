@@ -10,9 +10,11 @@ Usage (what CI runs after the smoke benchmarks)::
 Gated metrics are the quality-style ones (names containing ``success``,
 ``thpt``/``throughput`` or ``goodput`` — higher is better; ``*ratio*``
 names are excluded, since a PerLLM/baseline ratio shrinks when the
-*baseline* improves); the job fails
-if any falls more than ``--tolerance`` (default 5%) below the committed
-baseline. Wall-clock (`us_per_call`) is reported but never gated: CI
+*baseline* improves) plus the paged-KV subsystem's liveness metrics
+(``kv_evictions``, ``*saved*`` — the deterministic smoke run must keep
+exercising KV-preserving preemption and banking resume savings); the job
+fails if any falls more than ``--tolerance`` (default 5%) below the
+committed baseline. Wall-clock (`us_per_call`) is reported but never gated: CI
 runners are too noisy for latency gates. Regenerate the baseline with the
 exact smoke-scale command above after an intentional behavior change.
 """
@@ -22,7 +24,8 @@ import argparse
 import json
 import sys
 
-GATED_TAGS = ("success", "thpt", "throughput", "goodput")
+GATED_TAGS = ("success", "thpt", "throughput", "goodput", "kv_evictions",
+              "saved")
 
 
 def gated(metric_name: str) -> bool:

@@ -126,8 +126,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         ablation_csucb, fig2_motivation, fig4_processing_time,
-        fig5_throughput, fig6_energy, hetero_edges, regret_bound, roofline,
-        table1_success_rate, tpu_cloud,
+        fig5_throughput, fig6_energy, hetero_edges, kv_pressure,
+        regret_bound, roofline, table1_success_rate, tpu_cloud,
     )
     experiments = [
         ("fig2_motivation", fig2_motivation.run),
@@ -137,6 +137,7 @@ def main(argv=None) -> None:
         ("fig6_energy", fig6_energy.run),
         ("regret_bound", regret_bound.run),
         ("ablation_csucb", ablation_csucb.run),
+        ("kv_pressure", kv_pressure.run),
         ("tpu_cloud", tpu_cloud.run),
         ("hetero_edges", hetero_edges.run),
         ("roofline", roofline.run),

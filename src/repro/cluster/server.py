@@ -8,6 +8,8 @@ same roofline logic used for the TPU dry-run, applied to the cluster.
 from __future__ import annotations
 
 import dataclasses
+import math
+
 from repro.configs import get_config
 
 
@@ -24,6 +26,10 @@ class ServerSpec:
     bandwidth: float          # bits/s uplink capacity
     max_concurrency: int      # batch lanes
     weight_bytes_per_param: float = 1.0   # int8 deployment
+    # paged KV-cache pool: 0 blocks = KV memory not modeled (legacy
+    # behavior — capacity is lanes only and preemption always re-prefills)
+    kv_blocks: int = 0        # block-pool size
+    kv_block_tokens: int = 16  # tokens of KV per block
 
     # ------------------------------------------------------------------
     def model_cfg(self):
@@ -54,6 +60,13 @@ class ServerSpec:
     def tx_time(self, payload_bytes: float, share: float = 1.0) -> float:
         """share: fraction of the uplink granted to this transfer."""
         return payload_bytes * 8.0 / (self.bandwidth * max(share, 1e-9))
+
+    def kv_blocks_needed(self, prompt_tokens: int,
+                         output_tokens: int) -> int:
+        """KV blocks a request occupies end-to-end (prompt + all decoded
+        tokens, allocated up front like the paged engine does)."""
+        return max(1, math.ceil((prompt_tokens + output_tokens)
+                                / self.kv_block_tokens))
 
     def infer_energy(self, t_inf: float) -> float:
         """Active-over-idle energy for `t_inf` seconds on one batch lane —

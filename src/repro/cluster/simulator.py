@@ -96,6 +96,9 @@ class SimResult:
     n_rejected: int = 0
     n_preempted: int = 0
     admitted_success_rate: float = 0.0   # SLO rate among admitted requests
+    # paged KV cache (0 when no ServerSpec models a block pool)
+    n_kv_evictions: int = 0              # preemptions that touched KV pages
+    kv_prefill_tokens_saved: int = 0     # prefill skipped via page resume
 
     @property
     def total_energy(self) -> float:
@@ -158,6 +161,8 @@ class _SimRuntimeBase(Runtime, LinkStateMixin):
         self.outcomes: List[Outcome] = []
         self.n_rejected = 0
         self.n_preempted = 0
+        self.n_kv_evictions = 0
+        self.kv_prefill_tokens_saved = 0
 
     def on_bandwidth_change(self, ev: BandwidthChange) -> None:
         self.apply_bandwidth_scales(ev)
@@ -237,6 +242,7 @@ class _Booking:
     t_inf: float
     finish: float
     cancelled: bool = False
+    kv_resumed: bool = False  # decode-only window (pages survived eviction)
 
 
 class _EventSimRuntime(_SimRuntimeBase):
@@ -256,6 +262,14 @@ class _EventSimRuntime(_SimRuntimeBase):
         self._link_factors: Dict[str, float] = \
             {n: 1.0 for n in self.topo.links}
         self._inflight: Dict[int, _Booking] = {}
+        # paged-KV ledger: blocks in use per server, plus the FIFO of
+        # routed requests waiting for their server's pool to free up
+        self._kv_modeled = any(s.kv_blocks > 0 for s in self.specs)
+        self.kv_used = [0] * len(self.specs)
+        self.kv_wait: List[List[tuple]] = [[] for _ in self.specs]
+        # single-use tokens: preemptor sid -> server whose drop_kv
+        # preemption it issued; grants first claim on the freed blocks
+        self._kv_express: Dict[int, int] = {}
         if any(link.fluctuating for link in self.topo.links.values()):
             self._resample_factors(0.0)
 
@@ -274,6 +288,16 @@ class _EventSimRuntime(_SimRuntimeBase):
     def _factor(self, j: int) -> float:
         return self.server_factor(j, self._link_factors)
 
+    def on_reject(self, ev: Reject) -> None:
+        """A previously preempted request shed on requeue must not leak
+        the pages preserved for its resume."""
+        req = ev.request
+        if req.kv_server >= 0 and req.kv_blocks > 0:
+            blocks, j = req.kv_blocks, req.kv_server
+            req.kv_server, req.kv_blocks = -1, 0
+            self._kv_free(j, blocks, ev.time)
+        super().on_reject(ev)
+
     # ---------------- the Runtime contract -------------------------------
     def slot_index(self, t: float) -> int:
         return int(t / self.sim.bw_interval)
@@ -286,6 +310,13 @@ class _EventSimRuntime(_SimRuntimeBase):
                 sid=sid, server=b.j, class_id=b.request.class_id,
                 deadline_at=b.request.arrival + b.request.deadline,
                 begin=b.begin, finish_est=b.finish))
+        kv_kwargs = {}
+        if self._kv_modeled:
+            kv_kwargs = dict(
+                kv_free_blocks=[self.specs[j].kv_blocks - self.kv_used[j]
+                                for j in range(n)],
+                kv_total_blocks=[self.specs[j].kv_blocks
+                                 for j in range(n)])
         return ClusterView(
             t=t, specs=self.specs,
             bw_factor=[self._factor(j) for j in range(n)],
@@ -293,14 +324,79 @@ class _EventSimRuntime(_SimRuntimeBase):
                             for j in range(n)],
             lane_free=[list(lf) for lf in self.lane_free],
             running=running,
+            **kv_kwargs,
             **self.link_view_kwargs(t, self._link_factors),
         )
 
+    # ---------------- paged-KV ledger ------------------------------------
+    def _kv_admit(self, t: float, req: ServiceRequest,
+                  decision: Decision, from_wait: bool = False) -> bool:
+        """Claim KV blocks for `req` on its target server.
+
+        True = blocks held (dispatch may proceed); False = the request
+        joined the server's KV-wait queue (re-dispatched by `_kv_free`
+        when blocks return). The queue is strictly FIFO with head-of-line
+        blocking — a newcomer enqueues behind existing waiters even when
+        its own allocation would fit, matching the paged
+        `ServingEngine._admit` semantics (`from_wait` marks the drain
+        path's own re-dispatches, which must not re-enqueue behind the
+        waiters they precede). A requeued request whose preserved pages
+        live on the *target* server resumes on its existing blocks; pages
+        preserved on any *other* server are freed — they cannot be
+        migrated, which is exactly why cross-server requeues pay full
+        re-prefill."""
+        j = decision.server
+        spec = self.specs[j]
+        if req.kv_server == j and req.kv_blocks > 0:
+            return True                      # resume on the held pages
+        need = spec.kv_blocks_needed(req.prompt_tokens, req.output_tokens)
+        if need > spec.kv_blocks:
+            # physically unfittable on this server (even an empty pool is
+            # too small): a KV-blind policy routed it here, so the runtime
+            # sheds it — crashing the run or queueing forever would lose
+            # the request silently
+            self.handle(Reject(t, request=req, decision=decision))
+            return False
+        express = self._kv_express.pop(req.sid, -1) == j
+        if self.kv_used[j] + need > spec.kv_blocks \
+                or (self.kv_wait[j] and not (from_wait or express)):
+            self.kv_wait[j].append((req, decision))
+            return False
+        self.kv_used[j] += need
+        req.kv_server, req.kv_blocks = j, need
+        return True
+
+    def _kv_free(self, j: int, n_blocks: int, t: float) -> None:
+        """Return blocks to server j's pool and re-dispatch every KV-wait
+        request that now fits (FIFO, head-of-line blocking)."""
+        self.kv_used[j] -= n_blocks
+        assert self.kv_used[j] >= 0, (j, self.kv_used[j])
+        while self.kv_wait[j]:
+            req, decision = self.kv_wait[j][0]
+            need = self.specs[j].kv_blocks_needed(req.prompt_tokens,
+                                                  req.output_tokens)
+            if self.kv_used[j] + need > self.specs[j].kv_blocks:
+                break
+            self.kv_wait[j].pop(0)
+            self.dispatch(t, req, decision, _from_kv_wait=True)
+
     def dispatch(self, t: float, req: ServiceRequest,
-                 decision: Decision) -> None:
+                 decision: Decision, _from_kv_wait: bool = False) -> None:
         j = decision.server
         spec = self.specs[j]
         st = self.states[j]
+        if req.kv_server >= 0 and req.kv_server != j:
+            # pages preserved on another server can't migrate — free them
+            # there even when the *target* doesn't model KV, or the old
+            # server's pool leaks those blocks forever
+            self._kv_free(req.kv_server, req.kv_blocks, t)
+            req.kv_server, req.kv_blocks = -1, 0
+        kv_resumed = False
+        if spec.kv_blocks > 0:
+            kv_resumed = req.kv_server == j and req.kv_blocks > 0
+            if not self._kv_admit(t, req, decision,
+                                  from_wait=_from_kv_wait):
+                return                       # waiting on KV blocks
         tx_start = max(t, self.topo.path_free_at(j, self.link_free))
         tx_dur = spec.tx_time(req.payload_bytes, self._factor(j))
         end = tx_start + tx_dur
@@ -316,13 +412,14 @@ class _EventSimRuntime(_SimRuntimeBase):
         li = int(np.argmin(lanes))
         lane_prev = lanes[li]
         begin = max(ready, lane_prev)
-        t_inf = self.sim._draw_infer(req, j)
+        t_inf = self.sim._draw_infer(req, j, resume=kv_resumed)
         finish = begin + t_inf
         lanes[li] = finish
         ctx = _Booking(request=req, j=j, li=li, lane_prev=lane_prev,
                        tx_dur=tx_dur,
                        charge_from=t if req.preemptions else req.arrival,
-                       ready=ready, begin=begin, t_inf=t_inf, finish=finish)
+                       ready=ready, begin=begin, t_inf=t_inf, finish=finish,
+                       kv_resumed=kv_resumed)
         self._inflight[req.sid] = ctx
         self.loop.push(TxDone(ready, request=req, decision=decision,
                               context=ctx))
@@ -346,8 +443,16 @@ class _EventSimRuntime(_SimRuntimeBase):
         victim's booking rolls back only if it is still the last booking
         on its lane; partial decode already burned is charged as wasted
         inference energy, and the victim re-enters as a fresh Arrival
-        carrying its remaining decode tokens (prefill is redone — KV is
-        dropped on eviction, so preemption is never free)."""
+        carrying its remaining decode tokens.
+
+        On a KV-modeled server the victim's pages survive the eviction by
+        default (`ev.drop_kv` False): they stay allocated, and if the
+        requeue lands back on this server the continuation skips prefill
+        entirely. `drop_kv` frees them on the spot instead — preemption
+        as *memory* relief — at the price of a full re-prefill wherever
+        the victim resumes. Servers without a block pool keep the legacy
+        semantics: KV is dropped with the lane and preemption is never
+        free."""
         b = self._inflight.get(ev.victim)
         if b is None:
             return       # victim already finished (or never dispatched)
@@ -380,6 +485,25 @@ class _EventSimRuntime(_SimRuntimeBase):
             remaining = max(1, int(math.ceil(req.output_tokens * frac_left)))
         else:
             remaining = req.output_tokens
+        if spec.kv_blocks > 0 and req.kv_blocks > 0:
+            started = t > b.begin
+            # a booking that never began holds prefilled pages only if it
+            # was itself a resume (its KV survives from the earlier run)
+            prefilled = started or b.kv_resumed
+            if ev.drop_kv and ev.request is not None:
+                # memory-pressure eviction: the blocks return *undrained*
+                # and the preemptor (dispatched synchronously next, inside
+                # the same `place`) gets first claim on them — that is the
+                # whole point of the drop. Leftovers reach the kv_wait
+                # FIFO at the next free event on this server.
+                self.kv_used[b.j] -= req.kv_blocks
+                req.kv_server, req.kv_blocks = -1, 0
+                self._kv_express[ev.request.sid] = b.j
+            elif ev.drop_kv or not prefilled:
+                self._kv_free(b.j, req.kv_blocks, t)
+                req.kv_server, req.kv_blocks = -1, 0
+            if started:
+                self.n_kv_evictions += 1
         req.output_tokens = remaining
         req.preemptions += 1
         self.n_preempted += 1
@@ -398,6 +522,13 @@ class _EventSimRuntime(_SimRuntimeBase):
         st.e_infer += spec.infer_energy(b.t_inf)
         st.tokens_out += req.output_tokens
         st.served += 1
+        if spec.kv_blocks > 0 and req.kv_blocks > 0:
+            blocks, req.kv_server, req.kv_blocks = req.kv_blocks, -1, 0
+            self._kv_free(b.j, blocks, finish)
+        if b.kv_resumed:
+            # credited at completion, not dispatch: a resume preempted
+            # again before it ran must not bank phantom savings
+            self.kv_prefill_tokens_saved += req.prompt_tokens
         req.finish = finish
         req.server = b.j
         proc = finish - req.arrival
@@ -468,6 +599,8 @@ class Simulator:
             r.finish = -1.0
             r.server = -1
             r.preemptions = 0
+            r.kv_server = -1
+            r.kv_blocks = 0
         if not services:
             return SimResult.empty(policy.name, len(self.specs))
 
@@ -513,6 +646,8 @@ class Simulator:
             res.n_services = len(services)
             res.n_rejected = rt.n_rejected
             res.n_preempted = rt.n_preempted
+            res.n_kv_evictions = rt.n_kv_evictions
+            res.kv_prefill_tokens_saved = rt.kv_prefill_tokens_saved
             return res
         makespan = max(o.finish for o in completed)
         for st in states:
@@ -540,6 +675,8 @@ class Simulator:
             n_rejected=rt.n_rejected,
             n_preempted=rt.n_preempted,
             admitted_success_rate=float(np.mean(adm_succ)),
+            n_kv_evictions=rt.n_kv_evictions,
+            kv_prefill_tokens_saved=rt.kv_prefill_tokens_saved,
         )
 
     # ------------------------------------------------------------------
@@ -547,13 +684,17 @@ class Simulator:
     # these draws/formulas, so slot-vs-event comparisons measure the
     # *scheduling* semantics, never drifting cost models.
     # ------------------------------------------------------------------
-    def _draw_infer(self, req: ServiceRequest, j: int) -> float:
+    def _draw_infer(self, req: ServiceRequest, j: int,
+                    resume: bool = False) -> float:
         """Realized inference time: nominal / hidden efficiency × noise.
-        Consumes one noise draw — call once per realized request."""
+        Consumes one noise draw — call once per realized request.
+        `resume` drops the prefill term: the request's KV pages survived
+        its eviction on this server, so only the remaining decode runs."""
         noise = float(self.noise_rng.lognormal(0.0, 0.08))
-        return (self.specs[j].service_time(req.prompt_tokens,
-                                           req.output_tokens)
-                / self.efficiency[req.class_id, j]) * noise
+        nominal = (self.specs[j].decode_time(req.output_tokens) if resume
+                   else self.specs[j].service_time(req.prompt_tokens,
+                                                   req.output_tokens))
+        return (nominal / self.efficiency[req.class_id, j]) * noise
 
     def _realize(self, req: ServiceRequest, decision: Decision,
                  states: List[ServerState], lane_free: List[List[float]],

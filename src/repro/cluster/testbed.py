@@ -27,14 +27,24 @@ MBPS = 1e6  # bits/s
 
 
 def paper_testbed(edge_arch: str = "llama2-7b", n_edge: int = 5,
-                  cloud_arch: str = "llama2-33b") -> List[ServerSpec]:
+                  cloud_arch: str = "llama2-33b", kv_blocks: int = 0,
+                  cloud_kv_blocks: int = -1,
+                  kv_block_tokens: int = 16) -> List[ServerSpec]:
+    """`kv_blocks > 0` models each edge's paged KV-cache pool (and the
+    cloud's, default 4× the edge pool), making KV memory a schedulable
+    resource; the default 0 keeps the legacy lanes-only capacity model.
+    `kv_block_tokens` defaults to the `ServerSpec`/`ServingEngine` block
+    granularity — keep them equal, C5 slack mixes units otherwise."""
+    if cloud_kv_blocks < 0:
+        cloud_kv_blocks = 4 * kv_blocks
     edges = [
         ServerSpec(
             name=f"edge{i}", kind="edge", arch_id=edge_arch,
             flops=XEON_4214R_FLOPS, mem_bw=XEON_MEM_BW,
             power_active=130.0, power_idle=55.0, tx_power=15.0,
             bandwidth=100 * MBPS, max_concurrency=8,
-            weight_bytes_per_param=1.0)     # int8 edge deployment
+            weight_bytes_per_param=1.0,     # int8 edge deployment
+            kv_blocks=kv_blocks, kv_block_tokens=kv_block_tokens)
         for i in range(n_edge)
     ]
     cloud = ServerSpec(
@@ -42,7 +52,8 @@ def paper_testbed(edge_arch: str = "llama2-7b", n_edge: int = 5,
         flops=A100_FLOPS, mem_bw=A100_MEM_BW,
         power_active=520.0, power_idle=120.0, tx_power=30.0,
         bandwidth=300 * MBPS, max_concurrency=16,
-        weight_bytes_per_param=2.0)         # bf16 cloud deployment
+        weight_bytes_per_param=2.0,         # bf16 cloud deployment
+        kv_blocks=cloud_kv_blocks, kv_block_tokens=kv_block_tokens)
     return edges + [cloud]
 
 

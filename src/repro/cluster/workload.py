@@ -26,6 +26,11 @@ class ServiceRequest:
     finish: float = -1.0
     server: int = -1
     preemptions: int = 0     # times this request's lane was reclaimed
+    # paged-KV bookkeeping: which server currently holds this request's
+    # KV pages (running, or preserved across a preemption) and how many —
+    # a requeue back to `kv_server` resumes decode with zero re-prefill
+    kv_server: int = -1
+    kv_blocks: int = 0
 
     @property
     def processing_time(self) -> float:
@@ -43,8 +48,10 @@ def generate_workload(n_services: int = 10_000, rate: float = 10.0,
     `scenario` (a `repro.core.runtime.Scenario` instance or registered
     name, e.g. ``"burst"``/``"diurnal"``/``"trace"``) shapes *when*
     services arrive; `None` keeps the paper's stationary Poisson process.
-    Per-request requirements are drawn identically either way, so two
-    scenarios at the same seed differ only in their arrival processes.
+    Per-request requirements are drawn identically either way — scenarios
+    that override `shape_requests` (e.g. ``"kv-pressure"``) then transform
+    those base draws in place, from their own rng substream — so two
+    scenarios at the same seed start from the same services.
     """
     rng = np.random.default_rng(seed)
     # the Poisson gaps are always drawn so the requirement draws below sit
@@ -54,12 +61,16 @@ def generate_workload(n_services: int = 10_000, rate: float = 10.0,
         from repro.core.runtime import Scenario, make_scenario
         if isinstance(scenario, str):
             scenario = make_scenario(scenario)
-        if type(scenario).arrival_times is Scenario.arrival_times:
-            # stationary Poisson (incl. scenarios that only inject
-            # bandwidth events, e.g. bwdrop): keep the baseline arrivals so
-            # the scenario's effect can be isolated arrival-for-arrival
+        if (type(scenario).arrival_times is Scenario.arrival_times
+                and type(scenario).shape_requests
+                is Scenario.shape_requests):
+            # stationary Poisson with unshaped requests (incl. scenarios
+            # that only inject bandwidth events, e.g. bwdrop): keep the
+            # baseline arrivals so the scenario's effect can be isolated
+            # arrival-for-arrival
             scenario = None
-    if scenario is None:
+    if scenario is None \
+            or type(scenario).arrival_times is Scenario.arrival_times:
         arrivals = np.cumsum(gaps)
     else:
         arrivals = scenario.arrival_times(
@@ -68,7 +79,7 @@ def generate_workload(n_services: int = 10_000, rate: float = 10.0,
     out = np.clip(rng.lognormal(2.8, 0.6, n_services), 4, 96).astype(int)
     deadline = rng.uniform(2.0, 6.0, n_services)
     payload = rng.uniform(0.7e6, 6.7e6, n_services)  # 0.7–6.7 MB context docs
-    return [
+    services = [
         ServiceRequest(sid=i, arrival=float(arrivals[i]),
                        prompt_tokens=int(prompt[i]),
                        output_tokens=int(out[i]),
@@ -76,6 +87,10 @@ def generate_workload(n_services: int = 10_000, rate: float = 10.0,
                        payload_bytes=float(payload[i]))
         for i in range(n_services)
     ]
+    if scenario is not None:
+        scenario.shape_requests(services,
+                                np.random.default_rng([seed, 0x5D01]))
+    return services
 
 
 # --------------------------------------------------------------------------

@@ -9,8 +9,8 @@ from repro.core.api import (
 from repro.core.bandit import CSUCB, CSUCBParams
 from repro.core.runtime import (
     Arrival, BandwidthChange, Deferred, Event, EventLoop, InferDone,
-    InferStart, Preempt, Reject, Runtime, Scenario, TxDone,
-    available_scenarios, make_scenario, register_scenario,
+    InferStart, KVPressureScenario, Preempt, Reject, Runtime, Scenario,
+    TxDone, available_scenarios, make_scenario, register_scenario,
 )
 from repro.core.baselines import AGOD, FineInfer, RewardlessGuidance, make_baselines
 from repro.core.constraints import ConstraintSlacks, evaluate_constraints
@@ -20,7 +20,8 @@ __all__ = [
     "AGOD", "Arrival", "BandwidthChange", "CSUCB", "CSUCBParams",
     "ClusterView", "ConstraintSlacks", "Decision", "Deferred", "Event",
     "EventLoop", "FineInfer", "InferDone", "InferStart",
-    "LegacyPolicyAdapter", "PerLLMScheduler", "Preempt", "Reject",
+    "KVPressureScenario", "LegacyPolicyAdapter", "PerLLMScheduler",
+    "Preempt", "Reject",
     "RewardlessGuidance", "Runtime", "RunningTask", "Scenario",
     "SchedulerBase", "SchedulingPolicy", "TxDone", "as_policy",
     "available_policies", "available_scenarios", "drive_slot",

@@ -61,6 +61,13 @@ class Decision:
     preempt_victim  sid of a running request whose batch lane should be
                     returned before this request dispatches; the victim's
                     remaining decode tokens are requeued as a new Arrival
+    preempt_drop_kv KV-resume info carried with the preemption: False
+                    (default) keeps the victim's KV pages resident on its
+                    server, so a same-server requeue resumes decode with
+                    zero re-prefill; True frees the pages immediately —
+                    the right call when the preemption is relieving KV
+                    *memory* exhaustion rather than reclaiming a lane
+                    (ignored on servers that don't model KV)
     """
 
     server: int
@@ -69,6 +76,7 @@ class Decision:
     slacks: Optional["ConstraintSlacks"] = None
     admit: bool = True
     preempt_victim: Optional[int] = None
+    preempt_drop_kv: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +129,15 @@ class ClusterView:
     running     per-server in-flight tasks (`RunningTask`) — what a
                 preemption-capable policy may name as `preempt_victim`;
                 None when the runtime does not support preemption
+
+    KV memory — the binding resource for LLM decode on edge hardware — is
+    first-class when the runtime models it (paged engines / `ServerSpec`s
+    with a block pool):
+
+    kv_free_blocks   free KV-cache blocks per server right now
+    kv_total_blocks  each server's block-pool size; an entry of 0 means
+                     that server does not model KV (its kv_free_blocks
+                     entry is meaningless and the KV constraint is vacuous)
     """
 
     t: float
@@ -132,6 +149,8 @@ class ClusterView:
     link_queue: Optional[Dict[str, float]] = None
     paths: Optional[Sequence[Sequence[str]]] = None
     running: Optional[List[List[RunningTask]]] = None
+    kv_free_blocks: Optional[List[int]] = None
+    kv_total_blocks: Optional[List[int]] = None
 
     @property
     def n_servers(self) -> int:

@@ -5,6 +5,9 @@ C2: assigned compute within the server's available compute
 C3: assigned uplink bandwidth within the server's available bandwidth
 C4: exactly one server per service (structural — enforced by the action
     space, every action assigns exactly one server).
+C5: assigned KV-cache blocks within the server's free block pool — only
+    evaluated when the runtime models KV memory (`view.kv_total_blocks`);
+    otherwise the slack is a vacuous 1.0 and nothing changes.
 
 `f(y) = min(normalized slacks)`; a scheme satisfies all constraints iff
 f(y) >= 0. The same function is used (a) as the feasibility filter before
@@ -24,11 +27,12 @@ class ConstraintSlacks:
     time: float        # (D^Δ − D̂) / D^Δ
     compute: float     # (C_max − ΣC) / C_max
     bandwidth: float   # (B_max − ΣB) / B_max
+    kv: float = 1.0    # (KV_free − KV_need) / KV_total; 1.0 = unmodeled
 
     @property
     def f(self) -> float:
         """Eq. 3: minimum normalized slack."""
-        return min(self.time, self.compute, self.bandwidth)
+        return min(self.time, self.compute, self.bandwidth, self.kv)
 
     @property
     def satisfied(self) -> bool:
@@ -66,5 +70,19 @@ def evaluate_constraints(req: ServiceRequest, j: int, view: ClusterView,
     used_bits = backlog_s * bw
     bw_slack = (cap_bits - used_bits - need_bits) / cap_bits
 
+    # C5 — KV memory: blocks this request would pin (prompt + decode)
+    # vs the server's free pool. A request already holding pages on j
+    # (preserved across a preemption) needs nothing new — resuming is free.
+    kv_slack = 1.0
+    totals = view.kv_total_blocks
+    if totals is not None and totals[j] > 0:
+        if getattr(req, "kv_server", -1) == j \
+                and getattr(req, "kv_blocks", 0) > 0:
+            kv_need = 0
+        else:
+            kv_need = spec.kv_blocks_needed(req.prompt_tokens,
+                                            req.output_tokens)
+        kv_slack = (view.kv_free_blocks[j] - kv_need) / totals[j]
+
     return ConstraintSlacks(time=time_slack, compute=compute_slack,
-                            bandwidth=bw_slack)
+                            bandwidth=bw_slack, kv=kv_slack)

@@ -98,12 +98,16 @@ class Preempt(Event):
     Handled synchronously inside `Runtime.place`, *before* the preemptor
     dispatches, so the victim's lane is provably free by the preemptor's
     `InferStart`. The runtime requeues the victim's remaining decode
-    tokens as a new Arrival at `time`.
+    tokens as a new Arrival at `time`. `drop_kv` is the KV-resume info
+    (from `Decision.preempt_drop_kv`): False keeps the victim's KV pages
+    resident — a same-server requeue then resumes without re-prefill —
+    while True frees them immediately (memory-pressure eviction).
     """
 
     victim: Any = None          # victim request sid
     request: Any = None         # the preemptor
     decision: Optional[Decision] = None
+    drop_kv: bool = False
     priority = 1
 
 
@@ -264,7 +268,8 @@ class Runtime:
             return
         if decision.preempt_victim is not None:
             self.handle(Preempt(t, victim=decision.preempt_victim,
-                                request=request, decision=decision))
+                                request=request, decision=decision,
+                                drop_kv=decision.preempt_drop_kv))
         when = max(t, decision.defer_until)
         if when > t:
             self.defer(t, when, request, decision)
@@ -323,16 +328,23 @@ class Scenario:
 
     `arrival_times(n, rate, rng)` returns n monotone arrival timestamps —
     the workload generator calls it so a scenario changes *when* services
-    arrive, not what they ask for. `bandwidth_events(horizon, n_servers)`
-    returns `BandwidthChange` events the runtime injects (multiplicative
-    overlay on the bandwidth model), enabling mid-run congestion/outage
-    studies in either runtime mode.
+    arrive. `shape_requests(services, rng)` may additionally reshape what
+    they ask for (prompt/payload mixes — e.g. `kv-pressure`'s long-context
+    documents); the default is a no-op, so scenarios that only retime
+    arrivals keep request draws bit-identical to the baseline.
+    `bandwidth_events(horizon, n_servers)` returns `BandwidthChange`
+    events the runtime injects (multiplicative overlay on the bandwidth
+    model), enabling mid-run congestion/outage studies in either runtime
+    mode.
     """
 
     name = "poisson"
 
     def arrival_times(self, n: int, rate: float, rng) -> np.ndarray:
         return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+    def shape_requests(self, services: Sequence[Any], rng) -> None:
+        """Mutate per-request requirements in place (default: none)."""
 
     def bandwidth_events(self, horizon: float,
                          n_servers: int) -> List[BandwidthChange]:
@@ -476,6 +488,40 @@ class CloudOutageScenario(Scenario):
         ]
 
 
+class KVPressureScenario(Scenario):
+    """Long-context load that exhausts KV *memory* before bandwidth.
+
+    Prompts are stretched by `prompt_scale` (context-document services —
+    the workload class that pins KV blocks for its whole lifetime) while
+    payloads shrink by `payload_scale` (the documents are token-cheap to
+    ship but block-expensive to hold), and arrivals run at a mild
+    `factor ×` the nominal rate. On a testbed whose `ServerSpec`s model a
+    block pool (`kv_blocks > 0`), admission and preemption are driven by
+    `kv_free_blocks` exhaustion rather than uplink congestion — the edge
+    regime the paged cache exists for. Without KV-modeled specs it is just
+    a heavier, low-payload workload.
+    """
+
+    name = "kv-pressure"
+
+    def __init__(self, prompt_scale: float = 4.0, payload_scale: float = 0.1,
+                 factor: float = 1.5, max_prompt: int = 8192):
+        assert prompt_scale > 0 and factor > 0
+        self.prompt_scale = prompt_scale
+        self.payload_scale = payload_scale
+        self.factor = factor
+        self.max_prompt = max_prompt
+
+    def arrival_times(self, n: int, rate: float, rng) -> np.ndarray:
+        return np.cumsum(rng.exponential(1.0 / (rate * self.factor), size=n))
+
+    def shape_requests(self, services, rng) -> None:
+        for r in services:
+            r.prompt_tokens = int(min(r.prompt_tokens * self.prompt_scale,
+                                      self.max_prompt))
+            r.payload_bytes = float(r.payload_bytes * self.payload_scale)
+
+
 class BandwidthDropScenario(Scenario):
     """Poisson arrivals plus a mid-run uplink degradation: the last server
     (the cloud, by testbed convention) drops to `scale` over the middle
@@ -539,13 +585,14 @@ register_scenario("trace", TraceScenario)
 register_scenario("bwdrop", BandwidthDropScenario)
 register_scenario("overload", OverloadScenario)
 register_scenario("cloud-outage", CloudOutageScenario)
+register_scenario("kv-pressure", KVPressureScenario)
 
 
 __all__ = [
     "Arrival", "BandwidthChange", "BandwidthDropScenario", "BurstScenario",
     "CloudOutageScenario", "Deferred", "DiurnalScenario", "Event",
-    "EventLoop", "InferDone", "InferStart", "OverloadScenario",
-    "PoissonScenario", "Preempt", "Reject", "Runtime", "Scenario",
-    "TraceScenario", "TxDone", "available_scenarios", "make_scenario",
-    "register_scenario",
+    "EventLoop", "InferDone", "InferStart", "KVPressureScenario",
+    "OverloadScenario", "PoissonScenario", "Preempt", "Reject", "Runtime",
+    "Scenario", "TraceScenario", "TxDone", "available_scenarios",
+    "make_scenario", "register_scenario",
 ]

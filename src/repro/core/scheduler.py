@@ -83,7 +83,16 @@ class PerLLMScheduler(SchedulingPolicy):
             feasible[j] = s.satisfied
         admit = True
         victim = None
-        if feasible.any():
+        drop_kv = False
+        kv_home = getattr(req, "kv_server", -1)
+        if 0 <= kv_home < self.n_servers and feasible[kv_home] \
+                and getattr(req, "kv_blocks", 0) > 0:
+            # KV affinity: this request's pages survived a preemption on
+            # kv_home — resuming there skips the whole re-prefill, which
+            # no other feasible server can offer. Requeues are rare, so
+            # bypassing the bandit here costs negligible exploration.
+            j = kv_home
+        elif feasible.any():
             j = self.bandit.select(req.class_id, feasible)
         else:
             # C1 failover (paper §3.1): no feasible server -> assign to
@@ -94,6 +103,11 @@ class PerLLMScheduler(SchedulingPolicy):
                 victim = self._find_victim(req, view)
             if victim is not None:
                 j = victim.server
+                # KV-resume info: when the victim's server is out of KV
+                # *memory* (not just lanes), evicting the lane alone frees
+                # nothing — drop the victim's pages so the preemptor's
+                # blocks fit, accepting the victim's re-prefill elsewhere
+                drop_kv = slacks[j].kv < 0.0
             elif self.admission:
                 # admission control: shedding beats dumping doomed work on
                 # the least-bad server — the runtime emits the rejected
@@ -107,7 +121,8 @@ class PerLLMScheduler(SchedulingPolicy):
                         infer_scale=float(self.infer_ratio[req.class_id, j]),
                         slacks=slacks[j], admit=admit,
                         preempt_victim=None if victim is None
-                        else victim.sid)
+                        else victim.sid,
+                        preempt_drop_kv=drop_kv)
 
     def _find_victim(self, req, view: ClusterView):
         """A running task worth preempting for `req`, or None.
@@ -153,7 +168,8 @@ class PerLLMScheduler(SchedulingPolicy):
         time_slack = (req.deadline - out.processing_time) / req.deadline
         f_y = min(time_slack,
                   slacks.compute if slacks else 0.0,
-                  slacks.bandwidth if slacks else 0.0)
+                  slacks.bandwidth if slacks else 0.0,
+                  slacks.kv if slacks else 1.0)
         reward = self.bandit.shaped_reward(out.energy / E_SCALE, f_y)
         violation = max(-f_y, 0.0)
         self.bandit.update(cls, j, reward, violation)

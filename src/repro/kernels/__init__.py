@@ -2,6 +2,8 @@
 
 flash_attention — prefill/train attention, online softmax, BlockSpec-tiled.
 decode_attention — flash-decode against long KV caches.
+paged_attention — flash-decode over non-contiguous KV pages (page-table
+    indirection via scalar prefetch; the paged serving engine's kernel).
 ref — the jnp oracles every kernel is allclose-tested against.
 """
 from repro.kernels import ops, ref

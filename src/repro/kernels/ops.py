@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _paged
 from repro.kernels import ref as _ref
 
 
@@ -55,6 +56,26 @@ def decode_attention(q, k, v, valid_len, *, scale: float = 1.0,
     return out[:, None] if squeeze else out
 
 
+def paged_attention(q, k_pages, v_pages, block_tables, valid_len, *,
+                    scale: float = 1.0, interpret: Optional[bool] = None):
+    """Decode attention over a paged KV pool.
+
+    q: (B, 1, Hq, D) or (B, Hq, D); k_pages/v_pages in model layout
+    (n_pool, page_size, Hkv, D); block_tables: (B, n_pages) page ids
+    (pad with 0); valid_len: scalar or (B,) valid tokens per request.
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    kt = jnp.swapaxes(k_pages, 1, 2)
+    vt = jnp.swapaxes(v_pages, 1, 2)
+    out = _paged.paged_attention(q, kt, vt, block_tables, valid_len,
+                                 scale=scale,
+                                 interpret=_auto_interpret(interpret))
+    return out[:, None] if squeeze else out
+
+
 # re-export oracles for tests/benchmarks
 flash_attention_ref = _ref.flash_attention_ref
 decode_attention_ref = _ref.decode_attention_ref
+paged_attention_ref = _ref.paged_attention_ref

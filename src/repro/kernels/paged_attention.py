@@ -1,0 +1,131 @@
+"""Paged flash-decode: single-token attention over non-contiguous KV pages.
+
+Same online-softmax structure as `decode_attention`, with one extra level of
+indirection: the KV cache lives in a shared block pool of fixed-size pages
+(`k_pages`/`v_pages`: (n_pool, Hkv, page_size, D)), and each request's
+logical cache is the sequence of physical pages named by its row of
+`block_tables`. The page table and per-request valid lengths ride in as
+scalar-prefetch operands (`pltpu.PrefetchScalarGridSpec`), so the BlockSpec
+index map — not the kernel body — resolves logical block `ki` of batch row
+`b` to physical page `block_tables[b, ki]`; Mosaic can then issue the page
+DMA as early as any contiguous block fetch.
+
+TPU notes: per (b, q-head) the query row is broadcast against one
+(page_size, D) page tile at a time, identical math to the contiguous
+kernel, so arithmetic intensity is unchanged; the only cost of paging is
+potentially non-coalesced HBM pages, which is the deal paged serving
+makes everywhere. Pages past a request's table length must still name a
+real pool slot (pad tables with 0) — their scores are masked by
+`valid_len` before they can contribute.
+
+Runs in interpret mode on CPU like the other kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, vl_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, page_size: int,
+                  n_pages: int):
+    del tables_ref          # consumed by the index maps, not the body
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (page, d)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (page, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    slot = ki * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = slot < vl_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_tables, valid_len, *,
+                    scale: float = 1.0, interpret: bool = False):
+    """q: (B, Hq, D); k_pages, v_pages: (n_pool, Hkv, page_size, D);
+    block_tables: (B, n_pages) int32 physical page ids (pad with 0);
+    valid_len: (B,) or scalar int32 valid cache tokens per request.
+
+    Returns (B, Hq, D). A `valid_len` of 0 is degenerate (softmax over a
+    fully-masked row): the output is the uniform average of the row's V
+    pages, exactly matching the jnp oracle and `decode_attention` — real
+    requests always have >= 1 cached token.
+    """
+    b, hq, d = q.shape
+    n_pool, hkv, page_size, _ = k_pages.shape
+    assert v_pages.shape == k_pages.shape, (v_pages.shape, k_pages.shape)
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    assert block_tables.ndim == 2 and block_tables.shape[0] == b, \
+        block_tables.shape
+    n_pages = block_tables.shape[1]
+    grid = (b, hq, n_pages)
+
+    q4 = q[:, :, None, :]     # (B, Hq, 1, D) so blocks are 2D tiles
+    tables = jnp.asarray(block_tables, jnp.int32)
+    vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               page_size=page_size, n_pages=n_pages)
+    # scalar-prefetch refs arrive as trailing index-map args; logical page
+    # ki of batch row b_ lives at physical pool slot tables[b_, ki]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda b_, h, ki, tbl, vl_: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b_, h, ki, tbl, vl_, g=g:
+                         (tbl[b_, ki], h // g, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b_, h, ki, tbl, vl_, g=g:
+                         (tbl[b_, ki], h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda b_, h, ki, tbl, vl_: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        interpret=interpret,
+    )(tables, vl, q4, k_pages, v_pages)
+    return out[:, :, 0, :]

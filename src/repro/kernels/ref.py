@@ -57,6 +57,22 @@ def ssd_diag_ref(x, dt, A, Bm, Cm, *, chunk: int = 256):
     return y.reshape(b, s, h, p)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, valid_len, *,
+                        scale: float = 1.0):
+    """Oracle for the paged decode kernel: gather each request's pages into
+    a dense contiguous cache, then run plain decode attention.
+
+    q: (B, Hq, D); k_pages, v_pages: (n_pool, Hkv, page_size, D);
+    block_tables: (B, n_pages) physical page ids; valid_len: scalar or (B,).
+    """
+    b = q.shape[0]
+    hkv, page_size, d = k_pages.shape[1:]
+    # (B, n_pages, Hkv, page, D) -> (B, Hkv, n_pages*page, D)
+    k = jnp.swapaxes(k_pages[block_tables], 1, 2).reshape(b, hkv, -1, d)
+    v = jnp.swapaxes(v_pages[block_tables], 1, 2).reshape(b, hkv, -1, d)
+    return decode_attention_ref(q, k, v, valid_len, scale=scale)
+
+
 def decode_attention_ref(q, k, v, valid_len, *, scale: float = 1.0):
     """Single-step decode attention against a (possibly rolling) KV cache.
 

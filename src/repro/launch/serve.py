@@ -8,6 +8,11 @@ With `--policy NAME` the launcher instead serves through a PerLLM fleet
 policy from the registry (see `repro.core.available_policies()`):
 
     PYTHONPATH=src python -m repro.launch.serve --policy perllm --requests 12
+
+`--paged [KV_BLOCKS]` runs the engine(s) on the paged KV cache: admission
+allocates block-pool pages (and stalls on exhaustion) instead of relying
+on the dense `max_batch × max_seq` reservation; evicted requests keep
+their prefill (see docs/serving.md).
 """
 import argparse
 import time
@@ -26,7 +31,9 @@ def _run_fleet(args) -> None:
     from repro.core import available_policies, make_policy
     from repro.serving.perllm_server import PerLLMServer
 
-    specs = paper_testbed(n_edge=2)
+    # specs carry the engines' block granularity so the C5 constraint's
+    # blocks-needed estimate uses the same units as the engine pools
+    specs = paper_testbed(n_edge=2, kv_block_tokens=args.kv_block_tokens)
     try:
         policy = make_policy(args.policy, len(specs))
     except KeyError:
@@ -37,10 +44,12 @@ def _run_fleet(args) -> None:
                                               vocab_size=256)
     cloud_cfg = get_config("gemma3-12b").reduced(n_layers=2, d_model=128,
                                                  vocab_size=256)
+    kv = _kv_kwargs(args)
     engines = [ServingEngine(edge_cfg, init_params(key, edge_cfg),
-                             max_batch=2, max_seq=64) for _ in range(2)]
+                             max_batch=2, max_seq=64, **kv)
+               for _ in range(2)]
     engines.append(ServingEngine(cloud_cfg, init_params(key, cloud_cfg),
-                                 max_batch=4, max_seq=64))
+                                 max_batch=4, max_seq=64, **kv))
     srv = PerLLMServer(specs, engines, scheduler=policy)
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -60,6 +69,14 @@ def _run_fleet(args) -> None:
           f"per_server={s['per_server']}")
 
 
+def _kv_kwargs(args) -> dict:
+    if args.paged is None:
+        return {}
+    return dict(paged=True,
+                kv_blocks=args.paged if args.paged > 0 else None,
+                kv_block_tokens=args.kv_block_tokens)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=list_archs())
@@ -72,6 +89,13 @@ def main(argv=None):
     ap.add_argument("--policy", default=None,
                     help="serve through an edge-cloud fleet scheduled by "
                          "this registered policy (perllm, fineinfer, ...)")
+    ap.add_argument("--paged", type=int, nargs="?", const=0, default=None,
+                    metavar="KV_BLOCKS",
+                    help="paged KV cache: allocate block-pool pages at "
+                         "admission (optional pool size in blocks; bare "
+                         "--paged sizes the pool to the dense equivalent)")
+    ap.add_argument("--kv-block-tokens", type=int, default=16,
+                    help="tokens of KV per block in --paged mode")
     args = ap.parse_args(argv)
 
     if args.policy:
@@ -84,7 +108,7 @@ def main(argv=None):
     params = init_params(jax.random.key(0), cfg)
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         max_seq=args.max_seq,
-                        temperature=args.temperature)
+                        temperature=args.temperature, **_kv_kwargs(args))
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):

@@ -1,6 +1,10 @@
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.kvcache import (
+    BlockAllocator, KVSnapshot, PagedKVCache, PageTable, blocks_needed,
+)
 from repro.serving.perllm_server import PerLLMServer, ServedRequest
 from repro.serving.sampling import sample_tokens
 
-__all__ = ["PerLLMServer", "Request", "ServedRequest", "ServingEngine",
-           "sample_tokens"]
+__all__ = ["BlockAllocator", "KVSnapshot", "PagedKVCache", "PageTable",
+           "PerLLMServer", "Request", "ServedRequest", "ServingEngine",
+           "blocks_needed", "sample_tokens"]

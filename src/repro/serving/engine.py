@@ -5,6 +5,19 @@ slots (prefill) and all active slots decode together each step with
 per-slot positions (the `update_cache_seq` vector-pos path). This is the
 execution layer a PerLLM "server" runs — the scheduler decides *which*
 server a request goes to, the engine decides *how* it runs there.
+
+With `paged=True` the engine's KV capacity is a `PagedKVCache` block pool
+instead of the implicit `max_batch × max_seq` dense reservation: admission
+allocates `ceil((prompt+max_new)/block_tokens)` blocks up front and stalls
+(FIFO) when the pool is exhausted — memory, not lane count, is what bounds
+the batch. Eviction snapshots the slot's KV into the request's pages
+(`evict` → `Request.kv`), so a preempted request `resubmit`-ted to the
+same engine reattaches its page table and resumes decoding with **zero
+re-prefill**; `release` drops a request's pages when the work moves
+elsewhere. The per-slot compute view stays the dense jitted cache (pages
+are scattered/gathered at evict/resume only), which keeps paged and dense
+decoding bit-identical; `repro.kernels.paged_attention` is the kernel
+that decodes straight from such a pool on TPU.
 """
 from __future__ import annotations
 
@@ -20,6 +33,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.parallel import ParallelContext, cpu_context
+from repro.serving.kvcache import KVSnapshot, PagedKVCache, PageTable
 from repro.serving.sampling import sample_tokens
 
 
@@ -35,6 +49,10 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: float = -1.0
     done_at: float = -1.0
+    # paged-KV runtime: the request's block-pool pages while it holds any,
+    # and the resume snapshot written by `evict` (consumed by re-admission)
+    pages: Optional[PageTable] = None
+    kv: Optional[KVSnapshot] = None
 
     @property
     def done(self) -> bool:
@@ -53,7 +71,9 @@ def _batch_axis_tree(cfg: ModelConfig, max_seq: int):
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
                  max_seq: int = 1024, ctx: Optional[ParallelContext] = None,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 paged: bool = False, kv_blocks: Optional[int] = None,
+                 kv_block_tokens: int = 16):
         self.cfg = cfg
         self.params = params
         self.ctx = ctx or cpu_context()
@@ -69,6 +89,16 @@ class ServingEngine:
         self._rid = itertools.count()
         self._key = jax.random.key(seed)
         self.completed: List[Request] = []
+        self.n_prefills = 0       # prompts actually prefilled (resumes skip)
+        self.paged = paged
+        self.kv: Optional[PagedKVCache] = None
+        if paged:
+            # default pool: the dense reservation's worth of blocks
+            n_blocks = kv_blocks if kv_blocks is not None \
+                else max_batch * (max_seq // kv_block_tokens)
+            self.kv = PagedKVCache(cfg, n_blocks=n_blocks,
+                                   block_tokens=kv_block_tokens,
+                                   max_seq=max_seq)
 
         self._decode = jax.jit(
             lambda p, t, c, pos: M.decode_step(p, t, c, pos, cfg=cfg,
@@ -89,27 +119,86 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 32,
                eos_id: int = -1) -> Request:
+        if self.paged:
+            need = self.kv.blocks_for(len(prompt) + max_new_tokens)
+            if need > self.kv.n_blocks:
+                raise ValueError(
+                    f"request needs {need} KV blocks but the pool only has "
+                    f"{self.kv.n_blocks}; it could never be admitted")
         req = Request(rid=next(self._rid), prompt=list(prompt),
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
                       submitted_at=time.time())
         self.queue.append(req)
         return req
 
+    def resubmit(self, req: Request) -> Request:
+        """Re-enqueue a previously evicted request on this engine.
+
+        Paged engines only: the request re-enters with its pages and
+        `KVSnapshot` attached, so admission reattaches the page table and
+        resumes decoding instead of re-running prefill. (Dense engines have
+        nothing to reattach — submit the remainder as a new request.)"""
+        assert self.paged, "resubmit needs a paged engine (KV survives)"
+        assert req.slot < 0 and not req.done, req
+        assert req.kv is not None and req.pages is not None, \
+            "resubmit is for evicted requests holding a KV snapshot"
+        self.queue.append(req)
+        return req
+
+    def release(self, req: Request) -> None:
+        """Drop an evicted request's pages + snapshot (it is moving to a
+        different server, or its work was abandoned)."""
+        if self.paged and req.pages is not None:
+            self.kv.free(req.pages)
+        req.pages = None
+        req.kv = None
+
     @property
     def active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    @property
+    def kv_free_blocks(self) -> Optional[int]:
+        """Free KV blocks (None when the engine is dense)."""
+        return self.kv.free_blocks if self.paged else None
 
     def _insert_slot(self, slot: int, single_cache):
         def ins(pool, one, ax):
             return jax.lax.dynamic_update_slice_in_dim(pool, one, slot, ax)
         self.cache = jax.tree.map(ins, self.cache, single_cache, self._axis)
 
+    def _extract_slot(self, slot: int):
+        def ext(pool, ax):
+            return jax.lax.dynamic_slice_in_dim(pool, slot, 1, ax)
+        return jax.tree.map(ext, self.cache, self._axis)
+
     # ------------------------------------------------------------------
     def _admit(self) -> None:
         for slot in range(self.max_batch):
-            if self.slot_req[slot] is not None or not self.queue:
+            if self.slot_req[slot] is not None:
                 continue
-            req = self.queue.pop(0)
+            if not self.queue:
+                break
+            req = self.queue[0]
+            if self.paged and req.kv is not None:
+                self.queue.pop(0)
+                self._resume(slot, req)
+                continue
+            if self.paged:
+                req.pages = self.kv.allocate(
+                    len(req.prompt) + req.max_new_tokens)
+                if req.pages is None:
+                    # KV pressure: admission stalls FIFO — but a resumable
+                    # continuation further back already holds its pages
+                    # (it allocates nothing) and must pass the stalled
+                    # head, or its held blocks could deadlock the pool
+                    ri = next((i for i, q in enumerate(self.queue)
+                               if q.kv is not None), None)
+                    if ri is None:
+                        break
+                    self._resume(slot, self.queue.pop(ri))
+                    continue
+            self.queue.pop(0)
             plen = len(req.prompt)
             bucket = 1 << max(plen - 1, 1).bit_length()   # next pow2 >= plen
             bucket = min(bucket, self.max_seq)
@@ -123,6 +212,7 @@ class ServingEngine:
                     jnp.arange(s, dtype=jnp.int32), (3, 1, s))
             last_logits, one_cache = self._prefill(
                 self.params, batch, one_cache, jnp.int32(plen - 1))
+            self.n_prefills += 1
             self._key, k = jax.random.split(self._key)
             tok = int(sample_tokens(k, last_logits, self.temperature)[0])
             self._insert_slot(slot, one_cache)
@@ -134,17 +224,45 @@ class ServingEngine:
             self.slot_req[slot] = req
             self._maybe_finish(slot)
 
-    def evict(self, slot: int) -> Optional[Request]:
+    def _resume(self, slot: int, req: Request) -> None:
+        """Reattach an evicted request: gather its pages back into the
+        slot's dense compute cache and continue decoding — no prefill."""
+        snap = req.kv
+        req.kv = None
+        self._insert_slot(slot, self.kv.load(req.pages, snap.state))
+        req.slot = slot
+        self.positions[slot] = snap.position
+        self.cur_tokens[slot] = snap.cur_token
+        self.slot_req[slot] = req
+        self._maybe_finish(slot)
+
+    def evict(self, slot: int, keep_kv: bool = True) -> Optional[Request]:
         """Preempt the request occupying `slot`, returning its lane.
 
-        The request is detached un-finished (its partial generation is
-        kept on the object, its KV cache is dropped — stale cache rows are
-        harmless, the next admission overwrites them); the caller decides
-        whether to resubmit the remaining tokens here or elsewhere."""
+        The request is detached un-finished with its partial generation
+        kept on the object. A paged engine snapshots the slot's KV into
+        the request's pages first (`Request.kv`), so `resubmit` here skips
+        re-prefill — unless `keep_kv=False` (a memory-pressure eviction:
+        the pages go straight back to the pool, no snapshot scatter). A
+        dense engine drops the KV either way (stale cache rows are
+        harmless — the next admission overwrites them). The freed lane's
+        `positions`/`cur_tokens` are zeroed so stale decode state can't
+        leak into the next occupant's diagnostics. The caller decides
+        whether the remaining tokens run here or elsewhere (and must
+        `release` the pages if elsewhere)."""
         req = self.slot_req[slot]
         if req is None:
             return None
+        if self.paged and not keep_kv:
+            self.release(req)
+        elif self.paged:
+            state = self.kv.store(req.pages, self._extract_slot(slot))
+            req.kv = KVSnapshot(state=state,
+                                position=int(self.positions[slot]),
+                                cur_token=int(self.cur_tokens[slot]))
         self.slot_req[slot] = None
+        self.positions[slot] = 0
+        self.cur_tokens[slot] = 0
         req.slot = -1
         return req
 
@@ -159,6 +277,9 @@ class ServingEngine:
             req.done_at = time.time()
             self.completed.append(req)
             self.slot_req[slot] = None
+            self.positions[slot] = 0
+            self.cur_tokens[slot] = 0
+            self.release(req)      # free-on-finish: pages return to the pool
 
     # ------------------------------------------------------------------
     def step(self) -> int:
@@ -182,8 +303,19 @@ class ServingEngine:
         return len(active)
 
     def run_until_idle(self, max_steps: int = 10_000) -> List[Request]:
+        """Step until queue and slots drain. Raises if `max_steps` runs out
+        with work still pending — silently returning would lose requests
+        (and with paged KV a stall can also mean the queue head needs
+        blocks held by evicted-but-never-released snapshots)."""
         for _ in range(max_steps):
             if not self.queue and not self.active_slots:
-                break
+                return self.completed
             self.step()
+        if self.queue or self.active_slots:
+            raise RuntimeError(
+                f"run_until_idle: {len(self.queue)} queued and "
+                f"{len(self.active_slots)} active requests remain after "
+                f"{max_steps} steps"
+                + (f" ({self.kv.free_blocks}/{self.kv.n_blocks} KV blocks "
+                   f"free)" if self.paged else ""))
         return self.completed

@@ -1,0 +1,225 @@
+"""Paged KV cache: a fixed block pool, per-request page tables, snapshots.
+
+The dense engine pre-books one `(max_seq, ...)` cache lane per batch slot,
+so a server's KV capacity is `max_batch` regardless of how long requests
+actually are — and evicting a request throws its prefill away. This module
+makes KV memory a real, countable resource instead:
+
+* `BlockAllocator` — a free list over `n_blocks` fixed-size blocks; every
+  admitted request allocates `ceil(tokens / block_tokens)` blocks up front
+  and the pool's `free_blocks` is what schedulers observe as
+  `ClusterView.kv_free_blocks`.
+* `PageTable` — one request's physical block ids, in logical order. Padded
+  to any length with block 0 it is exactly the `block_tables` row the
+  `paged_attention` kernel gathers through.
+* `PagedKVCache` — the pool's storage side: for every cache-tree leaf with
+  a sequence axis it keeps a `(n_blocks, block_tokens, ...)` pool and can
+  scatter a slot's dense per-request cache into that request's pages
+  (`store`, at eviction) and gather it back into a dense slot cache
+  (`load`, at resume) — which is what lets a preempted request re-enter
+  *without re-running prefill*. Leaves with no sequence axis (SSM/conv
+  states, rolling windows smaller than `max_seq`) are snapshotted wholesale
+  in the returned state list; they are per-request O(1)-sized state, not
+  paged memory.
+
+Layout note: pool leaves keep each cache leaf's own layout with the
+sequence axis split as `(block, block_tokens)` and moved to the front, so
+`store`/`load` are pure reshapes plus one indexed scatter/gather — the
+attention kernels never read these pools directly (the engine's compute
+view stays the dense jitted cache); `repro.kernels.paged_attention` is the
+kernel that *does* read a `(n_pool, Hkv, page, D)` pool through a page
+table, for the TPU deployment where the pool is the only cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+class BlockAllocator:
+    """Free-list allocator over a fixed pool of KV blocks."""
+
+    def __init__(self, n_blocks: int):
+        if n_blocks <= 0:
+            raise ValueError(f"need a positive block pool, got {n_blocks}")
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._held = [False] * n_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def allocate(self, n: int) -> Optional[List[int]]:
+        """`n` block ids, or None if the pool can't satisfy the request
+        (callers treat that as admission back-pressure, not an error)."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        for i in ids:
+            self._held[i] = True
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        for i in ids:
+            if not self._held[i]:
+                raise ValueError(f"double free of KV block {i}")
+            self._held[i] = False
+            self._free.append(i)
+
+
+@dataclasses.dataclass
+class PageTable:
+    """One request's pages: physical block ids in logical order."""
+
+    blocks: List[int]
+    block_tokens: int
+
+    @property
+    def capacity_tokens(self) -> int:
+        return len(self.blocks) * self.block_tokens
+
+    def padded(self, n_pages: int) -> List[int]:
+        """Block-table row for the paged kernel: padded with page 0 (the
+        kernel masks padded pages via valid_len)."""
+        assert n_pages >= len(self.blocks), (n_pages, len(self.blocks))
+        return self.blocks + [0] * (n_pages - len(self.blocks))
+
+
+@dataclasses.dataclass
+class KVSnapshot:
+    """What an evicted request keeps besides its pages: the unpaged state
+    leaves and the decode cursor, enough to resume without re-prefill."""
+
+    state: List[Any]          # non-sequence cache leaves, flat order
+    position: int             # next cache write position
+    cur_token: int            # last sampled token (next decode input)
+
+
+def blocks_needed(n_tokens: int, block_tokens: int) -> int:
+    """Blocks covering `n_tokens` of KV (minimum one — even an empty
+    request owns its first page)."""
+    return max(1, math.ceil(n_tokens / block_tokens))
+
+
+class PagedKVCache:
+    """Block-pool storage for one engine's KV cache."""
+
+    def __init__(self, cfg: ModelConfig, n_blocks: int, block_tokens: int,
+                 max_seq: int, dtype=None):
+        if max_seq % block_tokens:
+            raise ValueError(
+                f"block_tokens={block_tokens} must divide max_seq={max_seq}")
+        self.cfg = cfg
+        self.block_tokens = block_tokens
+        self.max_seq = max_seq
+        self.allocator = BlockAllocator(n_blocks)
+        # Probe which leaves carry the sequence axis: leaves whose shape
+        # changes with max_seq are paged; the rest (recurrent states, conv
+        # buffers, rolling windows < max_seq) are snapshot-wholesale state.
+        shape_a = jax.eval_shape(
+            lambda: M.init_cache(cfg, 1, max_seq, dtype=dtype))
+        shape_b = jax.eval_shape(
+            lambda: M.init_cache(cfg, 1, max_seq // 2, dtype=dtype))
+        flat_a, self._treedef = jax.tree.flatten(shape_a)
+        flat_b, _ = jax.tree.flatten(shape_b)
+        self._seq_axis: List[Optional[int]] = []
+        self._pools: List[Optional[jnp.ndarray]] = []
+        for a, b in zip(flat_a, flat_b):
+            axis = next((i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                         if x != y), None)
+            if axis is not None and a.shape[axis] != max_seq:
+                axis = None       # seq-dependent but not max_seq-sized
+            self._seq_axis.append(axis)
+            if axis is None:
+                self._pools.append(None)
+                continue
+            rest = a.shape[:axis] + a.shape[axis + 1:]
+            self._pools.append(jnp.zeros(
+                (n_blocks, block_tokens) + rest, a.dtype))
+
+    # ------------------------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return self.allocator.n_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return self.allocator.free_blocks
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return blocks_needed(min(n_tokens, self.max_seq), self.block_tokens)
+
+    def allocate(self, n_tokens: int) -> Optional[PageTable]:
+        ids = self.allocator.allocate(self.blocks_for(n_tokens))
+        if ids is None:
+            return None
+        return PageTable(blocks=ids, block_tokens=self.block_tokens)
+
+    def free(self, table: PageTable) -> None:
+        self.allocator.free(table.blocks)
+        table.blocks = []
+
+    # ------------------------------------------------------------------
+    def store(self, table: PageTable, slot_cache) -> List[Any]:
+        """Scatter a dense single-slot cache into `table`'s pages.
+
+        Only the table's `capacity_tokens` prefix of each sequence leaf is
+        persisted (the request can never have written beyond it). Returns
+        the non-sequence state leaves for the caller's `KVSnapshot`."""
+        flat = self._flatten(slot_cache)
+        ids = jnp.asarray(table.blocks, jnp.int32)
+        span = table.capacity_tokens
+        state: List[Any] = []
+        for i, leaf in enumerate(flat):
+            axis = self._seq_axis[i]
+            if axis is None:
+                state.append(leaf)
+                continue
+            lead = jnp.moveaxis(leaf, axis, 0)[:span]
+            pages = lead.reshape((len(table.blocks), self.block_tokens)
+                                 + lead.shape[1:])
+            self._pools[i] = self._pools[i].at[ids].set(pages)
+        return state
+
+    def load(self, table: PageTable, state: List[Any]):
+        """Gather `table`'s pages back into a dense single-slot cache.
+
+        Sequence positions past the table's span are zeros; decode masks
+        them by position exactly as it masks never-written tail slots."""
+        ids = jnp.asarray(table.blocks, jnp.int32)
+        flat: List[Any] = []
+        state_it = iter(state)
+        for i, axis in enumerate(self._seq_axis):
+            if axis is None:
+                flat.append(next(state_it))
+                continue
+            pool = self._pools[i]
+            pages = pool[ids]                       # (nb, bt, *rest)
+            lead = pages.reshape((-1,) + pages.shape[2:])
+            rest = pool.shape[2:]
+            full = jnp.zeros((self.max_seq,) + rest, pool.dtype)
+            full = full.at[: lead.shape[0]].set(lead)
+            flat.append(jnp.moveaxis(full, 0, axis))
+        return jax.tree.unflatten(self._treedef, flat)
+
+    def _flatten(self, slot_cache) -> List[Any]:
+        flat, treedef = jax.tree.flatten(slot_cache)
+        if treedef != self._treedef:
+            raise ValueError(
+                f"slot cache tree {treedef} does not match the pool's "
+                f"{self._treedef}")
+        return flat

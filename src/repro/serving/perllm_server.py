@@ -53,6 +53,9 @@ class ServedRequest:
     tx_dur: float = 0.0           # pure transfer duration (energy basis)
     dispatch_clock: float = -1.0  # entered the engine (TxDone)
     admit_clock: float = -1.0     # admitted to a batch lane (prefill start)
+    # KV-preserving preemption: (server, evicted engine Request) whose
+    # pages + snapshot survive on that engine until rerouting resolves
+    evicted: Optional[tuple] = None
 
     @property
     def done(self) -> bool:
@@ -192,6 +195,15 @@ class PerLLMServer(Runtime, LinkStateMixin):
             lane_free.append(lanes)
             running.append(tasks)
         topo = self.topology
+        kv_kwargs = {}
+        if any(eng.paged for eng in self.engines):
+            # paged engines expose their allocator's live free count; a
+            # dense engine's 0-total entry marks KV as unmodeled there
+            kv_kwargs = dict(
+                kv_free_blocks=[eng.kv.free_blocks if eng.paged else 0
+                                for eng in self.engines],
+                kv_total_blocks=[eng.kv.n_blocks if eng.paged else 0
+                                 for eng in self.engines])
         return ClusterView(
             t=t, specs=self.specs,
             bw_factor=[self._bw_factor(t, j)
@@ -200,6 +212,7 @@ class PerLLMServer(Runtime, LinkStateMixin):
                             for j in range(len(self.specs))],
             lane_free=lane_free,
             running=running,
+            **kv_kwargs,
             **self.link_view_kwargs(t, factors))
 
     def _view(self) -> ClusterView:
@@ -252,6 +265,16 @@ class PerLLMServer(Runtime, LinkStateMixin):
         Outcome (SLO-violation cost, zero fleet energy) and retire it."""
         svc = ev.request
         sr = self._by_sid.pop(svc.sid)
+        # a runtime-forced shed (e.g. pool-oversized at TxDone) may arrive
+        # after dispatch already put the request in `active`
+        self.active.pop(svc.sid, None)
+        if sr.evicted is not None:
+            # a previously evicted request shed on requeue: its preserved
+            # pages would otherwise leak on the old engine
+            old_j, old_req = sr.evicted
+            sr.evicted = None
+            svc.kv_server, svc.kv_blocks = -1, 0
+            self.engines[old_j].release(old_req)
         sr.server = -1
         sr.decision = ev.decision
         self.policy.feedback(svc, rejected_outcome(svc, ev.decision,
@@ -260,22 +283,41 @@ class PerLLMServer(Runtime, LinkStateMixin):
 
     def on_preempt(self, ev: Preempt) -> None:
         """Evict the victim from its engine and requeue its remaining
-        decode tokens as a fresh Arrival (prefill is redone — the KV cache
-        is dropped with the slot, so preemption is never free)."""
+        decode tokens as a fresh Arrival.
+
+        On a paged engine `ServingEngine.evict` snapshots the victim's KV
+        into its pages; the evicted engine Request is kept on the
+        `ServedRequest` so that, if the requeue routes back to the same
+        server, `on_tx_done` resubmits it and decode resumes with zero
+        re-prefill. `ev.drop_kv` (or rerouting elsewhere) releases the
+        pages instead. Dense engines keep the legacy semantics: the KV
+        dies with the slot and prefill is redone wherever the victim
+        lands."""
         sr = self.active.get(ev.victim)
         if sr is None or sr.engine_req is None:
             return            # finished, rejected, or still in transit
         eng = self.engines[sr.server]
         r = sr.engine_req
-        if r.slot >= 0:
-            eng.evict(r.slot)
+        evicted_from_slot = r.slot >= 0
+        if evicted_from_slot:
+            # drop_kv skips the snapshot scatter — the pages are being
+            # freed for memory, not preserved for a resume
+            eng.evict(r.slot, keep_kv=not ev.drop_kv)
             remaining = max(r.max_new_tokens - len(r.generated), 1)
         elif r in eng.queue:
             eng.queue.remove(r)
-            remaining = r.max_new_tokens
+            if eng.paged:
+                eng.release(r)   # queued: pages (if allocated) go back
+            # a queued victim may itself be a resubmitted continuation
+            # with tokens already generated — only the remainder requeues
+            remaining = max(r.max_new_tokens - len(r.generated), 1)
         else:
             return            # completing this very tick — too late
         svc = sr.service
+        if eng.paged and evicted_from_slot and not ev.drop_kv:
+            sr.evicted = (sr.server, r)
+            svc.kv_server = sr.server
+            svc.kv_blocks = len(r.pages.blocks)
         svc.output_tokens = remaining
         svc.preemptions += 1
         sr.engine_req = None
@@ -288,11 +330,41 @@ class PerLLMServer(Runtime, LinkStateMixin):
         self.n_preempted += 1
         self.loop.push(Arrival(ev.time, requests=(svc,)))
 
+    def _resolve_eviction(self, sr: ServedRequest, j: int):
+        """Decide what a rerouted, previously evicted request keeps: its
+        engine Request (same paged server — resume in place) or nothing
+        (different server — release the stranded pages there)."""
+        if sr.evicted is None:
+            return None
+        old_j, old_req = sr.evicted
+        sr.evicted = None
+        sr.service.kv_server = -1
+        sr.service.kv_blocks = 0
+        if old_j == j and self.engines[j].paged and old_req.kv is not None:
+            return old_req
+        self.engines[old_j].release(old_req)
+        return None
+
     def on_tx_done(self, ev: TxDone) -> None:
         sr = self.active[ev.request.sid]
         j = sr.server
-        sr.engine_req = self.engines[j].submit(
-            sr._prompt, max_new_tokens=sr.service.output_tokens)
+        eng = self.engines[j]
+        resumable = self._resolve_eviction(sr, j)
+        if resumable is not None:
+            # KV-preserving requeue: reattach the evicted Request — its
+            # page table and snapshot skip the prefill entirely
+            sr.engine_req = eng.resubmit(resumable)
+        elif eng.paged and eng.kv.blocks_for(
+                len(sr._prompt) + sr.service.output_tokens) \
+                > eng.kv.n_blocks:
+            # the engine's whole pool can't hold this request — a KV-blind
+            # policy routed it; shed it instead of crashing the loop
+            self.handle(Reject(ev.time, request=ev.request,
+                               decision=sr.decision))
+            return
+        else:
+            sr.engine_req = eng.submit(
+                sr._prompt, max_new_tokens=sr.service.output_tokens)
         self._ensure_tick(j, ev.time)
 
     def _ensure_tick(self, j: int, t: float) -> None:

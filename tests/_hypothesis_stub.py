@@ -8,7 +8,7 @@ library is missing.
 
 Scope: exactly what the tests here use — `given` (positional or keyword
 strategies), `settings(max_examples=..., deadline=...)`, and the
-`integers` / `floats` / `lists` strategies. Drawing is deterministic
+`integers` / `floats` / `lists` / `tuples` / `sampled_from` strategies. Drawing is deterministic
 (seeded per test) and always includes the strategy bounds, so boundary
 cases are exercised on every run. It is NOT a general hypothesis
 replacement: no shrinking, no database, no stateful testing.
@@ -62,6 +62,12 @@ def sampled_from(values) -> _Strategy:
     return _Strategy(draw)
 
 
+def tuples(*strategies: _Strategy) -> _Strategy:
+    def draw(rng, i):
+        return tuple(s.draw(rng, i) for s in strategies)
+    return _Strategy(draw)
+
+
 def lists(elements: _Strategy, min_size: int = 0,
           max_size: int = 10) -> _Strategy:
     def draw(rng, i):
@@ -110,6 +116,7 @@ def install() -> None:
     strategies.floats = floats
     strategies.lists = lists
     strategies.sampled_from = sampled_from
+    strategies.tuples = tuples
     mod.strategies = strategies
     sys.modules["hypothesis"] = mod
     sys.modules["hypothesis.strategies"] = strategies
