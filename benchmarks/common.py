@@ -22,6 +22,12 @@ Scenario/runtime plumbing (also settable via `python -m benchmarks.run
   per server) or `edge-cloud` (per-link graph: private edge access links,
   cloud reached over user-cloud + the shared edge-cloud backhaul, each
   link on an independent fluctuation substream).
+* `BENCH_TIERS` — any non-empty value other than `0` gives every server
+  the stock DVFS ladder (`repro.cluster.server.DVFS_TIERS`): PerLLM's
+  arm space expands to (class, server, tier) and its Decisions carry
+  non-nominal Allocations; the baselines stay allocation-blind. Off by
+  default — the untier'd testbed is bit-exact with the pre-allocation
+  cost model.
 """
 from __future__ import annotations
 
@@ -32,8 +38,8 @@ import time
 from typing import Dict, Tuple
 
 from repro.cluster import (
-    BandwidthModel, SimResult, Simulator, generate_workload, make_topology,
-    paper_testbed,
+    BandwidthModel, DVFS_TIERS, SimResult, Simulator, generate_workload,
+    make_topology, paper_testbed,
 )
 from repro.core import make_policy
 
@@ -44,6 +50,7 @@ SCENARIO = os.environ.get("BENCH_SCENARIO") or None
 RUNTIME = os.environ.get("BENCH_RUNTIME", "slot")
 ADMISSION = os.environ.get("BENCH_ADMISSION", "") not in ("", "0")
 TOPOLOGY = os.environ.get("BENCH_TOPOLOGY", "degenerate")
+TIERS = os.environ.get("BENCH_TIERS", "") not in ("", "0")
 if RUNTIME not in ("slot", "event"):
     raise SystemExit(f"BENCH_RUNTIME={RUNTIME!r} is not one of "
                      "'slot'/'event'")
@@ -51,27 +58,40 @@ SIM_SEED = 42
 BW_SEED = 1
 
 
-def make_scheduler(name: str, n_servers: int):
+def make_scheduler(name: str, n_servers: int, tiers: bool = True):
     """All benchmark schedulers come from the policy registry. With
     BENCH_ADMISSION set, PerLLM runs with admission control (the paper
-    baselines have no shedding mechanism and always admit)."""
+    baselines have no shedding mechanism and always admit); `tiers=False`
+    pins PerLLM to the nominal DVFS tier (the fixed-frequency comparator
+    — only meaningful when BENCH_TIERS puts a ladder on the testbed)."""
     kwargs = {}
-    if ADMISSION and name.lower() == "perllm":
-        kwargs["admission"] = True
+    if name.lower() == "perllm":
+        if ADMISSION:
+            kwargs["admission"] = True
+        if not tiers:
+            kwargs["tiers"] = False
     return make_policy(name, n_servers, **kwargs)
+
+
+def bench_testbed(edge_model: str):
+    """The simulation matrix's testbed under the current BENCH_* knobs."""
+    return paper_testbed(edge_model,
+                         freq_tiers=DVFS_TIERS if TIERS else (1.0,))
 
 
 @functools.lru_cache(maxsize=None)
 def run_cell(edge_model: str, fluctuating: bool, method: str,
              n: int = BENCH_N,
-             scenario: str = None) -> Tuple[SimResult, float]:
+             scenario: str = None,
+             tiers: bool = True) -> Tuple[SimResult, float]:
     """One (deployment × bandwidth × scheduler) simulation. Returns
     (result, wall_seconds). `scenario=None` resolves the module-level
     SCENARIO at call time (benchmarks.run may rebind it after import;
-    ADMISSION/TOPOLOGY are module-level reads for the same reason)."""
+    ADMISSION/TOPOLOGY/TIERS are module-level reads for the same
+    reason). `tiers=False` runs PerLLM pinned to the nominal tier."""
     if scenario is None:
         scenario = SCENARIO
-    specs = paper_testbed(edge_model)
+    specs = bench_testbed(edge_model)
     services = generate_workload(n, seed=0, scenario=scenario)
     topology = None
     if TOPOLOGY != "degenerate":
@@ -81,7 +101,7 @@ def run_cell(edge_model: str, fluctuating: bool, method: str,
                                           seed=BW_SEED), seed=SIM_SEED,
                     slot=None if RUNTIME == "event" else 0.5,
                     topology=topology)
-    sched = make_scheduler(method, len(specs))
+    sched = make_scheduler(method, len(specs), tiers=tiers)
     t0 = time.time()
     res = sim.run([copy.copy(s) for s in services], sched,
                   scenario=scenario)

@@ -7,16 +7,25 @@ Usage (what CI runs after the smoke benchmarks)::
     python benchmarks/compare_baseline.py BENCH_smoke.json \
         benchmarks/baseline.json
 
+Several current files may be given (they are merged — the CI energy smoke
+writes its own JSON next to the default smoke's)::
+
+    python benchmarks/compare_baseline.py BENCH_smoke.json \
+        BENCH_energy.json benchmarks/baseline.json
+
 Gated metrics are the quality-style ones (names containing ``success``,
 ``thpt``/``throughput`` or ``goodput`` — higher is better; ``*ratio*``
 names are excluded, since a PerLLM/baseline ratio shrinks when the
-*baseline* improves) plus the paged-KV subsystem's liveness metrics
+*baseline* improves), the paged-KV subsystem's liveness metrics
 (``kv_evictions``, ``*saved*`` — the deterministic smoke run must keep
-exercising KV-preserving preemption and banking resume savings); the job
-fails if any falls more than ``--tolerance`` (default 5%) below the
-committed baseline. Wall-clock (`us_per_call`) is reported but never gated: CI
-runners are too noisy for latency gates. Regenerate the baseline with the
-exact smoke-scale command above after an intentional behavior change.
+exercising KV-preserving preemption and banking resume savings), and the
+allocation subsystem's efficiency metrics: ``admitted_success_rate``
+(higher is better) and ``energy_per_token`` — the one *lower-is-better*
+gate, failing when energy per served token rises more than ``--tolerance``
+above the committed baseline. Wall-clock (`us_per_call`) is reported but
+never gated: CI runners are too noisy for latency gates. Regenerate the
+baseline with the exact smoke-scale commands above after an intentional
+behavior change.
 """
 from __future__ import annotations
 
@@ -25,7 +34,10 @@ import json
 import sys
 
 GATED_TAGS = ("success", "thpt", "throughput", "goodput", "kv_evictions",
-              "saved")
+              "saved", "admitted_success", "energy_per_token")
+
+# gated metrics where *smaller* is the good direction
+LOWER_IS_BETTER_TAGS = ("energy_per_token",)
 
 
 def gated(metric_name: str) -> bool:
@@ -37,8 +49,15 @@ def gated(metric_name: str) -> bool:
     return any(tag in name for tag in GATED_TAGS)
 
 
+def lower_is_better(metric_name: str) -> bool:
+    name = metric_name.lower()
+    return any(tag in name for tag in LOWER_IS_BETTER_TAGS)
+
+
 def compare(current: dict, baseline: dict, tolerance: float) -> list:
-    """Failure messages for every gated metric below baseline×(1−tol)."""
+    """Failure messages for every gated metric outside baseline±tol (below
+    the floor for higher-is-better metrics, above the ceiling for
+    lower-is-better ones)."""
     failures = []
     checked = 0
     for exp, info in sorted(baseline.items()):
@@ -55,15 +74,28 @@ def compare(current: dict, baseline: dict, tolerance: float) -> list:
                                 f"(baseline {base_val:g})")
                 continue
             checked += 1
-            floor = base_val * (1.0 - tolerance)
-            status = "ok" if cur_val >= floor else "REGRESSION"
-            print(f"{status:10s} {exp}.{key}: {cur_val:g} "
-                  f"(baseline {base_val:g}, floor {floor:g})")
-            if cur_val < floor:
-                failures.append(
-                    f"{exp}.{key}: {cur_val:g} < floor {floor:g} "
-                    f"({(1 - cur_val / base_val) * 100:.1f}% below "
-                    f"baseline {base_val:g})")
+            if lower_is_better(key):
+                ceiling = base_val * (1.0 + tolerance)
+                bad = cur_val > ceiling
+                status = "ok" if not bad else "REGRESSION"
+                print(f"{status:10s} {exp}.{key}: {cur_val:g} "
+                      f"(baseline {base_val:g}, ceiling {ceiling:g})")
+                if bad:
+                    failures.append(
+                        f"{exp}.{key}: {cur_val:g} > ceiling {ceiling:g} "
+                        f"({(cur_val / base_val - 1) * 100:.1f}% above "
+                        f"baseline {base_val:g})")
+            else:
+                floor = base_val * (1.0 - tolerance)
+                bad = cur_val < floor
+                status = "ok" if not bad else "REGRESSION"
+                print(f"{status:10s} {exp}.{key}: {cur_val:g} "
+                      f"(baseline {base_val:g}, floor {floor:g})")
+                if bad:
+                    failures.append(
+                        f"{exp}.{key}: {cur_val:g} < floor {floor:g} "
+                        f"({(1 - cur_val / base_val) * 100:.1f}% below "
+                        f"baseline {base_val:g})")
     if checked == 0:
         failures.append("no gated metrics were compared — baseline or "
                         "current JSON is empty/malformed")
@@ -73,14 +105,18 @@ def compare(current: dict, baseline: dict, tolerance: float) -> list:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Fail if gated benchmark metrics regress vs baseline.")
-    ap.add_argument("current", help="JSON written by benchmarks.run --json")
+    ap.add_argument("current", nargs="+",
+                    help="JSON file(s) written by benchmarks.run --json "
+                         "(merged when several are given)")
     ap.add_argument("baseline", help="committed benchmarks/baseline.json")
     ap.add_argument("--tolerance", type=float, default=0.05,
-                    help="allowed fractional drop below baseline "
+                    help="allowed fractional drift from baseline "
                          "(default 0.05)")
     args = ap.parse_args(argv)
-    with open(args.current) as fh:
-        current = json.load(fh)
+    current: dict = {}
+    for path in args.current:
+        with open(path) as fh:
+            current.update(json.load(fh))
     with open(args.baseline) as fh:
         baseline = json.load(fh)
     failures = compare(current, baseline, args.tolerance)

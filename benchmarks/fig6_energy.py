@@ -1,9 +1,40 @@
-"""Figure 6: energy cost (transmission / inference / idle) per method."""
+"""Figure 6: energy cost (transmission / inference / idle) per method.
+
+With `--tiers` (BENCH_TIERS) the testbed carries the stock DVFS ladder and
+a second section reports the paper's allocation story: PerLLM's learned
+(class, server, tier) policy against the fixed-nominal-tier PerLLM —
+total-energy cut, energy per served token, and the admitted-SLO rate the
+cut is achieved at. These are the gated metrics of the CI energy smoke
+(`benchmarks/compare_baseline.py`).
+"""
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import EDGE_MODELS, METHODS, csv_row, matrix
+import benchmarks.common as common
+from benchmarks.common import EDGE_MODELS, METHODS, csv_row, matrix, run_cell
+
+
+def tier_section(lines) -> str:
+    """Learned-tier vs fixed-nominal PerLLM on the active scenario."""
+    edge = "llama2-7b"
+    nominal, _ = run_cell(edge, False, "PerLLM", tiers=False)
+    tiered, _ = run_cell(edge, False, "PerLLM", tiers=True)
+    cut = 1.0 - tiered.total_energy / nominal.total_energy
+    lines.append("# Fig 6b: DVFS tier selection (PerLLM learned vs "
+                 "fixed-nominal)")
+    lines.append(f"{'policy':16s} {'energy kJ':>10s} {'J/token':>8s} "
+                 f"{'adm_succ':>9s} {'rejected':>9s}")
+    for tag, r in (("fixed-nominal", nominal), ("learned-tiers", tiered)):
+        lines.append(f"{tag:16s} {r.total_energy/1e3:10.1f} "
+                     f"{r.energy_per_token:8.2f} "
+                     f"{r.admitted_success_rate*100:8.1f}% "
+                     f"{r.n_rejected:9d}")
+    lines.append(f"# learned tiers cut total energy {cut*100:.1f}% "
+                 f"(inference {100*(1-tiered.e_infer/nominal.e_infer):.1f}%)")
+    return (f"tier_energy_cut={cut*100:.1f}%;"
+            f"energy_per_token={tiered.energy_per_token:.3f};"
+            f"admitted_success_rate={tiered.admitted_success_rate*100:.1f}%")
 
 
 def run() -> str:
@@ -30,7 +61,9 @@ def run() -> str:
         1 - m[em]["PerLLM"].total_energy
         / (sum(m[em][x].total_energy for x in METHODS if x != "PerLLM") / 3)
         for em in EDGE_MODELS)
-    print("\n".join(lines))
     derived = (f"energy_cut_vs_fineinfer={red_fine*100:.0f}%;"
                f"vs_baseline_avg={red_avg*100:.0f}%")
+    if common.TIERS:       # read at call time: benchmarks.run may rebind
+        derived += ";" + tier_section(lines)
+    print("\n".join(lines))
     return csv_row("fig6_energy", (time.time() - t0) * 1e6, derived)

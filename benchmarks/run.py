@@ -84,6 +84,11 @@ def main(argv=None) -> None:
                     help="network model for the simulation matrix: the "
                          "legacy per-server links (default) or the "
                          "explicit edge-cloud link graph")
+    ap.add_argument("--tiers", action="store_true",
+                    help="give every server the stock DVFS frequency "
+                         "ladder: PerLLM schedules (server, tier) pairs "
+                         "and fig6 reports the learned-tier energy cut "
+                         "vs the fixed-nominal comparator")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write derived metrics as JSON (the CI "
                          "regression-gate artifact)")
@@ -108,8 +113,10 @@ def main(argv=None) -> None:
         os.environ["BENCH_ADMISSION"] = "1"
     if args.topology:
         os.environ["BENCH_TOPOLOGY"] = args.topology
+    if args.tiers:
+        os.environ["BENCH_TIERS"] = "1"
     rebind = (args.scenario or args.runtime or args.admission
-              or args.topology)
+              or args.topology or args.tiers)
     if rebind and "benchmarks.common" in sys.modules:
         # already imported (programmatic/repeat use): env vars were read at
         # import time, so rebind and drop the stale cell cache
@@ -122,6 +129,8 @@ def main(argv=None) -> None:
             common.ADMISSION = True
         if args.topology:
             common.TOPOLOGY = args.topology
+        if args.tiers:
+            common.TIERS = True
         common.run_cell.cache_clear()
 
     from benchmarks import (

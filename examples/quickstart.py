@@ -1,4 +1,5 @@
-"""Quickstart: train a tiny model, then serve it with continuous batching.
+"""Quickstart: train a tiny model, serve it with continuous batching, and
+schedule requests onto a DVFS-tiered edge-cloud testbed.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -28,6 +29,24 @@ def main():
     engine.run_until_idle()
     for r in reqs[:3]:
         print(f"req {r.rid}: prompt={r.prompt[:4]}... -> {r.generated}")
+
+    # 4. schedule a workload: every Decision names a server AND a resource
+    #    Allocation — here PerLLM learns which DVFS tier each service class
+    #    can afford (a slow tier that still meets the deadline is cheaper)
+    import copy
+
+    from repro.cluster import (
+        DVFS_TIERS, Simulator, generate_workload, paper_testbed,
+    )
+    from repro.core import make_policy
+
+    specs = paper_testbed("llama2-7b", freq_tiers=DVFS_TIERS)
+    services = generate_workload(800, rate=8.0, seed=0)
+    for tiers, tag in ((False, "fixed-nominal"), (True, "learned-tiers")):
+        sim = Simulator(specs, slot=None, seed=42)
+        res = sim.run([copy.copy(s) for s in services],
+                      make_policy("perllm", len(specs), tiers=tiers))
+        print(f"{tag:14s} {res.row()}")
 
 
 if __name__ == "__main__":

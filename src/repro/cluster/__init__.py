@@ -1,19 +1,17 @@
 from repro.cluster.network import (
     BandwidthModel, Link, LinkStateMixin, LinkTopology, make_topology,
 )
-from repro.cluster.server import ServerSpec, ServerState
-from repro.cluster.simulator import (
-    ClusterView, Outcome, SchedulerBase, SimResult, Simulator, SlotView,
-)
+from repro.cluster.server import DVFS_TIERS, ServerSpec, ServerState
+from repro.cluster.simulator import ClusterView, Outcome, SimResult, Simulator
 from repro.cluster.testbed import paper_testbed, tpu_testbed
 from repro.cluster.workload import (
     N_CLASSES, ServiceRequest, classify, generate_workload,
 )
 
 __all__ = [
-    "BandwidthModel", "ClusterView", "Link", "LinkStateMixin",
-    "LinkTopology", "N_CLASSES", "Outcome", "SchedulerBase", "ServerSpec",
-    "ServerState", "ServiceRequest", "SimResult", "Simulator", "SlotView",
+    "BandwidthModel", "ClusterView", "DVFS_TIERS", "Link", "LinkStateMixin",
+    "LinkTopology", "N_CLASSES", "Outcome", "ServerSpec",
+    "ServerState", "ServiceRequest", "SimResult", "Simulator",
     "classify", "generate_workload", "make_topology", "paper_testbed",
     "tpu_testbed",
 ]

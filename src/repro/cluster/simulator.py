@@ -53,17 +53,13 @@ from repro.cluster.network import BandwidthModel, LinkStateMixin, LinkTopology
 from repro.cluster.server import ServerSpec, ServerState
 from repro.cluster.workload import ServiceRequest, classify
 from repro.core.api import (
-    ClusterView, Decision, RunningTask, as_policy, drive_slot,
+    NOMINAL, Allocation, ClusterView, Decision, RunningTask, drive_slot,
+    ensure_policy,
 )
-from repro.core.api import SchedulerBase as SchedulerBase  # noqa: PLC0414 — compat re-export
 from repro.core.runtime import (
     Arrival, BandwidthChange, InferDone, Preempt, Reject, Runtime, Scenario,
     TxDone, make_scenario,
 )
-
-# Deprecated alias: the per-slot observation object is now the shared
-# `ClusterView` (also built by the live `PerLLMServer`).
-SlotView = ClusterView
 
 
 @dataclasses.dataclass
@@ -103,6 +99,13 @@ class SimResult:
     @property
     def total_energy(self) -> float:
         return self.e_tx + self.e_infer + self.e_idle
+
+    @property
+    def energy_per_token(self) -> float:
+        """Joules of total (tx + inference + idle) energy per served
+        token — the benchmark gate's allocation-efficiency metric."""
+        tokens = self.throughput_tokens_per_s * self.makespan
+        return self.total_energy / tokens if tokens > 0 else 0.0
 
     @classmethod
     def empty(cls, name: str, n_servers: int) -> "SimResult":
@@ -243,6 +246,7 @@ class _Booking:
     finish: float
     cancelled: bool = False
     kv_resumed: bool = False  # decode-only window (pages survived eviction)
+    alloc: Allocation = NOMINAL  # the Decision's resource allocation
 
 
 class _EventSimRuntime(_SimRuntimeBase):
@@ -309,7 +313,20 @@ class _EventSimRuntime(_SimRuntimeBase):
             running[b.j].append(RunningTask(
                 sid=sid, server=b.j, class_id=b.request.class_id,
                 deadline_at=b.request.arrival + b.request.deadline,
-                begin=b.begin, finish_est=b.finish))
+                begin=b.begin, finish_est=b.finish,
+                tier=b.alloc.freq_tier))
+        tier_kwargs = {}
+        if any(s.n_tiers > 1 for s in self.specs):
+            # per-server tier state: committed in-flight lane-seconds per
+            # DVFS tier (the within-batch commits stack on via the view's
+            # own `commit`)
+            tier_load = [[0.0] * s.n_tiers for s in self.specs]
+            for b in self._inflight.values():
+                k = b.alloc.freq_tier
+                if k < 0:
+                    k = self.specs[b.j].nominal_tier
+                tier_load[b.j][k] += max(b.finish - max(b.begin, t), 0.0)
+            tier_kwargs = dict(tier_load=tier_load)
         kv_kwargs = {}
         if self._kv_modeled:
             kv_kwargs = dict(
@@ -324,6 +341,7 @@ class _EventSimRuntime(_SimRuntimeBase):
                             for j in range(n)],
             lane_free=[list(lf) for lf in self.lane_free],
             running=running,
+            **tier_kwargs,
             **kv_kwargs,
             **self.link_view_kwargs(t, self._link_factors),
         )
@@ -397,8 +415,13 @@ class _EventSimRuntime(_SimRuntimeBase):
             if not self._kv_admit(t, req, decision,
                                   from_wait=_from_kv_wait):
                 return                       # waiting on KV blocks
+        alloc = decision.alloc
         tx_start = max(t, self.topo.path_free_at(j, self.link_free))
-        tx_dur = spec.tx_time(req.payload_bytes, self._factor(j))
+        # a sub-unit bandwidth share stretches the transfer by 1/share and
+        # occupies the path for the whole stretched window (exclusive-
+        # window semantics: shares can never oversubscribe a link)
+        tx_dur = spec.tx_time(req.payload_bytes,
+                              self._factor(j) * alloc.bw_share)
         end = tx_start + tx_dur
         # a transfer occupies its whole path
         for name in self.topo.paths[j]:
@@ -412,14 +435,14 @@ class _EventSimRuntime(_SimRuntimeBase):
         li = int(np.argmin(lanes))
         lane_prev = lanes[li]
         begin = max(ready, lane_prev)
-        t_inf = self.sim._draw_infer(req, j, resume=kv_resumed)
+        t_inf = self.sim._draw_infer(req, j, resume=kv_resumed, alloc=alloc)
         finish = begin + t_inf
         lanes[li] = finish
         ctx = _Booking(request=req, j=j, li=li, lane_prev=lane_prev,
                        tx_dur=tx_dur,
                        charge_from=t if req.preemptions else req.arrival,
                        ready=ready, begin=begin, t_inf=t_inf, finish=finish,
-                       kv_resumed=kv_resumed)
+                       kv_resumed=kv_resumed, alloc=alloc)
         self._inflight[req.sid] = ctx
         self.loop.push(TxDone(ready, request=req, decision=decision,
                               context=ctx))
@@ -431,8 +454,13 @@ class _EventSimRuntime(_SimRuntimeBase):
         # transmission energy accrues over the whole transfer window,
         # including the congestion queue (paper §2.3); for a preempted
         # continuation the window starts at the requeue instant — the
-        # pre-preemption window was billed by the first TxDone
-        st.e_tx += (b.ready - b.charge_from) * self.specs[b.j].tx_power
+        # pre-preemption window was billed by the first TxDone. During the
+        # transfer itself the radio draws tx_power × bw_share (a granted
+        # slice lights up a slice of the link), so a sub-unit share's
+        # *transfer* energy is share-invariant and only its queue window
+        # still charges full power.
+        st.e_tx += (b.ready - b.charge_from) * self.specs[b.j].tx_power \
+            - (1.0 - b.alloc.bw_share) * b.tx_dur * self.specs[b.j].tx_power
         st.tx_busy_time += b.tx_dur
 
     def on_preempt(self, ev: Preempt) -> None:
@@ -477,9 +505,11 @@ class _EventSimRuntime(_SimRuntimeBase):
         st = self.states[b.j]
         lanes[b.li] = b.lane_prev if t <= b.begin else t
         if t > b.begin:
-            # wasted partial decode: the server burned real energy on it
+            # wasted partial decode: the server burned real energy on it,
+            # at the victim's allocated tier/share
             done = min(t, b.finish) - b.begin
-            st.e_infer += spec.infer_energy(done)
+            st.e_infer += spec.infer_energy(done, tier=b.alloc.freq_tier,
+                                            lane_share=b.alloc.lane_share)
             st.busy_time += done / spec.max_concurrency
             frac_left = max(b.finish - t, 0.0) / b.t_inf
             remaining = max(1, int(math.ceil(req.output_tokens * frac_left)))
@@ -519,7 +549,8 @@ class _EventSimRuntime(_SimRuntimeBase):
         st = self.states[b.j]
         finish = ev.time
         st.busy_time += b.t_inf / spec.max_concurrency
-        st.e_infer += spec.infer_energy(b.t_inf)
+        st.e_infer += spec.infer_energy(b.t_inf, tier=b.alloc.freq_tier,
+                                        lane_share=b.alloc.lane_share)
         st.tokens_out += req.output_tokens
         st.served += 1
         if spec.kv_blocks > 0 and req.kv_blocks > 0:
@@ -537,7 +568,9 @@ class _EventSimRuntime(_SimRuntimeBase):
             queue_time=max(b.begin - b.ready, 0.0), infer_time=b.t_inf,
             finish=finish, processing_time=proc,
             success=proc <= req.deadline,
-            energy=b.tx_dur * spec.tx_power + spec.infer_energy(b.t_inf))
+            energy=b.tx_dur * spec.tx_power * b.alloc.bw_share
+            + spec.infer_energy(b.t_inf, tier=b.alloc.freq_tier,
+                                lane_share=b.alloc.lane_share))
         self.outcomes.append(out)
         self.policy.feedback(req, out)
 
@@ -551,7 +584,7 @@ class Simulator:
     """`slot=0.5` (default) runs the slotted-compat mode; `slot=None` runs
     pure event-driven scheduling. `bw_interval` is the fluctuating
     bandwidth model's resample cadence in event mode (and the pseudo-slot
-    length reported to legacy batch schedulers).
+    length of `Runtime.slot_index`).
 
     `topology` is the network (`repro.cluster.network.LinkTopology`);
     `None` builds the degenerate one-link-per-server topology around
@@ -584,12 +617,11 @@ class Simulator:
 
     def run(self, services: List[ServiceRequest], scheduler,
             scenario: Union[Scenario, str, None] = None) -> SimResult:
-        """Simulate `services` under `scheduler` (a `SchedulingPolicy`, or a
-        legacy `SchedulerBase` — coerced through the deprecation shim).
+        """Simulate `services` under `scheduler` (a `SchedulingPolicy`).
         `scenario` (instance or registered name) may inject extra
         bandwidth events; arrival shaping happens in the workload
         generator."""
-        policy = as_policy(scheduler)
+        policy = ensure_policy(scheduler)
         if isinstance(scenario, str):
             scenario = make_scenario(scenario)
 
@@ -685,16 +717,22 @@ class Simulator:
     # *scheduling* semantics, never drifting cost models.
     # ------------------------------------------------------------------
     def _draw_infer(self, req: ServiceRequest, j: int,
-                    resume: bool = False) -> float:
+                    resume: bool = False,
+                    alloc: Optional[Allocation] = None) -> float:
         """Realized inference time: nominal / hidden efficiency × noise.
         Consumes one noise draw — call once per realized request.
         `resume` drops the prefill term: the request's KV pages survived
-        its eviction on this server, so only the remaining decode runs."""
+        its eviction on this server, so only the remaining decode runs.
+        `alloc` stretches the window by 1/(freq × lane_share) — the DVFS
+        tier slows the clock, a sub-unit lane share slices the lane."""
         noise = float(self.noise_rng.lognormal(0.0, 0.08))
         nominal = (self.specs[j].decode_time(req.output_tokens) if resume
                    else self.specs[j].service_time(req.prompt_tokens,
                                                    req.output_tokens))
-        return (nominal / self.efficiency[req.class_id, j]) * noise
+        t_inf = (nominal / self.efficiency[req.class_id, j]) * noise
+        if alloc is not None:
+            t_inf /= alloc.freq(self.specs[j]) * alloc.lane_share
+        return t_inf
 
     def _realize(self, req: ServiceRequest, decision: Decision,
                  states: List[ServerState], lane_free: List[List[float]],
@@ -709,11 +747,12 @@ class Simulator:
         # With a link ledger (`links` + the server's `path`) the transfer
         # serializes on every link it traverses; the legacy per-server
         # ledger (`st.uplink_free_at`) is the fallback and stays mirrored.
+        alloc = decision.alloc
         dispatch = max(req.arrival, decision.defer_until)
         free = st.uplink_free_at if links is None \
             else max(links[name] for name in path)
         tx_start = max(dispatch, free)
-        tx_dur = spec.tx_time(req.payload_bytes, factors[j])
+        tx_dur = spec.tx_time(req.payload_bytes, factors[j] * alloc.bw_share)
         if links is not None:
             for name in path:
                 links[name] = tx_start + tx_dur
@@ -721,19 +760,23 @@ class Simulator:
         ready = tx_start + tx_dur
         # transmission energy accrues over the whole transfer window,
         # including the congestion queue — "network congestion causes cloud
-        # servers to incur unnecessary energy costs" (paper §2.3)
-        st.e_tx += (ready - req.arrival) * spec.tx_power
+        # servers to incur unnecessary energy costs" (paper §2.3); the
+        # transfer itself draws tx_power × bw_share (see the event runtime)
+        st.e_tx += (ready - req.arrival) * spec.tx_power \
+            - (1.0 - alloc.bw_share) * tx_dur * spec.tx_power
         st.tx_busy_time += tx_dur
 
-        # batch lane with hidden efficiency + noise
+        # batch lane with hidden efficiency + noise, stretched by the
+        # allocation (tier frequency × lane share)
         lanes = lane_free[j]
         li = int(np.argmin(lanes))
         begin = max(ready, lanes[li])
-        t_inf = self._draw_infer(req, j)
+        t_inf = self._draw_infer(req, j, alloc=alloc)
         finish = begin + t_inf
         lanes[li] = finish
         st.busy_time += t_inf / spec.max_concurrency
-        st.e_infer += spec.infer_energy(t_inf)
+        st.e_infer += spec.infer_energy(t_inf, tier=alloc.freq_tier,
+                                        lane_share=alloc.lane_share)
         st.tokens_out += req.output_tokens
         st.served += 1
 
@@ -744,4 +787,6 @@ class Simulator:
             server=j, tx_time=(ready - req.arrival), queue_time=max(
                 begin - ready, 0.0), infer_time=t_inf, finish=finish,
             processing_time=proc, success=proc <= req.deadline,
-            energy=tx_dur * spec.tx_power + spec.infer_energy(t_inf))
+            energy=tx_dur * spec.tx_power * alloc.bw_share
+            + spec.infer_energy(t_inf, tier=alloc.freq_tier,
+                                lane_share=alloc.lane_share))

@@ -2,9 +2,9 @@
 collaboration (PerLLM, Alg. 1), the compared baselines, and the unified
 `SchedulingPolicy` API both runtimes drive."""
 from repro.core.api import (
-    ClusterView, Decision, LegacyPolicyAdapter, RunningTask, SchedulerBase,
-    SchedulingPolicy, as_policy, available_policies, drive_slot, make_policy,
-    register_policy,
+    Allocation, ClusterView, Decision, NOMINAL, RunningTask,
+    SchedulingPolicy, available_policies, drive_slot, ensure_policy,
+    make_policy, register_policy,
 )
 from repro.core.bandit import CSUCB, CSUCBParams
 from repro.core.runtime import (
@@ -17,14 +17,14 @@ from repro.core.constraints import ConstraintSlacks, evaluate_constraints
 from repro.core.scheduler import PerLLMScheduler
 
 __all__ = [
-    "AGOD", "Arrival", "BandwidthChange", "CSUCB", "CSUCBParams",
-    "ClusterView", "ConstraintSlacks", "Decision", "Deferred", "Event",
-    "EventLoop", "FineInfer", "InferDone", "InferStart",
-    "KVPressureScenario", "LegacyPolicyAdapter", "PerLLMScheduler",
+    "AGOD", "Allocation", "Arrival", "BandwidthChange", "CSUCB",
+    "CSUCBParams", "ClusterView", "ConstraintSlacks", "Decision", "Deferred",
+    "Event", "EventLoop", "FineInfer", "InferDone", "InferStart",
+    "KVPressureScenario", "NOMINAL", "PerLLMScheduler",
     "Preempt", "Reject",
     "RewardlessGuidance", "Runtime", "RunningTask", "Scenario",
-    "SchedulerBase", "SchedulingPolicy", "TxDone", "as_policy",
+    "SchedulingPolicy", "TxDone",
     "available_policies", "available_scenarios", "drive_slot",
-    "evaluate_constraints", "make_baselines", "make_policy", "make_scenario",
-    "register_policy", "register_scenario",
+    "ensure_policy", "evaluate_constraints", "make_baselines", "make_policy",
+    "make_scenario", "register_policy", "register_scenario",
 ]

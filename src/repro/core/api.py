@@ -1,14 +1,20 @@
 """The unified scheduling contract shared by the simulator and live server.
 
 One protocol, two runtimes. A scheduler is a `SchedulingPolicy`: per
-request it returns a `Decision` (server, optional dispatch deferral, an
-inference-time correction, and per-constraint slack diagnostics); after the
-request completes it receives the realized `feedback`. The *runtime* — the
-discrete-event `Simulator` or the live `PerLLMServer` — owns the
-`ClusterView` it exposes, applies each Decision's residual accounting via
-`ClusterView.commit`, and applies the deferral. Policies never mutate
-requests or runtime state directly; the old protocol's bare server indices
-plus `req.defer_until` side effects are gone.
+request it returns a `Decision` (server, a resource `Allocation`, optional
+dispatch deferral, an inference-time correction, and per-constraint slack
+diagnostics); after the request completes it receives the realized
+`feedback`. The *runtime* — the discrete-event `Simulator` or the live
+`PerLLMServer` — owns the `ClusterView` it exposes, applies each Decision's
+residual accounting via `ClusterView.commit`, and applies the deferral.
+Policies never mutate requests or runtime state directly.
+
+Scheduling *and* resource allocation are one decision (paper Eq. 1 jointly
+minimizes energy over both): a `Decision` names not just *where* a request
+runs but *how* — the server's DVFS frequency tier and the lane/uplink
+shares granted to it. Runtimes scale realized time, energy and ledger
+bookings by the allocation; the default `Allocation()` is the nominal tier
+with full shares and reproduces the placement-only behavior bit-exactly.
 
 Layering: this module is the bottom of the scheduling stack. It imports
 nothing from `repro.cluster`; server specs and requests are structural
@@ -19,9 +25,9 @@ Policies register themselves by name (`@register_policy("perllm")`) and are
 constructed with `make_policy(name, n_servers, **kw)` — benchmarks,
 examples, and the serve CLI all go through the registry.
 
-A thin deprecation shim keeps out-of-tree `SchedulerBase` subclasses (the
-old batch `schedule() -> List[int]` protocol) runnable: `as_policy()` wraps
-them and `drive_slot()` routes them through their original batch call.
+The pre-PR-1 `SchedulerBase` batch protocol and its `as_policy` shim are
+retired: nothing in-tree (or in the docs) subclasses it anymore, and
+`drive_slot` drives `SchedulingPolicy.assign` only.
 """
 from __future__ import annotations
 
@@ -37,24 +43,84 @@ if TYPE_CHECKING:  # type-only: keeps core.api free of upward imports
 
 
 # ---------------------------------------------------------------------------
+# Allocation — how much of the chosen server a request gets
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """Per-request resource vector carried by a `Decision`.
+
+    freq_tier   index into the server's `spec.freq_tiers` DVFS table;
+                -1 selects the nominal tier (frequency 1.0) regardless of
+                the table, so allocation-blind policies never need to know
+                a server's tier count. At frequency f, inference time
+                scales as 1/f and dynamic power as f³ — so energy *per
+                token* scales as f²: a slow tier that still meets the
+                deadline is strictly cheaper.
+    lane_share  fraction of one batch lane's compute granted, in (0, 1]; a
+                share s stretches inference by 1/s while drawing s of the
+                lane's dynamic power (per-request energy is
+                share-invariant — the share is a latency/capacity knob)
+    bw_share    fraction of the (factor-adjusted) uplink granted to the
+                transfer, in (0, 1]; stretches the transfer by 1/s while
+                the radio draws s of `tx_power`
+
+    Shares use exclusive-window semantics: the lane/link is booked for the
+    stretched duration, so concurrently committed shares can never
+    oversubscribe a resource (property-tested in
+    `tests/test_allocation.py`).
+    """
+
+    freq_tier: int = -1
+    lane_share: float = 1.0
+    bw_share: float = 1.0
+
+    def __post_init__(self):
+        if not (0.0 < self.lane_share <= 1.0):
+            raise ValueError(f"lane_share must be in (0, 1], got "
+                             f"{self.lane_share}")
+        if not (0.0 < self.bw_share <= 1.0):
+            raise ValueError(f"bw_share must be in (0, 1], got "
+                             f"{self.bw_share}")
+
+    def freq(self, spec) -> float:
+        """Resolved frequency on `spec` (1.0 for the nominal tier)."""
+        if self.freq_tier < 0:
+            return 1.0
+        return float(spec.freq_tiers[self.freq_tier])
+
+
+#: The nominal allocation: nominal frequency tier, full lane and uplink.
+NOMINAL = Allocation()
+
+
+# ---------------------------------------------------------------------------
 # Decision — what a policy returns for one request
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class Decision:
-    """One request's placement, returned by `SchedulingPolicy.assign`.
+    """One request's placement + allocation, returned by
+    `SchedulingPolicy.assign`.
 
     server          index of the chosen server (C4: exactly one per
                     request; for a rejection it names the server the
                     policy *would* have used — learners need an arm index)
+    alloc           the resource `Allocation` granted on that server
+                    (DVFS tier, lane share, uplink share); the default is
+                    nominal-everything, which runtimes honor bit-exactly
+                    as the placement-only behavior
     defer_until     earliest dispatch time; 0.0 = dispatch on arrival (used
                     by deferred-batching policies such as FineInfer)
     infer_scale     multiplicative correction the policy has learned for
                     the nominal inference-time model on this server; the
-                    runtime commits lane residuals scaled by it
-    slacks          per-constraint slack diagnostics (C1/C2/C3) at decision
-                    time, if the policy evaluated them — observational
+                    runtime commits lane residuals scaled by it (applied
+                    on top of the allocation's 1/(f·lane_share) stretch)
+    slacks          per-constraint slack diagnostics (C1/C2/C3/C5) at
+                    decision time, evaluated *at the chosen allocation* —
+                    observational
     admit           False = admission control sheds the request: the
                     runtime emits a rejected Outcome (SLO-violation cost,
                     zero server energy) instead of queueing it
@@ -71,6 +137,7 @@ class Decision:
     """
 
     server: int
+    alloc: Allocation = NOMINAL
     defer_until: float = 0.0
     infer_scale: float = 1.0
     slacks: Optional["ConstraintSlacks"] = None
@@ -92,6 +159,7 @@ class RunningTask:
     booked lane; `deadline_at` is the absolute SLO instant
     (arrival + deadline). A task with `finish_est > deadline_at` is doomed
     — preempting it frees its lane without costing an extra SLO miss.
+    `tier` is the DVFS tier the task is running at (-1 = nominal).
     """
 
     sid: int
@@ -100,6 +168,7 @@ class RunningTask:
     deadline_at: float
     begin: float        # when its lane booking starts (may be in the past)
     finish_est: float
+    tier: int = -1
 
     @property
     def doomed(self) -> bool:
@@ -126,9 +195,10 @@ class ClusterView:
     link_bw     observed bits/s per named link (capacity × factor × scale)
     link_queue  seconds of serialized backlog per named link
     paths       link names each server's ingress traffic traverses
-    running     per-server in-flight tasks (`RunningTask`) — what a
-                preemption-capable policy may name as `preempt_victim`;
-                None when the runtime does not support preemption
+    running     per-server in-flight tasks (`RunningTask`, including the
+                tier each runs at) — what a preemption-capable policy may
+                name as `preempt_victim`; None when the runtime does not
+                support preemption
 
     KV memory — the binding resource for LLM decode on edge hardware — is
     first-class when the runtime models it (paged engines / `ServerSpec`s
@@ -138,6 +208,14 @@ class ClusterView:
     kv_total_blocks  each server's block-pool size; an entry of 0 means
                      that server does not model KV (its kv_free_blocks
                      entry is meaningless and the KV constraint is vacuous)
+
+    Allocation state — the committed-share ledger IS `uplink_free_at` /
+    `lane_free` (shares use exclusive stretched-window bookings, so a
+    resource is never >100% committed); `tier_load`, when the runtime
+    models multiple DVFS tiers, additionally splits each server's
+    committed lane-seconds by frequency tier (advanced by `commit`), so
+    tier-aware policies can see how a server's capacity is currently
+    paced.
     """
 
     t: float
@@ -151,50 +229,79 @@ class ClusterView:
     running: Optional[List[List[RunningTask]]] = None
     kv_free_blocks: Optional[List[int]] = None
     kv_total_blocks: Optional[List[int]] = None
+    tier_load: Optional[List[List[float]]] = None
 
     @property
     def n_servers(self) -> int:
         return len(self.specs)
 
+    def n_tiers(self, j: int) -> int:
+        """Size of server j's DVFS table (1 when the spec predates tiers)."""
+        return len(getattr(self.specs[j], "freq_tiers", (1.0,)))
+
     # ---------------- nominal predictors (no hidden factors) -------------
-    def predict_tx(self, req, j: int) -> float:
+    def predict_tx(self, req, j: int,
+                   alloc: Optional[Allocation] = None) -> float:
         spec = self.specs[j]
+        share = 1.0 if alloc is None else alloc.bw_share
         start = max(self.t, self.uplink_free_at[j])
-        dur = req.payload_bytes * 8.0 / (spec.bandwidth * self.bw_factor[j])
+        dur = req.payload_bytes * 8.0 \
+            / (spec.bandwidth * self.bw_factor[j] * share)
         return (start - self.t) + dur
 
-    def predict_queue(self, req, j: int) -> float:
-        ready = self.t + self.predict_tx(req, j)
+    def predict_queue(self, req, j: int,
+                      alloc: Optional[Allocation] = None) -> float:
+        ready = self.t + self.predict_tx(req, j, alloc)
         lane = min(self.lane_free[j])
         return max(lane - ready, 0.0)
 
-    def predict_infer(self, req, j: int) -> float:
-        return self.specs[j].service_time(req.prompt_tokens,
-                                          req.output_tokens)
+    def predict_infer(self, req, j: int,
+                      alloc: Optional[Allocation] = None) -> float:
+        nominal = self.specs[j].service_time(req.prompt_tokens,
+                                             req.output_tokens)
+        if alloc is None:
+            return nominal
+        return nominal / (alloc.freq(self.specs[j]) * alloc.lane_share)
 
-    def predict_total(self, req, j: int) -> float:
-        return (self.predict_tx(req, j) + self.predict_queue(req, j)
-                + self.predict_infer(req, j))
+    def predict_total(self, req, j: int,
+                      alloc: Optional[Allocation] = None) -> float:
+        return (self.predict_tx(req, j, alloc)
+                + self.predict_queue(req, j, alloc)
+                + self.predict_infer(req, j, alloc))
 
     # ---------------- residual accounting (runtime-applied) --------------
-    def commit(self, req, j: int, infer_scale: float = 1.0) -> None:
-        """Update residuals as if req were placed on j.
+    def commit(self, req, j: int, infer_scale: float = 1.0,
+               alloc: Optional[Allocation] = None) -> None:
+        """Update residuals as if req were placed on j under `alloc`.
 
         Called by the runtime (`drive_slot`), not by policies — that is what
-        guarantees C2/C3 accounting cannot be silently skipped."""
+        guarantees C2/C3 accounting cannot be silently skipped. Allocation
+        shares book their *stretched* windows exclusively (a half-share
+        transfer occupies the uplink twice as long), so the committed-share
+        ledger can never oversubscribe; a non-nominal tier books the
+        slowed lane window and is tallied in `tier_load`."""
         spec = self.specs[j]
+        share = 1.0 if alloc is None else alloc.bw_share
         start = max(self.t, self.uplink_free_at[j])
-        dur = req.payload_bytes * 8.0 / (spec.bandwidth * self.bw_factor[j])
+        dur = req.payload_bytes * 8.0 \
+            / (spec.bandwidth * self.bw_factor[j] * share)
         self.uplink_free_at[j] = start + dur
         ready = start + dur
         lanes = self.lane_free[j]
         li = int(np.argmin(lanes))
         begin = max(ready, lanes[li])
-        lanes[li] = begin + self.predict_infer(req, j) * infer_scale
+        booked = self.predict_infer(req, j, alloc) * infer_scale
+        lanes[li] = begin + booked
+        if self.tier_load is not None:
+            tier = -1 if alloc is None else alloc.freq_tier
+            if tier < 0:
+                tier = getattr(spec, "nominal_tier", 0)
+            self.tier_load[j][tier] += booked
 
     def apply(self, req, decision: Decision) -> None:
-        """Commit one Decision's residuals."""
-        self.commit(req, decision.server, infer_scale=decision.infer_scale)
+        """Commit one Decision's residuals (placement + allocation)."""
+        self.commit(req, decision.server, infer_scale=decision.infer_scale,
+                    alloc=decision.alloc)
 
 
 # ---------------------------------------------------------------------------
@@ -206,9 +313,7 @@ class SchedulingPolicy:
     """Per-request scheduling contract.
 
     Subclasses implement `assign` (pure with respect to the view: no
-    `commit`, no request mutation) and optionally `feedback`. The legacy
-    batch entry points `schedule`/`observe` are provided for backward
-    compatibility and route through the runtime driver.
+    `commit`, no request mutation) and optionally `feedback`.
     """
 
     name = "policy"
@@ -219,99 +324,27 @@ class SchedulingPolicy:
     def feedback(self, request, outcome) -> None:
         """Realized outcome for a previously assigned request."""
 
-    # ---------------- deprecated batch protocol (shim) -------------------
-    def schedule(self, arrivals: Sequence[Any], view: ClusterView,
-                 t_slot: int = 0) -> List[int]:
-        """Deprecated: old `SchedulerBase.schedule` signature.
 
-        Drives this policy through the runtime loop (commit included) and
-        returns bare server indices, so pre-redesign call sites keep
-        working."""
-        return [d.server for d in drive_slot(self, arrivals, view, t_slot)]
+def ensure_policy(policy) -> SchedulingPolicy:
+    """Validate that `policy` implements the `SchedulingPolicy` contract.
 
-    def observe(self, request, outcome) -> None:
-        """Deprecated alias for `feedback`."""
-        self.feedback(request, outcome)
-
-
-class SchedulerBase:
-    """Deprecated legacy contract (batch `schedule() -> List[int]` with
-    policy-side `view.commit` and `req.defer_until` mutation).
-
-    Kept so out-of-tree subclasses still run: both runtimes wrap instances
-    with `as_policy()` and drive them through their original batch call.
-    New code should subclass `SchedulingPolicy`."""
-
-    name = "base"
-
-    def schedule(self, arrivals: List[Any], view: ClusterView,
-                 t_slot: int) -> List[int]:
-        raise NotImplementedError
-
-    def observe(self, request, outcome) -> None:
-        pass
-
-
-class LegacyPolicyAdapter(SchedulingPolicy):
-    """Wraps an old-protocol scheduler as a `SchedulingPolicy`.
-
-    Inside `drive_slot` the wrapped scheduler runs through its original
-    batch `schedule` call (committing on the view itself, exactly as
-    before); its side effects are lifted into `Decision` objects. The
-    per-request `assign` below honors the new contract instead: the legacy
-    scheduler runs on a *shadow copy* of the view, so the caller's view is
-    untouched and the runtime's `view.apply` commits exactly once.
-    `assign` passes `int(view.t)` as a pseudo slot index (the adapter
-    cannot know the runtime's slot length); exact slot indices flow through
-    `drive_slot`'s batch path, and no in-repo scheduler reads `t_slot`."""
-
-    def __init__(self, legacy):
-        self.legacy = legacy
-
-    @property
-    def name(self) -> str:  # type: ignore[override]
-        return getattr(self.legacy, "name", type(self.legacy).__name__)
-
-    def assign(self, request, view: ClusterView) -> Decision:
-        shadow = ClusterView(
-            t=view.t, specs=view.specs, bw_factor=list(view.bw_factor),
-            uplink_free_at=list(view.uplink_free_at),
-            lane_free=[list(lf) for lf in view.lane_free])
-        (j,) = self.legacy.schedule([request], shadow, int(view.t))
-        j = int(j)
-        # Lift the legacy commit's lane booking into the Decision so the
-        # runtime's single commit reproduces it (the old protocol let the
-        # scheduler scale the nominal inference time, e.g. the seed
-        # PerLLMScheduler's learned infer_ratio).
-        infer_scale = 1.0
-        changed = [i for i, (a, b) in
-                   enumerate(zip(view.lane_free[j], shadow.lane_free[j]))
-                   if a != b]
-        if len(changed) == 1:
-            li = changed[0]
-            begin = max(shadow.uplink_free_at[j], view.lane_free[j][li])
-            nominal = view.predict_infer(request, j)
-            booked = shadow.lane_free[j][li] - begin
-            if nominal > 0 and booked > 0:
-                infer_scale = booked / nominal
-        return Decision(server=j,
-                        defer_until=float(getattr(request, "defer_until",
-                                                  0.0)),
-                        infer_scale=infer_scale)
-
-    def feedback(self, request, outcome) -> None:
-        self.legacy.observe(request, outcome)
-
-
-def as_policy(scheduler) -> SchedulingPolicy:
-    """Coerce a scheduler of either protocol into a `SchedulingPolicy`."""
-    if isinstance(scheduler, SchedulingPolicy):
-        return scheduler
-    if callable(getattr(scheduler, "schedule", None)):
-        return LegacyPolicyAdapter(scheduler)
+    The legacy batch `SchedulerBase` protocol is retired; anything that
+    only offers `.schedule` gets a migration-pointing TypeError instead of
+    a silent shim. Duck-typed policies must provide the *whole* runtime
+    surface (`assign`, `feedback`, `name`) so an incomplete object fails
+    here, at run start, rather than mid-simulation at its first completed
+    request."""
+    if isinstance(policy, SchedulingPolicy):
+        return policy
+    if callable(getattr(policy, "assign", None)) \
+            and callable(getattr(policy, "feedback", None)) \
+            and isinstance(getattr(policy, "name", None), str):
+        return policy
     raise TypeError(
-        f"{type(scheduler).__name__} implements neither SchedulingPolicy "
-        "(.assign) nor the legacy SchedulerBase protocol (.schedule)")
+        f"{type(policy).__name__} does not implement SchedulingPolicy "
+        "(.assign/.feedback/.name); the legacy SchedulerBase batch "
+        "protocol was removed — see docs/scheduling_api.md for the "
+        "migration recipe")
 
 
 # ---------------------------------------------------------------------------
@@ -325,24 +358,9 @@ def drive_slot(policy, arrivals: Sequence[Any], view: ClusterView,
 
     This is the runtime side of the contract: the policy only *returns*
     Decisions; residual accounting (`view.commit`) happens here, in arrival
-    order, so within-slot C2/C3 consumption is always recorded. Legacy
-    schedulers (old batch protocol) are driven through their original
-    `schedule` call — they commit themselves — and their side effects are
-    lifted into Decisions.
+    order, so within-slot C2/C3 consumption is always recorded.
     """
-    legacy = None
-    if isinstance(policy, LegacyPolicyAdapter):
-        legacy = policy.legacy
-    elif not isinstance(policy, SchedulingPolicy) \
-            and callable(getattr(policy, "schedule", None)):
-        legacy = policy
-    if legacy is not None:
-        choices = legacy.schedule(list(arrivals), view, t_slot)
-        assert len(choices) == len(arrivals)
-        return [Decision(server=int(j),
-                         defer_until=float(getattr(r, "defer_until", 0.0)))
-                for r, j in zip(arrivals, choices)]
-
+    policy = ensure_policy(policy)
     decisions: List[Decision] = []
     for req in arrivals:
         d = policy.assign(req, view)
@@ -411,7 +429,7 @@ def _load_builtin_policies() -> None:
 
 
 __all__ = [
-    "ClusterView", "Decision", "LegacyPolicyAdapter", "RunningTask",
-    "SchedulerBase", "SchedulingPolicy", "as_policy", "available_policies",
-    "drive_slot", "make_policy", "register_policy",
+    "Allocation", "ClusterView", "Decision", "NOMINAL", "RunningTask",
+    "SchedulingPolicy", "available_policies", "drive_slot", "ensure_policy",
+    "make_policy", "register_policy",
 ]

@@ -19,6 +19,12 @@ picks the server minimizing expected free energy = normalized *nominal*
 expected completion time + normalized expected energy. No reward learning
 (that is the method's premise) — so it cannot adapt to hidden efficiency or
 congestion dynamics, which is exactly what the paper exploits.
+
+All three baselines are *allocation-blind*: their Decisions carry the
+default nominal `Allocation` (nominal DVFS tier, full lane/uplink shares),
+because none of the published methods models per-request compute
+allocation. On a tiered testbed that is precisely the energy PerLLM's
+(class, server, tier) arm space gets to claw back.
 """
 from __future__ import annotations
 
@@ -103,8 +109,8 @@ class RewardlessGuidance(SchedulingPolicy):
         spec = view.specs[j]
         t_inf = view.predict_infer(req, j)
         t_tx = req.payload_bytes * 8.0 / spec.bandwidth
-        return ((spec.power_active - spec.power_idle)
-                / spec.max_concurrency * t_inf + spec.tx_power * t_tx)
+        # nominal-tier dynamic energy — the one formula runtimes charge
+        return spec.infer_energy(t_inf) + spec.tx_power * t_tx
 
     def assign(self, req, view: ClusterView) -> Decision:
         # expected free energy from *static nominal* models (rewardless:

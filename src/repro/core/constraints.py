@@ -19,7 +19,7 @@ import dataclasses
 from typing import Optional
 
 from repro.cluster.workload import ServiceRequest
-from repro.core.api import ClusterView
+from repro.core.api import Allocation, ClusterView
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,24 +41,31 @@ class ConstraintSlacks:
 
 def evaluate_constraints(req: ServiceRequest, j: int, view: ClusterView,
                          predicted_time: Optional[float] = None,
+                         alloc: Optional[Allocation] = None,
                          ) -> ConstraintSlacks:
     """Normalized slacks for assigning `req` to server `j` given residuals.
 
     `predicted_time` lets CS-UCB substitute its *learned* processing-time
     estimate for C1; the default is the nominal analytic predictor.
+    `alloc` evaluates feasibility *at that allocation*: a slow DVFS tier
+    stretches both the C1 completion estimate and the C2 lane-seconds the
+    request needs — a slow tier that still fits is feasible (and cheaper),
+    which is exactly the arm space the tier-aware CS-UCB searches.
     """
     spec = view.specs[j]
-    d_hat = (view.predict_total(req, j) if predicted_time is None
+    d_hat = (view.predict_total(req, j, alloc) if predicted_time is None
              else predicted_time)
     time_slack = (req.deadline - d_hat) / req.deadline
 
     # C2 — compute: lane-seconds already committed within the deadline
-    # horizon vs. available lane-seconds.
+    # horizon vs. available lane-seconds. A slowed (low-tier / sub-lane)
+    # allocation occupies its lane for the stretched window, so it needs
+    # proportionally more of the horizon.
     horizon = req.deadline
     lanes = view.lane_free[j]
     committed = sum(max(lf - view.t, 0.0) for lf in lanes)
     capacity = spec.max_concurrency * horizon
-    need = view.predict_infer(req, j)
+    need = view.predict_infer(req, j, alloc)
     compute_slack = (capacity - committed - need) / capacity
 
     # C3 — bandwidth: uplink backlog + this payload vs. deliverable bits

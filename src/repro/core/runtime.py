@@ -44,7 +44,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.api import ClusterView, Decision, as_policy, drive_slot
+from repro.core.api import ClusterView, Decision, drive_slot, ensure_policy
 
 
 # ---------------------------------------------------------------------------
@@ -213,7 +213,7 @@ class Runtime:
     """
 
     def __init__(self, policy) -> None:
-        self.policy = as_policy(policy)
+        self.policy = ensure_policy(policy)
         self.loop = EventLoop()
         self.clock = 0.0
 
@@ -244,8 +244,9 @@ class Runtime:
 
     # ---------------- generic driving ------------------------------------
     def slot_index(self, t: float) -> int:
-        """Slot ordinal passed to legacy batch schedulers; event-driven
-        runtimes have no slots, so default to whole seconds."""
+        """Slot ordinal forwarded to `drive_slot` (diagnostics only);
+        event-driven runtimes have no slots, so default to whole
+        seconds."""
         return int(t)
 
     def on_arrival(self, ev: Arrival) -> None:

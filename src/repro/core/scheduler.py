@@ -2,14 +2,23 @@
 
 Implements paper Algorithm 1 as a `SchedulingPolicy`. Per slot, arrivals
 are assigned sequentially (building the super arm): for each service the
-constraint-satisfaction mechanism filters the feasible servers using
-*learned* processing-time estimates and CS-UCB picks the feasible arm with
-the best UCB score. The runtime commits each `Decision`'s residuals before
-asking for the next one, so later services in the same slot see the reduced
-capacity (C2/C3 accounting).
+constraint-satisfaction mechanism filters the feasible (server, DVFS tier)
+pairs using *learned* processing-time estimates, and CS-UCB picks the
+feasible arm with the best UCB score — placement and compute allocation
+are one joint decision (paper Eq. 1). The runtime commits each `Decision`'s
+residuals before asking for the next one, so later services in the same
+slot see the reduced capacity (C2/C3 accounting).
+
+Tier selection is where the energy story lives: a slower tier stretches
+inference (time ∝ 1/f) but cuts dynamic power cubically, so energy per
+token falls as f² — the bandit's reward (−energy + λ·f(y)⁻) converges to
+the *cheapest* feasible allocation per (class, server), not the fastest.
+On a single-tier testbed the arm space degenerates to (class, server) and
+the trajectory is bit-exact with the placement-only scheduler.
 
 Observed outcomes arrive via `feedback`: reward = −energy_norm + λ·f(y)
-(Eq. 4), plus a violation-severity update that drives the penalty term P(t).
+(Eq. 4, f(y) clipped into [−1, 0] — see `repro.core.bandit`), plus a
+violation-severity update that drives the penalty term P(t).
 """
 from __future__ import annotations
 
@@ -19,14 +28,17 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.cluster.workload import N_CLASSES
-from repro.core.api import ClusterView, Decision, SchedulingPolicy, \
-    register_policy
+from repro.core.api import Allocation, ClusterView, Decision, \
+    SchedulingPolicy, register_policy
 from repro.core.bandit import CSUCB, CSUCBParams
 from repro.core.constraints import ConstraintSlacks, evaluate_constraints
 
 # Energy normalization scale (J) — a typical per-service energy magnitude;
-# keeps the two reward terms in Eq. 4 comparable.
-E_SCALE = 100.0
+# keeps the two reward terms in Eq. 4 comparable. Calibrated so the
+# energy differences between DVFS tiers of one server are visible above
+# the UCB exploration term (with f(y) clipped into [−1, 0] the energy
+# term is what ranks feasible arms).
+E_SCALE = 60.0
 
 
 @register_policy("perllm")
@@ -38,16 +50,21 @@ class PerLLMScheduler(SchedulingPolicy):
     requests inside their SLOs. `preempt=True` additionally lets an
     otherwise-infeasible request reclaim a lane from a running task that
     is already doomed to miss its own deadline (`Decision.preempt_victim`,
-    event-driven runtimes only)."""
+    event-driven runtimes only). `tiers=False` pins every decision to the
+    nominal DVFS tier — the fixed-frequency comparator the energy
+    benchmarks (and the nominal-tier golden test) run against."""
 
     name = "PerLLM"
 
     def __init__(self, n_servers: int, params: Optional[CSUCBParams] = None,
                  seed: int = 0, admission: bool = False,
-                 preempt: bool = False):
+                 preempt: bool = False, tiers: bool = True):
         self.n_servers = n_servers
         self.admission = admission
         self.preempt = preempt
+        self.tiers = tiers
+        self._seed = seed
+        self._params = params
         self.bandit = CSUCB(N_CLASSES, n_servers, params, seed=seed)
         # learned per-(class, server) processing-time ratio vs the nominal
         # analytic estimate (captures hidden efficiency + congestion)
@@ -58,6 +75,7 @@ class PerLLMScheduler(SchedulingPolicy):
         # per-(class, server) inference-time ratio (hidden efficiency)
         self.infer_ratio = np.ones((N_CLASSES, n_servers), np.float64)
         self._pending_slacks: Dict[int, ConstraintSlacks] = {}
+        self._pending_tier: Dict[int, int] = {}
         self._nominal_pred: Dict[int, float] = {}
         self._last_nominal_infer: Dict[int, float] = {}
 
@@ -65,61 +83,159 @@ class PerLLMScheduler(SchedulingPolicy):
     # C1 safety margin: guards against realization noise and within-slot
     # queue drift when checking the processing-time constraint.
     SAFETY = 1.05
+    # Non-nominal DVFS tiers deliberately spend deadline slack for energy,
+    # so they get a stricter bar than bare feasibility: the predicted time
+    # must leave TIER_GUARD relative headroom, and the (class, server)
+    # estimators must have seen a few calibration outcomes first (slowing
+    # a server down before its hidden efficiency is known converts
+    # prediction error straight into SLO misses).
+    TIER_GUARD = 0.05
+    TIER_WARMUP = 3
+    # ... and the server must retain lane-capacity headroom (C2 slack):
+    # downtiering occupies the lane longer, and on a loaded server that
+    # stolen lane-time surfaces as queue drift for *later, nominal-tier*
+    # requests — the misses show up far from the arm that caused them, so
+    # the bandit's own penalty cannot learn them away.
+    TIER_COMPUTE_GUARD = 0.25
+    # Adaptive component: the time-headroom bar rises with the
+    # (class, server)'s observed violation severity (the bandit's V̄,
+    # congestion-coupled across tiers), so a host whose requests have been
+    # missing deadlines stops being downtiered until it cools off.
+    TIER_VIOL_GAIN = 2.0
+    # Allocation-aware admission: with DVFS tiers in play, committed lane
+    # windows are stretched and queue-drift error correspondingly larger,
+    # so an admission-enabled tiered scheduler demands this much positive
+    # C1 headroom on the arm it admits on — slack is spent on energy, not
+    # on risky admits. Inactive without `admission` or on untiered specs.
+    TIER_ADMIT_GUARD = 0.02
 
-    def predicted_time(self, req, j: int, view: ClusterView) -> float:
+    def _tier_table(self, view: ClusterView) -> List[List[int]]:
+        """Per-server candidate tier indices (just the nominal tier when
+        tier selection is disabled), sizing the bandit's arm space on
+        first contact with the cluster's specs."""
+        if not self.tiers:
+            return [[spec_nominal(view.specs[j])]
+                    for j in range(self.n_servers)]
+        table = [list(range(view.n_tiers(j)))
+                 for j in range(self.n_servers)]
+        width = max(len(t) for t in table)
+        if width != self.bandit.n_tiers:
+            # first view revealed the real tier count: rebuild the (so far
+            # unpulled) bandit over the (class, server, tier) arm space
+            self.bandit = CSUCB(N_CLASSES, self.n_servers, self._params,
+                                seed=self._seed, n_tiers=width)
+        return table
+
+    def predicted_time(self, req, j: int, view: ClusterView,
+                       alloc: Optional[Allocation] = None) -> float:
         cls = req.class_id
-        d_hat = (view.predict_tx(req, j) + view.predict_queue(req, j)
-                 + view.predict_infer(req, j) * self.infer_ratio[cls, j])
-        margin = math.sqrt(self.err_var[cls, j])
+        d_hat = (view.predict_tx(req, j, alloc)
+                 + view.predict_queue(req, j, alloc)
+                 + view.predict_infer(req, j, alloc)
+                 * self.infer_ratio[cls, j])
+        # the pessimistic margin grows with the allocation's stretch:
+        # realization error is proportional to how long the work runs, so
+        # a half-frequency tier doubles the guard band (exact at nominal)
+        stretch = 1.0 if alloc is None \
+            else 1.0 / (alloc.freq(view.specs[j]) * alloc.lane_share)
+        margin = math.sqrt(self.err_var[cls, j]) * stretch
         return d_hat * self.time_ratio[cls, j] * self.SAFETY + margin
 
     def assign(self, req, view: ClusterView) -> Decision:
-        slacks: List[ConstraintSlacks] = []
-        feasible = np.zeros(self.n_servers, bool)
+        tier_table = self._tier_table(view)
+        width = self.bandit.n_tiers
+        slacks: List[List[Optional[ConstraintSlacks]]] = \
+            [[None] * width for _ in range(self.n_servers)]
+        feasible = np.zeros((self.n_servers, width), bool)
+        allocs: List[List[Optional[Allocation]]] = \
+            [[None] * width for _ in range(self.n_servers)]
         for j in range(self.n_servers):
-            d_hat = self.predicted_time(req, j, view)
-            s = evaluate_constraints(req, j, view, predicted_time=d_hat)
-            slacks.append(s)
-            feasible[j] = s.satisfied
+            nominal_k = spec_nominal(view.specs[j])
+            warmed = self.ratio_count[req.class_id, j] >= self.TIER_WARMUP
+            guard = self.TIER_GUARD + self.TIER_VIOL_GAIN \
+                * float(np.mean(self.bandit.violation[req.class_id, j]))
+            for slot, k in enumerate(tier_table[j]):
+                alloc = Allocation(freq_tier=k)
+                d_hat = self.predicted_time(req, j, view, alloc)
+                s = evaluate_constraints(req, j, view, predicted_time=d_hat,
+                                         alloc=alloc)
+                allocs[j][slot] = alloc
+                slacks[j][slot] = s
+                ok = s.satisfied
+                if ok and k != nominal_k:
+                    ok = warmed and s.time >= guard \
+                        and s.compute >= self.TIER_COMPUTE_GUARD
+                feasible[j, slot] = ok
         admit = True
         victim = None
         drop_kv = False
         kv_home = getattr(req, "kv_server", -1)
-        if 0 <= kv_home < self.n_servers and feasible[kv_home] \
+        if 0 <= kv_home < self.n_servers and feasible[kv_home].any() \
                 and getattr(req, "kv_blocks", 0) > 0:
             # KV affinity: this request's pages survived a preemption on
             # kv_home — resuming there skips the whole re-prefill, which
             # no other feasible server can offer. Requeues are rare, so
-            # bypassing the bandit here costs negligible exploration.
+            # bypassing the bandit here costs negligible exploration; take
+            # the lowest-frequency (cheapest) feasible tier on the KV home
+            # — by actual frequency, not table position (tables need not
+            # be sorted).
             j = kv_home
+            slot = min((s for s in range(len(tier_table[j]))
+                        if feasible[j, s]),
+                       key=lambda s: view.specs[j].freq_tiers[
+                           tier_table[j][s]])
         elif feasible.any():
-            j = self.bandit.select(req.class_id, feasible)
+            guarded = feasible
+            if self.admission and self.bandit.n_tiers > 1:
+                # allocation-aware admission: prefer arms that leave
+                # TIER_ADMIT_GUARD of C1 headroom; shed only when *no*
+                # feasible arm has it (a bare-feasible arm is never shed
+                # while a roomier alternative exists — rejected outcomes
+                # carry no bandit update, so shedding the deterministic
+                # first pick would starve a class forever)
+                roomy = np.array(
+                    [[s is not None and s.time >= self.TIER_ADMIT_GUARD
+                      for s in row] for row in slacks], bool)
+                if (feasible & roomy).any():
+                    guarded = feasible & roomy
+                else:
+                    admit = False
+            j, slot = self.bandit.select(req.class_id, guarded)
         else:
             # C1 failover (paper §3.1): no feasible server -> assign to
-            # the most resource-rich one, i.e. minimum predicted time
+            # the most resource-rich one, i.e. minimum predicted time, at
+            # the nominal tier (the fastest calibrated operating point)
             j = int(np.argmin([self.predicted_time(req, jj, view)
                                for jj in range(self.n_servers)]))
+            slot = tier_table[j].index(spec_nominal(view.specs[j])) \
+                if spec_nominal(view.specs[j]) in tier_table[j] else 0
+            if allocs[j][slot] is None:
+                allocs[j][slot] = Allocation(freq_tier=tier_table[j][slot])
             if self.preempt:
                 victim = self._find_victim(req, view)
             if victim is not None:
                 j = victim.server
+                slot = tier_table[j].index(spec_nominal(view.specs[j])) \
+                    if spec_nominal(view.specs[j]) in tier_table[j] else 0
                 # KV-resume info: when the victim's server is out of KV
                 # *memory* (not just lanes), evicting the lane alone frees
                 # nothing — drop the victim's pages so the preemptor's
                 # blocks fit, accepting the victim's re-prefill elsewhere
-                drop_kv = slacks[j].kv < 0.0
+                drop_kv = slacks[j][slot].kv < 0.0
             elif self.admission:
                 # admission control: shedding beats dumping doomed work on
                 # the least-bad server — the runtime emits the rejected
                 # Outcome (SLO-violation cost) and frees no capacity
                 admit = False
-        self._pending_slacks[req.sid] = slacks[j]
-        self._nominal_pred[req.sid] = self.predicted_time(req, j, view) \
-            / self.SAFETY
-        self._last_nominal_infer[req.sid] = view.predict_infer(req, j)
-        return Decision(server=j,
+        alloc = allocs[j][slot]
+        self._pending_slacks[req.sid] = slacks[j][slot]
+        self._pending_tier[req.sid] = slot
+        self._nominal_pred[req.sid] = \
+            self.predicted_time(req, j, view, alloc) / self.SAFETY
+        self._last_nominal_infer[req.sid] = view.predict_infer(req, j, alloc)
+        return Decision(server=j, alloc=alloc,
                         infer_scale=float(self.infer_ratio[req.class_id, j]),
-                        slacks=slacks[j], admit=admit,
+                        slacks=slacks[j][slot], admit=admit,
                         preempt_victim=None if victim is None
                         else victim.sid,
                         preempt_drop_kv=drop_kv)
@@ -130,8 +246,9 @@ class PerLLMScheduler(SchedulingPolicy):
         Only *doomed* tasks qualify (their estimated finish already misses
         their own deadline — evicting them costs no extra SLO violation),
         and only where `req` could actually meet its deadline once the
-        lane is free (transmission + inference, no lane wait). Among
-        qualifying victims, reclaim the most-doomed lane first."""
+        lane is free (transmission + inference at the nominal tier, no
+        lane wait). Among qualifying victims, reclaim the most-doomed lane
+        first."""
         if not view.running:
             return None
         cls = req.class_id
@@ -155,6 +272,7 @@ class PerLLMScheduler(SchedulingPolicy):
     def feedback(self, req, out) -> None:
         slacks = self._pending_slacks.pop(req.sid, None)
         nominal = self._nominal_pred.pop(req.sid, None)
+        tier_slot = self._pending_tier.pop(req.sid, 0)
         if getattr(out, "rejected", False):
             # the SLO-violation cost of a shed request is a system metric,
             # not an observation: nothing ran, so there is no realized
@@ -172,13 +290,14 @@ class PerLLMScheduler(SchedulingPolicy):
                   slacks.kv if slacks else 1.0)
         reward = self.bandit.shaped_reward(out.energy / E_SCALE, f_y)
         violation = max(-f_y, 0.0)
-        self.bandit.update(cls, j, reward, violation)
+        self.bandit.update(cls, j, reward, violation, tier=tier_slot)
 
         # update learned estimators: per-server efficiency (from pure
         # inference time), per-class residual bias, and error variance
         nom_inf = out.infer_time  # realized
         # realized/nominal inference ratio: EMA, robust to noise
-        # (predict_infer is deterministic given the request)
+        # (predict_infer is deterministic given the request + allocation,
+        # so the ratio isolates the hidden efficiency at any tier)
         self.infer_ratio[cls, j] += 0.1 * (
             out.infer_time / max(self._last_nominal_infer.pop(req.sid, nom_inf),
                                  1e-9) - self.infer_ratio[cls, j])
@@ -195,3 +314,8 @@ class PerLLMScheduler(SchedulingPolicy):
     @property
     def regret_trace(self) -> List[float]:
         return self.bandit.regret_trace
+
+
+def spec_nominal(spec) -> int:
+    """Index of a spec's nominal DVFS tier (0 for pre-tier specs)."""
+    return getattr(spec, "nominal_tier", 0)

@@ -90,6 +90,13 @@ class ServingEngine:
         self._key = jax.random.key(seed)
         self.completed: List[Request] = []
         self.n_prefills = 0       # prompts actually prefilled (resumes skip)
+        # DVFS pacing hint: the relative clock frequency this engine's host
+        # is currently running at. Compute (`step`) is frequency-blind —
+        # the same tokens come out — but the runtime that clocks the engine
+        # (PerLLMServer's per-engine tick cadence) stretches each decode
+        # step by 1/freq_scale, mapping scheduler-chosen tiers onto real
+        # decode-step pacing. Set via `set_freq_scale`.
+        self.freq_scale = 1.0
         self.paged = paged
         self.kv: Optional[PagedKVCache] = None
         if paged:
@@ -152,6 +159,12 @@ class ServingEngine:
             self.kv.free(req.pages)
         req.pages = None
         req.kv = None
+
+    def set_freq_scale(self, freq: float) -> None:
+        """Set the host's DVFS pacing (relative frequency, nominal 1.0)."""
+        if freq <= 0.0:
+            raise ValueError(f"freq_scale must be positive, got {freq}")
+        self.freq_scale = float(freq)
 
     @property
     def active_slots(self) -> List[int]:

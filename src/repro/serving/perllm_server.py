@@ -33,7 +33,7 @@ from repro.cluster.network import BandwidthModel, LinkStateMixin, LinkTopology
 from repro.cluster.server import ServerSpec
 from repro.cluster.simulator import Outcome, rejected_outcome
 from repro.cluster.workload import ServiceRequest, classify
-from repro.core.api import ClusterView, Decision, RunningTask
+from repro.core.api import NOMINAL, ClusterView, Decision, RunningTask
 from repro.core.runtime import (
     Arrival, BandwidthChange, InferStart, Preempt, Reject, Runtime, TxDone,
 )
@@ -102,6 +102,11 @@ class PerLLMServer(Runtime, LinkStateMixin):
         # per-engine logical clocks: each engine ticks at its own analytic
         # decode-step cadence, driven by InferStart events
         self.engine_clock = [0.0] * len(specs)
+        # server-level DVFS state: the tier each host currently runs at.
+        # A Decision's `alloc.freq_tier` retunes the target host at
+        # dispatch; ticks then cost decode_step_time(tier) — scheduler-
+        # chosen tiers mapped onto real decode-step pacing.
+        self.engine_tier = [s.nominal_tier for s in self.specs]
         self._tick_scheduled = [False] * len(specs)
         # completion cursor per engine: eng.completed is append-only, so
         # each tick only inspects the new tail
@@ -165,7 +170,8 @@ class PerLLMServer(Runtime, LinkStateMixin):
                          if sr.engine_req is not None}
         for j, eng in enumerate(self.engines):
             spec = self.specs[j]
-            step_t = spec.decode_step_time()
+            tier = self.engine_tier[j]
+            step_t = spec.decode_step_time(tier=tier)
             base = max(self.engine_clock[j], t)
             lanes = [t] * spec.max_concurrency
             tasks: List[RunningTask] = []
@@ -181,20 +187,30 @@ class PerLLMServer(Runtime, LinkStateMixin):
                         sid=svc.sid, server=j, class_id=svc.class_id,
                         deadline_at=svc.arrival + svc.deadline,
                         begin=sr.admit_clock if sr.admit_clock >= 0 else t,
-                        finish_est=lanes[li]))
+                        finish_est=lanes[li], tier=tier))
             for r in eng.queue:
                 li = int(np.argmin(lanes))
                 lanes[li] = max(lanes[li], base) + spec.service_time(
-                    len(r.prompt), r.max_new_tokens)
+                    len(r.prompt), r.max_new_tokens, tier=tier)
             for sr in self.active.values():
                 if sr.server == j and sr.engine_req is None:
                     li = int(np.argmin(lanes))
                     lanes[li] = max(lanes[li], sr.dispatch_clock) \
                         + spec.service_time(len(sr._prompt),
-                                            sr.service.output_tokens)
+                                            sr.service.output_tokens,
+                                            tier=tier)
             lane_free.append(lanes)
             running.append(tasks)
         topo = self.topology
+        tier_kwargs = {}
+        if any(s.n_tiers > 1 for s in self.specs):
+            # per-server tier state: the committed lane-seconds above,
+            # attributed to each host's current DVFS tier
+            tier_load = [[0.0] * s.n_tiers for s in self.specs]
+            for j, lanes in enumerate(lane_free):
+                tier_load[j][self.engine_tier[j]] = \
+                    sum(max(lf - t, 0.0) for lf in lanes)
+            tier_kwargs = dict(tier_load=tier_load)
         kv_kwargs = {}
         if any(eng.paged for eng in self.engines):
             # paged engines expose their allocator's live free count; a
@@ -212,6 +228,7 @@ class PerLLMServer(Runtime, LinkStateMixin):
                             for j in range(len(self.specs))],
             lane_free=lane_free,
             running=running,
+            **tier_kwargs,
             **kv_kwargs,
             **self.link_view_kwargs(t, factors))
 
@@ -241,15 +258,22 @@ class PerLLMServer(Runtime, LinkStateMixin):
     def dispatch(self, t: float, svc: ServiceRequest,
                  decision: Decision) -> None:
         """Start the uplink transfer; the engine takes over at TxDone.
-        The transfer serializes on every link of the server's path."""
+        The transfer serializes on every link of the server's path (a
+        sub-unit `alloc.bw_share` stretches it by 1/share), and the
+        Decision's DVFS tier retunes the target host's decode pacing."""
         sr = self._by_sid[svc.sid]
         if sr in self._deferred:
             self._deferred.remove(sr)
         j = decision.server
         spec = self.specs[j]
+        alloc = decision.alloc
+        tier = alloc.freq_tier if alloc.freq_tier >= 0 else spec.nominal_tier
+        self.engine_tier[j] = tier
+        self.engines[j].set_freq_scale(spec.tier_freq(tier))
         path = self.topology.paths[j]
         tx_start = max(t, self.topology.path_free_at(j, self.link_free))
-        tx_dur = spec.tx_time(svc.payload_bytes, self._bw_factor(t, j))
+        tx_dur = spec.tx_time(svc.payload_bytes,
+                              self._bw_factor(t, j) * alloc.bw_share)
         for name in path:
             self.link_free[name] = tx_start + tx_dur
         self.uplink_free_at[j] = tx_start + tx_dur
@@ -375,12 +399,14 @@ class PerLLMServer(Runtime, LinkStateMixin):
 
     def on_infer_start(self, ev: InferStart) -> None:
         """One engine tick: admit + one real decode step on engine j,
-        costing that server's analytic per-step latency."""
+        costing that server's analytic per-step latency at the host's
+        current DVFS tier (a slow tier stretches each tick by 1/f)."""
         j = ev.server
         eng = self.engines[j]
         self._tick_scheduled[j] = False
         eng.step()
-        t_end = ev.time + self.specs[j].decode_step_time()
+        t_end = ev.time + self.specs[j].decode_step_time(
+            tier=self.engine_tier[j])
         self.engine_clock[j] = t_end
         self.clock = max(self.clock, t_end)
         for sr in self.active.values():
@@ -400,11 +426,20 @@ class PerLLMServer(Runtime, LinkStateMixin):
         sr.done_clock = t
         spec = self.specs[sr.server]
         # realized split: transmission (uplink wait + transfer), lane wait
-        # (engine queue until prefill admission), inference window
+        # (engine queue until prefill admission), inference window.
+        # DVFS is host-level (last dispatch retunes the host), so the
+        # inference energy is billed at the tier the host is actually
+        # running — the frequency that paced the realized window — not at
+        # the request's own decision tier, which a later dispatch may have
+        # overridden mid-flight; shares stay per-request.
+        alloc = sr.decision.alloc if sr.decision is not None else NOMINAL
         admit = sr.admit_clock if sr.admit_clock >= 0 else sr.dispatch_clock
         queue_time = max(admit - sr.dispatch_clock, 0.0)
         infer_time = max(sr.done_clock - admit, 0.0)
-        energy = spec.infer_energy(infer_time) + spec.tx_power * sr.tx_dur
+        energy = spec.infer_energy(infer_time,
+                                   tier=self.engine_tier[sr.server],
+                                   lane_share=alloc.lane_share) \
+            + spec.tx_power * sr.tx_dur * alloc.bw_share
         out = Outcome(server=sr.server, tx_time=sr.tx_time,
                       queue_time=queue_time, infer_time=infer_time,
                       finish=sr.done_clock, processing_time=sr.latency,

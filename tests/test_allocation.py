@@ -1,0 +1,339 @@
+"""Allocation-aware scheduling contract: DVFS tiers + lane/uplink shares.
+
+Covers the PR's invariants:
+
+* monotone physics — a lower frequency tier is never faster and never
+  spends more dynamic energy per token (time ∝ 1/f, power ∝ f³ ⇒ energy
+  per token ∝ f²); sub-unit shares stretch time without changing
+  per-request energy;
+* no oversubscription — allocations book exclusive stretched windows, so
+  per-lane busy intervals stay disjoint and share bounds are validated;
+* nominal-tier golden — on a testbed whose specs carry a multi-tier DVFS
+  table, pinning every decision to the nominal tier reproduces the
+  single-tier (PR-3 admission/preemption and PR-4 paged-KV) simulator
+  output bit-for-bit;
+* the energy claim — PerLLM's learned (class, server, tier) policy cuts
+  total energy ≥ 20% vs the fixed-nominal-tier PerLLM at equal-or-better
+  admitted SLO attainment on the `diurnal` and `overload` scenarios.
+"""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (
+    BandwidthModel, DVFS_TIERS, Simulator, generate_workload, paper_testbed,
+)
+from repro.cluster.simulator import _EventSimRuntime
+from repro.cluster.workload import classify
+from repro.core import (
+    Allocation, Arrival, CSUCB, ClusterView, Decision, SchedulingPolicy,
+    make_policy,
+)
+
+
+def _req(sid=0, arrival=0.0, prompt=256, out=16, deadline=4.0, payload=2e6):
+    from repro.cluster.workload import ServiceRequest
+    r = ServiceRequest(sid=sid, arrival=arrival, prompt_tokens=prompt,
+                       output_tokens=out, deadline=deadline,
+                       payload_bytes=payload)
+    r.class_id = classify(r)
+    return r
+
+
+def _view(specs, t=0.0):
+    return ClusterView(t=t, specs=specs, bw_factor=[1.0] * len(specs),
+                       uplink_free_at=[0.0] * len(specs),
+                       lane_free=[[0.0] * s.max_concurrency for s in specs])
+
+
+# ---------------------------------------------------------------------------
+# Monotone tier physics
+# ---------------------------------------------------------------------------
+
+
+@given(prompt=st.integers(32, 2048), out=st.integers(4, 96),
+       k1=st.integers(0, len(DVFS_TIERS) - 1),
+       k2=st.integers(0, len(DVFS_TIERS) - 1))
+@settings(max_examples=40, deadline=None)
+def test_lower_tier_never_faster_never_costlier_per_token(prompt, out,
+                                                          k1, k2):
+    """time ∝ 1/f and energy/token ∝ f²: the slower of two tiers is never
+    faster and never spends more dynamic energy per token, on any spec."""
+    if DVFS_TIERS[k1] > DVFS_TIERS[k2]:
+        k1, k2 = k2, k1                       # k1 = slower (lower f)
+    for spec in paper_testbed(freq_tiers=DVFS_TIERS)[:1] + \
+            [paper_testbed(freq_tiers=DVFS_TIERS)[-1]]:
+        t_slow = spec.service_time(prompt, out, tier=k1)
+        t_fast = spec.service_time(prompt, out, tier=k2)
+        assert t_slow >= t_fast
+        tokens = prompt + out
+        e_slow = spec.infer_energy(t_slow, tier=k1) / tokens
+        e_fast = spec.infer_energy(t_fast, tier=k2) / tokens
+        assert e_slow <= e_fast + 1e-12
+        # the nominal tier reproduces the untier'd formulas bit-exactly
+        assert spec.service_time(prompt, out, tier=spec.nominal_tier) \
+            == spec.service_time(prompt, out)
+        assert spec.infer_energy(t_fast, tier=-1) == spec.infer_energy(t_fast)
+
+
+@given(share=st.floats(0.05, 1.0), prompt=st.integers(32, 512),
+       out=st.integers(4, 64))
+@settings(max_examples=25, deadline=None)
+def test_shares_stretch_time_not_per_request_energy(share, prompt, out):
+    """A sub-unit lane/bandwidth share stretches the window by 1/share
+    while drawing share × power — per-request energy is share-invariant."""
+    spec = paper_testbed(freq_tiers=DVFS_TIERS)[0]
+    view = _view([spec])
+    req = _req(prompt=prompt, out=out)
+    full = Allocation()
+    sliced = Allocation(lane_share=share, bw_share=share)
+    t_full = view.predict_infer(req, 0, full)
+    t_sliced = view.predict_infer(req, 0, sliced)
+    assert t_sliced == pytest.approx(t_full / share)
+    assert view.predict_tx(req, 0, sliced) \
+        == pytest.approx(view.predict_tx(req, 0, full) / share)
+    e_full = spec.infer_energy(t_full, lane_share=1.0)
+    e_sliced = spec.infer_energy(t_sliced, lane_share=share)
+    assert e_sliced == pytest.approx(e_full)
+
+
+def test_allocation_validates_share_bounds():
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            Allocation(lane_share=bad)
+        with pytest.raises(ValueError):
+            Allocation(bw_share=bad)
+
+
+# ---------------------------------------------------------------------------
+# Committed shares never oversubscribe
+# ---------------------------------------------------------------------------
+
+
+class _RandomAlloc(SchedulingPolicy):
+    """Pins everything to server 0 with a randomized allocation."""
+
+    name = "random-alloc"
+
+    def __init__(self, n_tiers, seed=0):
+        self.rng = np.random.default_rng(seed)
+        self.n_tiers = n_tiers
+
+    def assign(self, req, view):
+        alloc = Allocation(
+            freq_tier=int(self.rng.integers(self.n_tiers)),
+            lane_share=float(self.rng.uniform(0.3, 1.0)),
+            bw_share=float(self.rng.uniform(0.3, 1.0)))
+        return Decision(server=0, alloc=alloc)
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=15, deadline=None)
+def test_committed_shares_never_oversubscribe(seed):
+    """Random allocations on a one-lane, one-link server: every booking's
+    busy window is exclusive — stretched sub-share bookings can never
+    stack into >100% committed lane or uplink."""
+    import dataclasses
+    spec = dataclasses.replace(paper_testbed(n_edge=1,
+                                             freq_tiers=DVFS_TIERS)[0],
+                               max_concurrency=1)
+    sim = Simulator([spec], slot=None, seed=0)
+    rt = _EventSimRuntime(sim, _RandomAlloc(len(DVFS_TIERS), seed))
+    wl = [copy.copy(s) for s in generate_workload(25, rate=20.0, seed=seed)]
+    for r in wl:
+        r.class_id = classify(r)
+        r.preemptions = 0
+        r.kv_server, r.kv_blocks = -1, 0
+    bookings = []
+    orig = rt.dispatch
+
+    def record(t, req, decision, **kw):
+        orig(t, req, decision, **kw)
+        bookings.append(rt._inflight[req.sid])
+
+    rt.dispatch = record
+    for r in wl:
+        rt.loop.push(Arrival(r.arrival, requests=(r,)))
+    rt.drain()
+    assert len(rt.outcomes) == len(wl)
+    # lane windows disjoint
+    lanes = sorted((b.begin, b.finish) for b in bookings)
+    for (s1, e1), (s2, e2) in zip(lanes, lanes[1:]):
+        assert e1 <= s2 + 1e-9, "lane oversubscribed"
+    # uplink transfer windows disjoint (each holds its stretched duration)
+    links = sorted((b.ready - b.tx_dur, b.ready) for b in bookings)
+    for (s1, e1), (s2, e2) in zip(links, links[1:]):
+        assert e1 <= s2 + 1e-9, "uplink oversubscribed"
+
+
+def test_commit_tracks_tier_load():
+    """`ClusterView.commit` splits committed lane-seconds by tier when the
+    view carries a tier ledger."""
+    specs = paper_testbed(freq_tiers=DVFS_TIERS)
+    view = _view(specs)
+    view.tier_load = [[0.0] * s.n_tiers for s in specs]
+    req = _req()
+    view.commit(req, 0, alloc=Allocation(freq_tier=0))
+    view.commit(req, 0, alloc=Allocation(freq_tier=0))
+    view.commit(req, 0)                       # nominal (tier -1 resolves)
+    nominal = specs[0].nominal_tier
+    assert view.tier_load[0][0] > 0.0
+    assert view.tier_load[0][nominal] > 0.0
+    assert view.tier_load[0][0] == pytest.approx(
+        2.0 * view.tier_load[0][nominal] / DVFS_TIERS[0])
+
+
+# ---------------------------------------------------------------------------
+# CSUCB over (class, server, tier)
+# ---------------------------------------------------------------------------
+
+
+def test_csucb_grid_select_respects_mask_and_returns_pair():
+    bandit = CSUCB(1, 3, n_tiers=4)
+    mask = np.zeros((3, 4), bool)
+    mask[1, 2] = mask[2, 0] = True
+    for _ in range(10):
+        j, k = bandit.select(0, mask)
+        assert mask[j, k]
+        bandit.update(0, j, -0.1, 0.0, tier=k)
+    with pytest.raises(ValueError, match="tiers"):
+        bandit.select(0, np.ones(3, bool))
+
+
+# ---------------------------------------------------------------------------
+# Nominal-tier golden: bit-exact against the single-tier runtime
+# ---------------------------------------------------------------------------
+
+
+def _golden_pair(scenario=None, slot=0.5, n=400, kv_blocks=0,
+                 admission=False, preempt=False):
+    """(single-tier reference, multi-tier-specs-pinned-nominal) SimResults
+    plus per-request server choices, on identical seeds."""
+    results = []
+    for tiered_specs in (False, True):
+        specs = paper_testbed(
+            "llama2-7b", kv_blocks=kv_blocks,
+            freq_tiers=DVFS_TIERS if tiered_specs else (1.0,))
+        wl = [copy.copy(s) for s in generate_workload(
+            n, seed=0, scenario=scenario)]
+        sim = Simulator(specs, BandwidthModel(fluctuating=True, seed=1),
+                        slot=slot, seed=42)
+        # reference: single-tier specs (default policy); candidate:
+        # multi-tier specs with every decision pinned to the nominal tier
+        pol = make_policy("perllm", len(specs), admission=admission,
+                          preempt=preempt, tiers=not tiered_specs)
+        res = sim.run(wl, pol, scenario=scenario)
+        servers = [r.server for r in sorted(wl, key=lambda r: r.sid)]
+        results.append((res, servers))
+    return results
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                             # PR-1/2 slotted
+    dict(slot=None),                                    # event mode
+    dict(slot=None, scenario="overload", admission=True,
+         preempt=True),                                 # PR-3 semantics
+    dict(slot=None, scenario="kv-pressure", kv_blocks=48,
+         admission=True, preempt=True),                 # PR-4 semantics
+])
+def test_nominal_tier_bit_exact_golden(kw):
+    """Multi-tier specs + every decision pinned to the nominal tier ==
+    single-tier specs, bit-for-bit: the allocation machinery at f = 1.0
+    is exactly the placement-only runtime (PR-3 admission/preemption and
+    PR-4 paged-KV results reproduce unchanged)."""
+    (ref, ref_servers), (pinned, pinned_servers) = _golden_pair(**kw)
+    assert pinned == ref                    # SimResult dataclass equality
+    assert pinned_servers == ref_servers
+
+
+# ---------------------------------------------------------------------------
+# The energy claim (ISSUE 5 acceptance bar)
+# ---------------------------------------------------------------------------
+
+
+def _energy_pair(scenario, n=2000):
+    out = {}
+    for tiers in (False, True):
+        specs = paper_testbed("llama2-7b", freq_tiers=DVFS_TIERS)
+        wl = generate_workload(n, seed=0, scenario=scenario)
+        sim = Simulator(specs, BandwidthModel(seed=1), slot=None, seed=42)
+        pol = make_policy("perllm", len(specs), admission=True, tiers=tiers)
+        out[tiers] = sim.run([copy.copy(s) for s in wl], pol,
+                             scenario=scenario)
+    return out[False], out[True]
+
+
+@pytest.mark.parametrize("scenario", ["diurnal", "overload"])
+def test_learned_tiers_cut_energy_at_equal_or_better_admitted_slo(scenario):
+    """PerLLM's learned (class, server, tier) policy cuts total energy by
+    ≥ 20% vs the fixed-nominal-tier PerLLM, at equal-or-better admitted
+    SLO attainment."""
+    nominal, tiered = _energy_pair(scenario)
+    cut = 1.0 - tiered.total_energy / nominal.total_energy
+    assert cut >= 0.20, (
+        f"{scenario}: tiered policy cut total energy only {cut*100:.1f}% "
+        f"({tiered.total_energy/1e3:.1f} vs "
+        f"{nominal.total_energy/1e3:.1f} kJ)")
+    assert tiered.admitted_success_rate >= nominal.admitted_success_rate, (
+        f"{scenario}: admitted SLO regressed "
+        f"({tiered.admitted_success_rate:.4f} < "
+        f"{nominal.admitted_success_rate:.4f})")
+    # the win is allocation efficiency, not an artifact of serving less:
+    # energy normalized per *served token* must also drop materially
+    # (shedding alone cannot move this metric), and dynamic inference
+    # energy — the lever DVFS actually pulls — must fall
+    assert tiered.energy_per_token <= 0.90 * nominal.energy_per_token, (
+        f"{scenario}: energy/token cut too thin "
+        f"({tiered.energy_per_token:.3f} vs "
+        f"{nominal.energy_per_token:.3f} J/tok)")
+    assert tiered.e_infer < nominal.e_infer
+
+
+# ---------------------------------------------------------------------------
+# Live server: tiers map onto real decode-step pacing
+# ---------------------------------------------------------------------------
+
+
+def test_live_server_tier_paces_engine_ticks():
+    """A dispatched Decision's DVFS tier retunes the host: engine ticks
+    cost decode_step_time/f, the engine's freq_scale reflects it, and the
+    realized energy charges f³ power over the stretched window."""
+    pytest.importorskip("jax")
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import ServingEngine
+    from repro.serving.perllm_server import PerLLMServer
+
+    class PinSlow(SchedulingPolicy):
+        name = "pin-slow"
+
+        def assign(self, req, view):
+            return Decision(server=0, alloc=Allocation(freq_tier=0))
+
+    cfg = get_config("gemma-2b").reduced(n_layers=1, d_model=32,
+                                         vocab_size=128)
+    spec = dataclasses.replace(paper_testbed(n_edge=1)[0],
+                               freq_tiers=(0.5, 1.0))
+    engines = [ServingEngine(cfg, init_params(jax.random.key(0), cfg),
+                             max_batch=2, max_seq=32)]
+    srv = PerLLMServer([spec], engines, scheduler=PinSlow())
+    sr = srv.submit([1, 2, 3], max_new_tokens=4, payload_bytes=1e4)
+    done = srv.run_until_idle()
+    assert sr in done
+    assert engines[0].freq_scale == 0.5
+    assert srv.engine_tier[0] == 0
+    # each decode tick costs the tier-stretched analytic step time
+    assert spec.decode_step_time(tier=0) \
+        == pytest.approx(2.0 * spec.decode_step_time())
+    # realized energy: f³ power over the (stretched) realized window
+    out_energy = spec.infer_energy(sr.done_clock - sr.admit_clock, tier=0) \
+        + spec.tx_power * sr.tx_dur
+    srv_energy = spec.infer_energy(sr.done_clock - sr.admit_clock) * 0.125 \
+        + spec.tx_power * sr.tx_dur
+    assert out_energy == pytest.approx(srv_energy)

@@ -1,19 +1,11 @@
-"""Unified SchedulingPolicy API: golden equivalence, registry, regressions.
+"""Unified SchedulingPolicy API: Decision/Allocation semantics, registry,
+runtime-applied commits, and the retirement of the legacy batch protocol.
 
-The golden test freezes the *seed scheduling protocol* — a verbatim copy of
-the pre-redesign `PerLLMScheduler` that returns bare server indices and
-calls `view.commit` itself — and checks that the migrated policy, driven
-through the new Decision path by the runtime, reproduces its `SimResult`
-bit-for-bit (success rate, energy components, per-request choices) on a
-fixed-seed workload. The legacy copy runs through the `as_policy`
-deprecation shim, so the test also proves out-of-tree `SchedulerBase`
-subclasses still behave identically.
-
-Scope note: both sides share today's `CSUCB`, whose time-advance semantics
-this same PR intentionally changed (`t` now ticks in `update()`, not
-`ucb()`). The equivalence therefore isolates the *API migration* — bare
-indices + policy-side commit vs Decision + runtime commit — rather than
-reproducing the pre-PR commit's absolute numbers, which differ by design.
+The pre-PR-1 `SchedulerBase`/`as_policy` deprecation shims are gone
+(nothing in-tree subclassed them since PR 1); the golden coverage that the
+Decision path reproduces the seed protocol lives on in
+`tests/test_runtime.py` (frozen PR-1 slot loop) and
+`tests/test_allocation.py` (nominal-tier bit-exactness).
 """
 import copy
 import math
@@ -22,129 +14,12 @@ import numpy as np
 import pytest
 
 from repro.cluster import (
-    BandwidthModel, ClusterView, SchedulerBase, Simulator, SlotView,
-    generate_workload, paper_testbed,
+    BandwidthModel, ClusterView, Simulator, generate_workload, paper_testbed,
 )
-from repro.cluster.workload import N_CLASSES
 from repro.core import (
-    CSUCB, CSUCBParams, Decision, LegacyPolicyAdapter,
-    SchedulingPolicy, as_policy, available_policies, drive_slot, make_policy,
+    CSUCB, CSUCBParams, Decision, SchedulingPolicy, available_policies,
+    drive_slot, ensure_policy, make_policy,
 )
-from repro.core.bandit import CSUCB as _CSUCB
-from repro.core.constraints import evaluate_constraints
-from repro.core.scheduler import E_SCALE
-
-
-# ---------------------------------------------------------------------------
-# Frozen seed protocol: the pre-redesign PerLLM scheduler, verbatim
-# ---------------------------------------------------------------------------
-
-
-class SeedPerLLM(SchedulerBase):
-    """The seed `PerLLMScheduler` under the old batch contract: bare index
-    list, policy-side `view.commit`, `observe` feedback."""
-
-    name = "PerLLM"
-    SAFETY = 1.05
-
-    def __init__(self, n_servers, params=None, seed=0):
-        self.n_servers = n_servers
-        self.bandit = _CSUCB(N_CLASSES, n_servers, params, seed=seed)
-        self.time_ratio = np.ones((N_CLASSES, n_servers), np.float64)
-        self.ratio_count = np.zeros((N_CLASSES, n_servers), np.int64)
-        self.err_var = np.zeros((N_CLASSES, n_servers), np.float64)
-        self.infer_ratio = np.ones((N_CLASSES, n_servers), np.float64)
-        self._pending_slacks = {}
-        self._nominal_pred = {}
-        self._last_nominal_infer = {}
-
-    def predicted_time(self, req, j, view):
-        cls = req.class_id
-        d_hat = (view.predict_tx(req, j) + view.predict_queue(req, j)
-                 + view.predict_infer(req, j) * self.infer_ratio[cls, j])
-        margin = math.sqrt(self.err_var[cls, j])
-        return d_hat * self.time_ratio[cls, j] * self.SAFETY + margin
-
-    def schedule(self, arrivals, view, t_slot):
-        choices = []
-        for req in arrivals:
-            slacks = []
-            feasible = np.zeros(self.n_servers, bool)
-            for j in range(self.n_servers):
-                d_hat = self.predicted_time(req, j, view)
-                s = evaluate_constraints(req, j, view, predicted_time=d_hat)
-                slacks.append(s)
-                feasible[j] = s.satisfied
-            if feasible.any():
-                j = self.bandit.select(req.class_id, feasible)
-            else:
-                j = int(np.argmin([self.predicted_time(req, jj, view)
-                                   for jj in range(self.n_servers)]))
-            self._pending_slacks[req.sid] = slacks[j]
-            self._nominal_pred[req.sid] = self.predicted_time(req, j, view) \
-                / self.SAFETY
-            self._last_nominal_infer[req.sid] = view.predict_infer(req, j)
-            view.commit(req, j,
-                        infer_scale=self.infer_ratio[req.class_id, j])
-            choices.append(j)
-        return choices
-
-    def observe(self, req, out):
-        slacks = self._pending_slacks.pop(req.sid, None)
-        nominal = self._nominal_pred.pop(req.sid, None)
-        cls, j = req.class_id, out.server
-        time_slack = (req.deadline - out.processing_time) / req.deadline
-        f_y = min(time_slack,
-                  slacks.compute if slacks else 0.0,
-                  slacks.bandwidth if slacks else 0.0)
-        reward = self.bandit.shaped_reward(out.energy / E_SCALE, f_y)
-        violation = max(-f_y, 0.0)
-        self.bandit.update(cls, j, reward, violation)
-        nom_inf = out.infer_time
-        self.infer_ratio[cls, j] += 0.1 * (
-            out.infer_time / max(self._last_nominal_infer.pop(req.sid,
-                                                              nom_inf),
-                                 1e-9) - self.infer_ratio[cls, j])
-        if nominal and nominal > 0:
-            ratio = out.processing_time / nominal
-            self.ratio_count[cls, j] += 1
-            n = self.ratio_count[cls, j]
-            self.time_ratio[cls, j] += (ratio - self.time_ratio[cls, j]) / n
-            err = out.processing_time - nominal * self.time_ratio[cls, j]
-            self.err_var[cls, j] += (err * err - self.err_var[cls, j]) \
-                / max(n, 1)
-
-
-def _run(scheduler, n=600, wl_seed=3, sim_seed=5):
-    specs = paper_testbed()
-    services = [copy.copy(s) for s in generate_workload(n, seed=wl_seed)]
-    sim = Simulator(specs, BandwidthModel(fluctuating=True, seed=2),
-                    seed=sim_seed)
-    res = sim.run(services, scheduler)
-    return res, [r.server for r in sorted(services, key=lambda r: r.sid)]
-
-
-def test_golden_equivalence_perllm():
-    """make_policy("perllm") through the Decision path == seed protocol."""
-    res_new, choices_new = _run(make_policy("perllm", 6))
-    res_old, choices_old = _run(SeedPerLLM(6))
-    assert choices_new == choices_old
-    assert res_new.success_rate == res_old.success_rate
-    assert res_new.per_server_served == res_old.per_server_served
-    assert res_new.e_tx == pytest.approx(res_old.e_tx)
-    assert res_new.e_infer == pytest.approx(res_old.e_infer)
-    assert res_new.e_idle == pytest.approx(res_old.e_idle)
-    assert res_new.avg_processing_time == pytest.approx(
-        res_old.avg_processing_time)
-    assert res_new.makespan == pytest.approx(res_old.makespan)
-
-
-def test_golden_equivalence_native_vs_compat_schedule():
-    """The deprecated batch `schedule()` wrapper is the same computation."""
-    res_a, choices_a = _run(make_policy("perllm", 6), n=300)
-    res_b, choices_b = _run(as_policy(make_policy("perllm", 6)), n=300)
-    assert choices_a == choices_b
-    assert res_a.success_rate == res_b.success_rate
 
 
 # ---------------------------------------------------------------------------
@@ -153,8 +28,8 @@ def test_golden_equivalence_native_vs_compat_schedule():
 
 
 def test_policies_do_not_mutate_requests():
-    """Deferral is Decision data now — FineInfer no longer stamps
-    `req.defer_until` onto requests."""
+    """Deferral is Decision data — FineInfer never stamps `req.defer_until`
+    onto requests."""
     specs = paper_testbed()
     services = [copy.copy(s) for s in generate_workload(150, seed=1)]
     sim = Simulator(specs, BandwidthModel(), seed=1)
@@ -172,24 +47,6 @@ def test_fineinfer_defer_applied_by_runtime():
     # every request finishes after its batching-window boundary
     for r in sorted(services, key=lambda r: r.sid):
         assert r.finish >= math.ceil(r.arrival / 1.0) * 1.0
-
-
-def test_legacy_scheduler_base_still_runs():
-    class Old(SchedulerBase):
-        name = "old"
-
-        def schedule(self, arrivals, view, t_slot):
-            out = []
-            for r in arrivals:
-                view.commit(r, 0)
-                out.append(0)
-            return out
-
-    specs = paper_testbed()
-    services = [copy.copy(s) for s in generate_workload(60, seed=0)]
-    res = Simulator(specs, seed=1).run(services, Old())
-    assert res.name == "old"
-    assert res.per_server_served[0] == 60
 
 
 def test_drive_slot_commits_residuals():
@@ -214,68 +71,47 @@ def test_drive_slot_commits_residuals():
     assert sorted(view.lane_free[0]) != [0.0] * specs[0].max_concurrency
 
 
-def test_slotview_is_clusterview_alias():
-    assert SlotView is ClusterView
+def test_decision_defaults_are_nominal_allocation():
+    """A bare Decision carries the nominal Allocation: nominal tier, full
+    lane and uplink shares — the placement-only contract."""
+    d = Decision(server=2)
+    assert d.alloc.freq_tier == -1
+    assert d.alloc.lane_share == 1.0
+    assert d.alloc.bw_share == 1.0
 
 
-def test_legacy_adapter_assign_does_not_touch_callers_view():
-    """Per the contract, `assign` is pure w.r.t. the view: the adapter runs
-    the legacy scheduler on a shadow copy, so a runtime doing
-    assign + view.apply commits exactly once (no double-commit)."""
-    class Old(SchedulerBase):
-        name = "old"
+# ---------------------------------------------------------------------------
+# Legacy protocol retirement
+# ---------------------------------------------------------------------------
 
+
+def test_legacy_scheduler_base_protocol_removed():
+    """The batch `SchedulerBase` shims are gone from both packages, and a
+    batch-protocol object is rejected with a migration pointer rather
+    than silently wrapped."""
+    import repro.cluster as cluster
+    import repro.core as core
+    for name in ("SchedulerBase", "as_policy", "LegacyPolicyAdapter",
+                 "SlotView"):
+        assert not hasattr(core, name), name
+        assert not hasattr(cluster, name), name
+
+    class OldStyle:
         def schedule(self, arrivals, view, t_slot):
-            out = []
-            for r in arrivals:
-                view.commit(r, 0)
-                out.append(0)
-            return out
+            return [0] * len(arrivals)
 
-    specs = paper_testbed()
-    view = ClusterView(t=0.0, specs=specs, bw_factor=[1.0] * len(specs),
-                       uplink_free_at=[0.0] * len(specs),
-                       lane_free=[[0.0] * s.max_concurrency for s in specs])
-    req = copy.copy(generate_workload(1, seed=0)[0])
-    from repro.cluster.workload import classify
-    req.class_id = classify(req)
-    adapter = as_policy(Old())
-    assert isinstance(adapter, LegacyPolicyAdapter)
-    d = adapter.assign(req, view)
-    assert view.uplink_free_at[0] == 0.0        # caller's view untouched
-    assert view.lane_free[0] == [0.0] * specs[0].max_concurrency
-    view.apply(req, d)
-    assert view.uplink_free_at[0] > 0.0         # committed exactly once
+    with pytest.raises(TypeError, match="SchedulerBase batch protocol"):
+        ensure_policy(OldStyle())
+    with pytest.raises(TypeError, match="SchedulingPolicy"):
+        Simulator(paper_testbed(), seed=0).run(
+            [copy.copy(s) for s in generate_workload(3, seed=0)],
+            OldStyle())
 
 
-def test_legacy_adapter_assign_lifts_infer_scale():
-    """A legacy scheduler's scaled lane booking survives the shim: the
-    adapter derives infer_scale from the shadow commit so the runtime's
-    single apply reproduces it."""
-    class OldScaled(SchedulerBase):
-        name = "old-scaled"
-
-        def schedule(self, arrivals, view, t_slot):
-            out = []
-            for r in arrivals:
-                view.commit(r, 1, infer_scale=2.0)
-                out.append(1)
-            return out
-
-    specs = paper_testbed()
-    view = ClusterView(t=0.0, specs=specs, bw_factor=[1.0] * len(specs),
-                       uplink_free_at=[0.0] * len(specs),
-                       lane_free=[[0.0] * s.max_concurrency for s in specs])
-    req = copy.copy(generate_workload(1, seed=0)[0])
-    from repro.cluster.workload import classify
-    req.class_id = classify(req)
-    d = as_policy(OldScaled()).assign(req, view)
-    assert d.infer_scale == pytest.approx(2.0)
-    # applying the Decision books the same lane time the legacy commit did
-    nominal = view.predict_infer(req, 1)
-    ready = view.predict_tx(req, 1)
-    view.apply(req, d)
-    assert max(view.lane_free[1]) == pytest.approx(ready + 2.0 * nominal)
+def test_scheduling_policy_has_no_batch_shim_methods():
+    p = make_policy("perllm", 6)
+    assert not hasattr(p, "observe")
+    assert not callable(getattr(p, "schedule", None))
 
 
 # ---------------------------------------------------------------------------
@@ -322,6 +158,23 @@ def test_csucb_ucb_is_side_effect_free():
     assert bandit.t == t0
     bandit.update(0, 0, 0.5, 0.0)
     assert bandit.t == t0 + 1        # time advances only on feedback
+
+
+def test_csucb_regret_bound_tracks_arm_space():
+    """Satellite bugfix: Eq. 7's arm count comes from the live arm-space
+    shape, so a (class, server, tier) bandit reports a wider bound than
+    its placement-only projection at the same pull counts."""
+    flat = CSUCB(2, 3)
+    tiered = CSUCB(2, 3, n_tiers=4)
+    for b in (flat, tiered):
+        b.update(0, 1, 0.1, 0.0)
+        b.update(0, 1, 0.1, 0.0)
+        b.update(0, 1, 0.1, 0.0)
+    assert flat.regret_bound() == pytest.approx(
+        math.sqrt(2.0 * 2 * 3 * math.log(3)))
+    assert tiered.regret_bound() == pytest.approx(
+        math.sqrt(2.0 * 2 * 3 * 4 * math.log(3)))
+    assert tiered.regret_bound() > flat.regret_bound()
 
 
 def test_simulator_empty_services():

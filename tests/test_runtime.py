@@ -20,7 +20,7 @@ from repro.cluster import (
 from repro.cluster.workload import classify
 from repro.core import (
     Arrival, BandwidthChange, Decision, Deferred, EventLoop, InferDone,
-    SchedulingPolicy, TxDone, as_policy, available_scenarios,
+    SchedulingPolicy, TxDone, available_scenarios,
     drive_slot, make_policy, make_scenario,
 )
 from repro.core.runtime import TraceScenario
@@ -33,7 +33,7 @@ from repro.core.runtime import TraceScenario
 
 def _pr1_slotted_run(sim, services, scheduler):
     """The pre-redesign `Simulator.run` slot loop, frozen for comparison."""
-    policy = as_policy(scheduler)
+    policy = scheduler
     specs = sim.specs
     states = [ServerState(spec=s) for s in specs]
     lane_free = [[0.0] * s.max_concurrency for s in specs]

@@ -15,17 +15,19 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.cluster import (
-    BandwidthModel, Simulator, SlotView, generate_workload, paper_testbed,
+    BandwidthModel, ClusterView, Simulator, generate_workload, paper_testbed,
 )
 from repro.cluster.workload import ServiceRequest, classify
-from repro.core import CSUCB, CSUCBParams, PerLLMScheduler, make_baselines
+from repro.core import (
+    CSUCB, CSUCBParams, PerLLMScheduler, drive_slot, make_baselines,
+)
 from repro.core.constraints import evaluate_constraints
 
 
 def _view(specs, t=0.0):
-    return SlotView(t=t, specs=specs, bw_factor=[1.0] * len(specs),
-                    uplink_free_at=[0.0] * len(specs),
-                    lane_free=[[0.0] * s.max_concurrency for s in specs])
+    return ClusterView(t=t, specs=specs, bw_factor=[1.0] * len(specs),
+                       uplink_free_at=[0.0] * len(specs),
+                       lane_free=[[0.0] * s.max_concurrency for s in specs])
 
 
 def _req(sid=0, arrival=0.0, prompt=256, out=16, deadline=4.0,
@@ -179,7 +181,7 @@ def test_infeasible_fallback_prefers_fastest():
     sched = PerLLMScheduler(len(specs))
     view = _view(specs)
     req = _req(deadline=0.01)     # impossible deadline: nothing feasible
-    choice = sched.schedule([req], view, 0)[0]
+    (decision,) = drive_slot(sched, [req], view)
     times = [view.predict_total(req, j) for j in range(len(specs))]
     # commit changed residuals, but the cloud (fastest) should win
-    assert choice == int(np.argmin(times))
+    assert decision.server == int(np.argmin(times))

@@ -52,18 +52,18 @@ def test_scheduler_drives_real_engines():
     sched = PerLLMScheduler(2)
     services = generate_workload(30, rate=5.0, seed=1)
 
-    from repro.cluster.simulator import SlotView
     from repro.cluster.workload import classify
-    view = SlotView(t=0.0, specs=specs[:2], bw_factor=[1.0, 1.0],
-                    uplink_free_at=[0.0, 0.0],
-                    lane_free=[[0.0] * 2, [0.0] * 4])
+    from repro.core import ClusterView, drive_slot
+    view = ClusterView(t=0.0, specs=specs[:2], bw_factor=[1.0, 1.0],
+                       uplink_free_at=[0.0, 0.0],
+                       lane_free=[[0.0] * 2, [0.0] * 4])
     for svc in services:
         svc.class_id = classify(svc)
-    choices = sched.schedule(services, view, 0)
-    assert len(choices) == len(services)
-    for svc, j in zip(services, choices):
-        engines[j].submit(list(np.arange(4) + svc.sid % 32),
-                          max_new_tokens=2)
+    decisions = drive_slot(sched, services, view, 0)
+    assert len(decisions) == len(services)
+    for svc, d in zip(services, decisions):
+        engines[d.server].submit(list(np.arange(4) + svc.sid % 32),
+                                 max_new_tokens=2)
     done = [e.run_until_idle() for e in engines]
     assert sum(len(d) for d in done) == len(services)
 
