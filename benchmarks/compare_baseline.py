@@ -17,8 +17,10 @@ Gated metrics are the quality-style ones (names containing ``success``,
 ``thpt``/``throughput`` or ``goodput`` — higher is better; ``*ratio*``
 names are excluded, since a PerLLM/baseline ratio shrinks when the
 *baseline* improves), the paged-KV subsystem's liveness metrics
-(``kv_evictions``, ``*saved*`` — the deterministic smoke run must keep
-exercising KV-preserving preemption and banking resume savings), and the
+(``kv_evictions``, ``*saved*``, ``*prefix*``, ``*migrat*`` — the
+deterministic smoke run must keep exercising KV-preserving preemption,
+banking resume savings, and taking shared-prefix hits; migration counts
+are gated so the cross-server path can't silently vanish), and the
 allocation subsystem's efficiency metrics: ``admitted_success_rate``
 (higher is better) and ``energy_per_token`` — the one *lower-is-better*
 gate, failing when energy per served token rises more than ``--tolerance``
@@ -34,7 +36,8 @@ import json
 import sys
 
 GATED_TAGS = ("success", "thpt", "throughput", "goodput", "kv_evictions",
-              "saved", "admitted_success", "energy_per_token")
+              "saved", "admitted_success", "energy_per_token", "prefix",
+              "migrat")
 
 # gated metrics where *smaller* is the good direction
 LOWER_IS_BETTER_TAGS = ("energy_per_token",)

@@ -165,6 +165,26 @@ class LinkTopology:
         """Earliest time every link on server j's path is free."""
         return max(free_at[lk] for lk in self.paths[j])
 
+    def migration_path(self, src: int, dst: int) -> List[str]:
+        """Links a server-to-server KV migration occupies: the ordered
+        deduplicated union of both servers' paths. With user-rooted paths
+        this is the conservative route (src egress + dst ingress; a
+        shared backhaul appears once) — a migration contends with every
+        transfer to either endpoint, which is the cost policies weigh."""
+        path: List[str] = []
+        for name in self.paths[src] + self.paths[dst]:
+            if name not in path:
+                path.append(name)
+        return path
+
+    def migration_bandwidth(self, src: int, dst: int,
+                            factors: Dict[str, float],
+                            scale: Dict[str, float]) -> float:
+        """Bottleneck bits/s of the src->dst migration path."""
+        return min(self.links[lk].capacity * factors.get(lk, 1.0)
+                   * scale.get(lk, 1.0)
+                   for lk in self.migration_path(src, dst))
+
     def server_factor(self, j: int, nominal_bw: float,
                       factors: Dict[str, float],
                       scale: Dict[str, float]) -> float:

@@ -109,6 +109,11 @@ class ServerSpec:
         return max(1, math.ceil((prompt_tokens + output_tokens)
                                 / self.kv_block_tokens))
 
+    def kv_bytes_per_token(self) -> float:
+        """KV-cache bytes one token pins on this server's model — the
+        wire size of a KV migration is `blocks × block_tokens × this`."""
+        return float(self.model_cfg().kv_bytes_per_token())
+
     def infer_energy(self, t_inf: float, tier: int = -1,
                      lane_share: float = 1.0) -> float:
         """Active-over-idle energy for `t_inf` seconds on one batch lane —

@@ -35,7 +35,11 @@ path's bottleneck bandwidth. Policies may shed arrivals
 Outcome with zero server energy) and, in event mode, reclaim a running
 victim's lane (`Decision.preempt_victim` — the victim's remaining decode
 tokens requeue as a fresh Arrival; slotted mode raises, since it realizes
-outcomes synchronously).
+outcomes synchronously). In event mode the KV ledger also models *sharing*
+and *mobility*: requests carrying a `prefix_id` reuse resident shared-prefix
+pages (skipping that much prefill), and a cross-server requeue with
+`Decision.migrate_kv` ships its preserved pages over the link topology
+(`KvMigrate`) instead of abandoning them to a full re-prefill.
 
 Servers have *hidden* efficiency factors and per-request noise — schedulers
 only observe realized outcomes, which is what makes the bandit formulation
@@ -57,8 +61,8 @@ from repro.core.api import (
     ensure_policy,
 )
 from repro.core.runtime import (
-    Arrival, BandwidthChange, InferDone, Preempt, Reject, Runtime, Scenario,
-    TxDone, make_scenario,
+    Arrival, BandwidthChange, InferDone, KvMigrate, Preempt, Reject, Runtime,
+    Scenario, TxDone, make_scenario,
 )
 
 
@@ -95,6 +99,11 @@ class SimResult:
     # paged KV cache (0 when no ServerSpec models a block pool)
     n_kv_evictions: int = 0              # preemptions that touched KV pages
     kv_prefill_tokens_saved: int = 0     # prefill skipped via page resume
+    # prefix sharing & KV migration (0 when nothing shares or moves)
+    n_prefix_hits: int = 0               # dispatches that reused a resident prefix
+    n_kv_orphaned: int = 0               # cross-server requeues that abandoned pages
+    n_kv_migrations: int = 0             # page transfers shipped between servers
+    kv_migrated_bytes: float = 0.0       # bytes those transfers put on the links
 
     @property
     def total_energy(self) -> float:
@@ -121,6 +130,10 @@ class SimResult:
         if self.n_rejected or self.n_preempted:
             extra = (f" adm_succ={self.admitted_success_rate*100:5.1f}%"
                      f" rej={self.n_rejected} pre={self.n_preempted}")
+        if self.n_prefix_hits or self.n_kv_migrations or self.n_kv_orphaned:
+            extra += (f" pfx={self.n_prefix_hits}"
+                      f" mig={self.n_kv_migrations}"
+                      f" orph={self.n_kv_orphaned}")
         return (f"{self.name:22s} succ={self.success_rate*100:5.1f}% "
                 f"time={self.avg_processing_time:6.2f}s "
                 f"thpt={self.throughput_tokens_per_s:8.1f} tok/s "
@@ -166,6 +179,10 @@ class _SimRuntimeBase(Runtime, LinkStateMixin):
         self.n_preempted = 0
         self.n_kv_evictions = 0
         self.kv_prefill_tokens_saved = 0
+        self.n_prefix_hits = 0
+        self.n_kv_orphaned = 0
+        self.n_kv_migrations = 0
+        self.kv_migrated_bytes = 0.0
 
     def on_bandwidth_change(self, ev: BandwidthChange) -> None:
         self.apply_bandwidth_scales(ev)
@@ -220,6 +237,11 @@ class _SlottedSimRuntime(_SimRuntimeBase):
                     "(slot=None): slotted mode realizes outcomes "
                     "synchronously, so there is no in-flight victim to "
                     "return a lane from")
+            if d.migrate_kv:
+                raise NotImplementedError(
+                    "Decision.migrate_kv needs the event-driven simulator "
+                    "(slot=None): slotted mode keeps no page ledger and no "
+                    "link timeline to ship KV pages over")
             out = sim._realize(req, d, self.states, self.lane_free, factors,
                                links=self.link_free,
                                path=self.topo.paths[d.server])
@@ -246,7 +268,26 @@ class _Booking:
     finish: float
     cancelled: bool = False
     kv_resumed: bool = False  # decode-only window (pages survived eviction)
+    prefix_saved: int = 0     # prompt tokens a resident shared prefix skipped
     alloc: Allocation = NOMINAL  # the Decision's resource allocation
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    """Resident shared-prefix pages on one server.
+
+    The entry *owns* its blocks in the server's KV ledger — they are
+    charged to `kv_used` when the entry is created (out of the creating
+    request's full claim) and returned when the entry is reclaimed — so
+    every sharer charges only its unique suffix. `ready` is the instant
+    the creator's prefill materializes the pages; dispatches before it
+    pay full prefill, dispatches after it skip the prefix."""
+
+    blocks: int          # full KV blocks the resident prefix spans
+    tokens: int          # blocks × kv_block_tokens
+    refs: int            # live dispatched requests pinning the entry
+    ready: float         # prefill-complete instant (hits need t >= ready)
+    stamp: float         # last touch, for LRU reclaim of idle entries
 
 
 class _EventSimRuntime(_SimRuntimeBase):
@@ -274,6 +315,14 @@ class _EventSimRuntime(_SimRuntimeBase):
         # single-use tokens: preemptor sid -> server whose drop_kv
         # preemption it issued; grants first claim on the freed blocks
         self._kv_express: Dict[int, int] = {}
+        # shared-prefix ledger: per-server {prefix_id: _PrefixEntry} of
+        # resident system-prompt pages, which dispatched request pins
+        # which entry (sid -> (server, prefix_id)), and per-sid prefill
+        # tokens the pending dispatch skips (consumed by `dispatch`)
+        self._prefix: List[Dict[int, _PrefixEntry]] = \
+            [{} for _ in self.specs]
+        self._prefix_pin: Dict[int, tuple] = {}
+        self._prefix_saved: Dict[int, int] = {}
         if any(link.fluctuating for link in self.topo.links.values()):
             self._resample_factors(0.0)
 
@@ -299,6 +348,7 @@ class _EventSimRuntime(_SimRuntimeBase):
         if req.kv_server >= 0 and req.kv_blocks > 0:
             blocks, j = req.kv_blocks, req.kv_server
             req.kv_server, req.kv_blocks = -1, 0
+            self._prefix_unpin(req, ev.time)
             self._kv_free(j, blocks, ev.time)
         super().on_reject(ev)
 
@@ -329,11 +379,20 @@ class _EventSimRuntime(_SimRuntimeBase):
             tier_kwargs = dict(tier_load=tier_load)
         kv_kwargs = {}
         if self._kv_modeled:
+            # idle prefix entries are reclaimable page cache, so the view
+            # reports them as free (mirroring PagedKVCache.free_blocks);
+            # resident *ready* prefixes are surfaced so policies can rank
+            # servers by expected prefix hit
+            idle = [sum(e.blocks for e in self._prefix[j].values()
+                        if e.refs <= 0) for j in range(n)]
             kv_kwargs = dict(
                 kv_free_blocks=[self.specs[j].kv_blocks - self.kv_used[j]
-                                for j in range(n)],
+                                + idle[j] for j in range(n)],
                 kv_total_blocks=[self.specs[j].kv_blocks
-                                 for j in range(n)])
+                                 for j in range(n)],
+                kv_prefix_tokens=[
+                    {pid: e.tokens for pid, e in self._prefix[j].items()
+                     if e.ready <= t} for j in range(n)])
         return ClusterView(
             t=t, specs=self.specs,
             bw_factor=[self._factor(j) for j in range(n)],
@@ -345,6 +404,90 @@ class _EventSimRuntime(_SimRuntimeBase):
             **kv_kwargs,
             **self.link_view_kwargs(t, self._link_factors),
         )
+
+    # ---------------- shared-prefix ledger -------------------------------
+    def _prefix_blocks(self, req: ServiceRequest, j: int) -> int:
+        """Full KV blocks of `req`'s shared prefix on server j's block
+        geometry (capped so at least one suffix token always remains —
+        the same cap `PagedKVCache.match_prefix` applies)."""
+        if req.prefix_id < 0 or req.prefix_tokens <= 0:
+            return 0
+        span = min(req.prefix_tokens, req.prompt_tokens - 1)
+        return max(span, 0) // self.specs[j].kv_block_tokens
+
+    def _kv_need(self, req: ServiceRequest, j: int, t: float) -> int:
+        """Blocks `req` would claim on j right now: full need minus any
+        *ready* resident prefix blocks it can share. Pure — admission and
+        the kv-wait drain peek both call it at the same instant, so they
+        always agree on whether a dispatch is a prefix hit."""
+        need = self.specs[j].kv_blocks_needed(req.prompt_tokens,
+                                              req.output_tokens)
+        entry = self._prefix[j].get(req.prefix_id) \
+            if req.prefix_id >= 0 else None
+        if entry is not None and entry.ready <= t:
+            need -= min(entry.blocks, self._prefix_blocks(req, j))
+        return need
+
+    def _prefix_attach(self, t: float, req: ServiceRequest, j: int) -> int:
+        """Pin (or create) the prefix entry `req` uses on j; returns the
+        prefill tokens this dispatch skips.
+
+        First of its pool: the request becomes the entry's *creator* — the
+        entry takes ownership of the prefix blocks out of the creator's
+        just-claimed full allocation (`kv_used` already covers them) and
+        `dispatch` stamps `ready` once the creator's prefill window is
+        known. Later dispatches pin the entry and, when it is ready, skip
+        `entry.tokens` of prefill while charging only their suffix."""
+        p_blocks = self._prefix_blocks(req, j)
+        if p_blocks <= 0:
+            return 0
+        bt = self.specs[j].kv_block_tokens
+        entry = self._prefix[j].get(req.prefix_id)
+        if entry is None:
+            self._prefix[j][req.prefix_id] = _PrefixEntry(
+                blocks=p_blocks, tokens=p_blocks * bt, refs=1,
+                ready=float("inf"), stamp=t)
+            req.kv_blocks -= p_blocks
+            self._prefix_pin[req.sid] = (j, req.prefix_id)
+            return 0
+        if entry.ready > t:
+            return 0         # still prefilling: this dispatch pays in full
+        entry.refs += 1
+        entry.stamp = t
+        self._prefix_pin[req.sid] = (j, req.prefix_id)
+        return min(entry.blocks, p_blocks) * bt
+
+    def _prefix_unpin(self, req: ServiceRequest, t: float) -> None:
+        """Drop `req`'s pin on its prefix entry. An entry whose prefill
+        never completed (creator evicted mid-prefill) is removed outright
+        — its pages hold garbage; ready entries linger unpinned as
+        reclaimable page cache."""
+        pin = self._prefix_pin.pop(req.sid, None)
+        if pin is None:
+            return
+        j, pid = pin
+        entry = self._prefix[j].get(pid)
+        if entry is None:
+            return
+        entry.refs -= 1
+        entry.stamp = t
+        if entry.refs <= 0 and entry.ready > t:
+            self.kv_used[j] -= entry.blocks
+            del self._prefix[j][pid]
+
+    def _prefix_reclaim(self, j: int, need: int, keep: int = -1) -> None:
+        """LRU-evict idle (unpinned) prefix entries on j until `need`
+        blocks fit — never the entry `keep`, which the requester is about
+        to share."""
+        table = self._prefix[j]
+        cap = self.specs[j].kv_blocks
+        while self.kv_used[j] + need > cap:
+            idle = [(e.stamp, pid) for pid, e in table.items()
+                    if e.refs <= 0 and pid != keep]
+            if not idle:
+                return
+            _, pid = min(idle)
+            self.kv_used[j] -= table.pop(pid).blocks
 
     # ---------------- paged-KV ledger ------------------------------------
     def _kv_admit(self, t: float, req: ServiceRequest,
@@ -360,28 +503,37 @@ class _EventSimRuntime(_SimRuntimeBase):
         path's own re-dispatches, which must not re-enqueue behind the
         waiters they precede). A requeued request whose preserved pages
         live on the *target* server resumes on its existing blocks; pages
-        preserved on any *other* server are freed — they cannot be
-        migrated, which is exactly why cross-server requeues pay full
-        re-prefill."""
+        preserved on any *other* server migrate or are abandoned in
+        `dispatch`, before admission runs. A request whose pool already
+        holds its shared prefix (ready `_PrefixEntry`) claims only its
+        unique suffix blocks and skips that much prefill."""
         j = decision.server
         spec = self.specs[j]
         if req.kv_server == j and req.kv_blocks > 0:
             return True                      # resume on the held pages
-        need = spec.kv_blocks_needed(req.prompt_tokens, req.output_tokens)
-        if need > spec.kv_blocks:
+        full = spec.kv_blocks_needed(req.prompt_tokens, req.output_tokens)
+        if full > spec.kv_blocks:
             # physically unfittable on this server (even an empty pool is
             # too small): a KV-blind policy routed it here, so the runtime
             # sheds it — crashing the run or queueing forever would lose
             # the request silently
             self.handle(Reject(t, request=req, decision=decision))
             return False
+        need = self._kv_need(req, j, t)
         express = self._kv_express.pop(req.sid, -1) == j
+        if self.kv_used[j] + need > spec.kv_blocks:
+            # idle resident prefixes are just page cache — evict LRU ones
+            # before making the request wait
+            self._prefix_reclaim(j, need, keep=req.prefix_id)
         if self.kv_used[j] + need > spec.kv_blocks \
                 or (self.kv_wait[j] and not (from_wait or express)):
             self.kv_wait[j].append((req, decision))
             return False
         self.kv_used[j] += need
         req.kv_server, req.kv_blocks = j, need
+        saved = self._prefix_attach(t, req, j)
+        if saved:
+            self._prefix_saved[req.sid] = saved
         return True
 
     def _kv_free(self, j: int, n_blocks: int, t: float) -> None:
@@ -391,10 +543,11 @@ class _EventSimRuntime(_SimRuntimeBase):
         assert self.kv_used[j] >= 0, (j, self.kv_used[j])
         while self.kv_wait[j]:
             req, decision = self.kv_wait[j][0]
-            need = self.specs[j].kv_blocks_needed(req.prompt_tokens,
-                                                  req.output_tokens)
+            need = self._kv_need(req, j, t)
             if self.kv_used[j] + need > self.specs[j].kv_blocks:
-                break
+                self._prefix_reclaim(j, need, keep=req.prefix_id)
+                if self.kv_used[j] + need > self.specs[j].kv_blocks:
+                    break
             self.kv_wait[j].pop(0)
             self.dispatch(t, req, decision, _from_kv_wait=True)
 
@@ -404,17 +557,25 @@ class _EventSimRuntime(_SimRuntimeBase):
         spec = self.specs[j]
         st = self.states[j]
         if req.kv_server >= 0 and req.kv_server != j:
-            # pages preserved on another server can't migrate — free them
-            # there even when the *target* doesn't model KV, or the old
-            # server's pool leaks those blocks forever
+            if self._kv_migrate(t, req, decision):
+                return       # pages in flight: KvMigrate re-dispatches
+            # pages preserved on another server that can't (or weren't
+            # asked to) migrate are abandoned: freed on their home server
+            # — even when the *target* doesn't model KV, or the old pool
+            # leaks those blocks forever — counted, and the request pays
+            # full re-prefill wherever it lands
+            self.n_kv_orphaned += 1
+            self._prefix_unpin(req, t)
             self._kv_free(req.kv_server, req.kv_blocks, t)
             req.kv_server, req.kv_blocks = -1, 0
         kv_resumed = False
+        prefix_saved = 0
         if spec.kv_blocks > 0:
             kv_resumed = req.kv_server == j and req.kv_blocks > 0
             if not self._kv_admit(t, req, decision,
                                   from_wait=_from_kv_wait):
                 return                       # waiting on KV blocks
+            prefix_saved = self._prefix_saved.pop(req.sid, 0)
         alloc = decision.alloc
         tx_start = max(t, self.topo.path_free_at(j, self.link_free))
         # a sub-unit bandwidth share stretches the transfer by 1/share and
@@ -435,18 +596,92 @@ class _EventSimRuntime(_SimRuntimeBase):
         li = int(np.argmin(lanes))
         lane_prev = lanes[li]
         begin = max(ready, lane_prev)
-        t_inf = self.sim._draw_infer(req, j, resume=kv_resumed, alloc=alloc)
+        t_inf = self.sim._draw_infer(req, j, resume=kv_resumed, alloc=alloc,
+                                     prefix_tokens=prefix_saved)
         finish = begin + t_inf
         lanes[li] = finish
+        pin = self._prefix_pin.get(req.sid)
+        if pin is not None:
+            # first dispatch of this pool's creator: the shared pages
+            # materialize once its own prefill window has run
+            entry = self._prefix[pin[0]].get(pin[1])
+            if entry is not None and entry.ready == float("inf"):
+                entry.ready = begin + spec.prefill_time(entry.tokens)
         ctx = _Booking(request=req, j=j, li=li, lane_prev=lane_prev,
                        tx_dur=tx_dur,
                        charge_from=t if req.preemptions else req.arrival,
                        ready=ready, begin=begin, t_inf=t_inf, finish=finish,
-                       kv_resumed=kv_resumed, alloc=alloc)
+                       kv_resumed=kv_resumed, prefix_saved=prefix_saved,
+                       alloc=alloc)
         self._inflight[req.sid] = ctx
         self.loop.push(TxDone(ready, request=req, decision=decision,
                               context=ctx))
         self.loop.push(InferDone(finish, request=req, context=ctx))
+
+    def _kv_migrate(self, t: float, req: ServiceRequest,
+                    decision: Decision) -> bool:
+        """Ship `req`'s preserved pages from their home server to
+        `decision.server` over the link topology, if asked and affordable.
+
+        The transfer occupies every link on the union of both servers'
+        paths (pages travel down one side of the tree and up the other)
+        at the path's bottleneck bandwidth, charged against the same
+        per-link ledgers payload transfers use — migration and uplink
+        traffic genuinely contend. The destination's blocks are claimed
+        up front so its pool can't oversubscribe while the pages are in
+        flight; when they land (`KvMigrate`) the source frees and the
+        request re-dispatches as a zero-re-prefill resume. False = the
+        caller falls back to abandoning the pages (full re-prefill)."""
+        j = decision.server
+        src = req.kv_server
+        spec = self.specs[j]
+        if not decision.migrate_kv or spec.kv_blocks <= 0:
+            return False
+        need = spec.kv_blocks_needed(req.prompt_tokens, req.output_tokens)
+        if need > spec.kv_blocks or self.kv_wait[j]:
+            return False     # destination can't host the pages right now
+        if self.kv_used[j] + need > spec.kv_blocks:
+            self._prefix_reclaim(j, need, keep=req.prefix_id)
+            if self.kv_used[j] + need > spec.kv_blocks:
+                return False
+        src_spec = self.specs[src]
+        n_bytes = req.kv_blocks * src_spec.kv_block_tokens \
+            * src_spec.kv_bytes_per_token()
+        if n_bytes <= 0.0:
+            return False     # nothing to ship (e.g. attention-free arch)
+        path = self.topo.migration_path(src, j)
+        bw = self.topo.migration_bandwidth(src, j, self._link_factors,
+                                           self.link_scale)
+        if not path or bw <= 0.0:
+            return False
+        self.kv_used[j] += need
+        start = max(t, max(self.link_free[name] for name in path))
+        end = start + n_bytes * 8.0 / bw
+        for name in path:
+            self.link_free[name] = end
+        st = self.states[src]
+        # the source's radio pushes the pages; like payload transfers,
+        # energy accrues over the whole window including the queue wait
+        st.e_tx += (end - t) * src_spec.tx_power
+        st.tx_busy_time += end - start
+        self.n_kv_migrations += 1
+        self.kv_migrated_bytes += n_bytes
+        self.loop.push(KvMigrate(end, request=req, decision=decision,
+                                 context=(src, req.kv_blocks, j, need)))
+        return True
+
+    def on_kv_migrate(self, ev: KvMigrate) -> None:
+        """Migrated pages landed: free them at the source, hand them to
+        the request on the destination, and re-dispatch — the dispatch
+        sees `kv_server == server`, so it books a decode-only resume with
+        zero re-prefill (the destination's blocks were already claimed
+        when the transfer started)."""
+        req = ev.request
+        src, src_blocks, j, need = ev.context
+        self._prefix_unpin(req, ev.time)
+        self._kv_free(src, src_blocks, ev.time)
+        req.kv_server, req.kv_blocks = j, need
+        self.dispatch(ev.time, req, ev.decision)
 
     def on_tx_done(self, ev: TxDone) -> None:
         b: _Booking = ev.context
@@ -528,8 +763,10 @@ class _EventSimRuntime(_SimRuntimeBase):
                 # FIFO at the next free event on this server.
                 self.kv_used[b.j] -= req.kv_blocks
                 req.kv_server, req.kv_blocks = -1, 0
+                self._prefix_unpin(req, t)
                 self._kv_express[ev.request.sid] = b.j
             elif ev.drop_kv or not prefilled:
+                self._prefix_unpin(req, t)
                 self._kv_free(b.j, req.kv_blocks, t)
                 req.kv_server, req.kv_blocks = -1, 0
             if started:
@@ -555,11 +792,16 @@ class _EventSimRuntime(_SimRuntimeBase):
         st.served += 1
         if spec.kv_blocks > 0 and req.kv_blocks > 0:
             blocks, req.kv_server, req.kv_blocks = req.kv_blocks, -1, 0
+            self._prefix_unpin(req, finish)
             self._kv_free(b.j, blocks, finish)
         if b.kv_resumed:
             # credited at completion, not dispatch: a resume preempted
             # again before it ran must not bank phantom savings
             self.kv_prefill_tokens_saved += req.prompt_tokens
+        elif b.prefix_saved:
+            # same late-credit rule for shared-prefix hits
+            self.kv_prefill_tokens_saved += b.prefix_saved
+            self.n_prefix_hits += 1
         req.finish = finish
         req.server = b.j
         proc = finish - req.arrival
@@ -635,6 +877,13 @@ class Simulator:
             r.kv_blocks = 0
         if not services:
             return SimResult.empty(policy.name, len(self.specs))
+        if self.slot is not None \
+                and any(s.kv_blocks > 0 for s in self.specs) \
+                and any(r.prefix_id >= 0 for r in services):
+            raise NotImplementedError(
+                "shared-prefix workloads on KV-modeled servers need the "
+                "event-driven simulator (slot=None): the slotted runtime "
+                "keeps no page ledger to hold resident prefixes in")
 
         if self.slot is not None:
             rt: _SimRuntimeBase = _SlottedSimRuntime(self, policy)
@@ -680,6 +929,10 @@ class Simulator:
             res.n_preempted = rt.n_preempted
             res.n_kv_evictions = rt.n_kv_evictions
             res.kv_prefill_tokens_saved = rt.kv_prefill_tokens_saved
+            res.n_prefix_hits = rt.n_prefix_hits
+            res.n_kv_orphaned = rt.n_kv_orphaned
+            res.n_kv_migrations = rt.n_kv_migrations
+            res.kv_migrated_bytes = rt.kv_migrated_bytes
             return res
         makespan = max(o.finish for o in completed)
         for st in states:
@@ -709,6 +962,10 @@ class Simulator:
             admitted_success_rate=float(np.mean(adm_succ)),
             n_kv_evictions=rt.n_kv_evictions,
             kv_prefill_tokens_saved=rt.kv_prefill_tokens_saved,
+            n_prefix_hits=rt.n_prefix_hits,
+            n_kv_orphaned=rt.n_kv_orphaned,
+            n_kv_migrations=rt.n_kv_migrations,
+            kv_migrated_bytes=rt.kv_migrated_bytes,
         )
 
     # ------------------------------------------------------------------
@@ -718,17 +975,22 @@ class Simulator:
     # ------------------------------------------------------------------
     def _draw_infer(self, req: ServiceRequest, j: int,
                     resume: bool = False,
-                    alloc: Optional[Allocation] = None) -> float:
+                    alloc: Optional[Allocation] = None,
+                    prefix_tokens: int = 0) -> float:
         """Realized inference time: nominal / hidden efficiency × noise.
         Consumes one noise draw — call once per realized request.
         `resume` drops the prefill term: the request's KV pages survived
         its eviction on this server, so only the remaining decode runs.
-        `alloc` stretches the window by 1/(freq × lane_share) — the DVFS
-        tier slows the clock, a sub-unit lane share slices the lane."""
+        `prefix_tokens` drops just that many prompt tokens from the
+        prefill term — the server already holds their KV as a shared
+        prefix. `alloc` stretches the window by 1/(freq × lane_share) —
+        the DVFS tier slows the clock, a sub-unit lane share slices the
+        lane."""
         noise = float(self.noise_rng.lognormal(0.0, 0.08))
         nominal = (self.specs[j].decode_time(req.output_tokens) if resume
-                   else self.specs[j].service_time(req.prompt_tokens,
-                                                   req.output_tokens))
+                   else self.specs[j].service_time(
+                       req.prompt_tokens - prefix_tokens,
+                       req.output_tokens))
         t_inf = (nominal / self.efficiency[req.class_id, j]) * noise
         if alloc is not None:
             t_inf /= alloc.freq(self.specs[j]) * alloc.lane_share

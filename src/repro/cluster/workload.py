@@ -31,6 +31,12 @@ class ServiceRequest:
     # a requeue back to `kv_server` resumes decode with zero re-prefill
     kv_server: int = -1
     kv_blocks: int = 0
+    # shared-prefix identity: requests from the same system-prompt pool
+    # carry the same `prefix_id` and share their first `prefix_tokens`
+    # prompt tokens — a KV-modeled server that already holds that prefix
+    # serves them without re-prefilling it (-1/0: no shared prefix)
+    prefix_id: int = -1
+    prefix_tokens: int = 0
 
     @property
     def processing_time(self) -> float:

@@ -134,6 +134,17 @@ class Decision:
                     the right call when the preemption is relieving KV
                     *memory* exhaustion rather than reclaiming a lane
                     (ignored on servers that don't model KV)
+    migrate_kv      the request holds preserved KV pages on another server
+                    (`req.kv_server`) and the policy wants them *shipped*
+                    to `server` over the link topology instead of
+                    re-prefilled: the runtime books the transfer bytes on
+                    every link of the migration path and the request
+                    resumes decode on `server` with zero re-prefill once
+                    the `KvMigrate` event lands. Ignored when the request
+                    holds no pages, when `server` IS the KV home (a plain
+                    resume is free), or when the destination cannot host
+                    the pages (the legacy orphan-and-re-prefill path runs
+                    instead). Event-driven runtimes only.
     """
 
     server: int
@@ -144,6 +155,7 @@ class Decision:
     admit: bool = True
     preempt_victim: Optional[int] = None
     preempt_drop_kv: bool = False
+    migrate_kv: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -208,6 +220,12 @@ class ClusterView:
     kv_total_blocks  each server's block-pool size; an entry of 0 means
                      that server does not model KV (its kv_free_blocks
                      entry is meaningless and the KV constraint is vacuous)
+    kv_prefix_tokens per-server map of shared-prefix pool id ->
+                     resident *ready* prefix tokens: how much of that
+                     system prompt's KV is already prefilled on the
+                     server. `prefix_hit_tokens(req, j)` turns it into
+                     the prefill tokens request `req` would skip on j;
+                     None when the runtime models no prefix sharing.
 
     Allocation state — the committed-share ledger IS `uplink_free_at` /
     `lane_free` (shares use exclusive stretched-window bookings, so a
@@ -229,11 +247,62 @@ class ClusterView:
     running: Optional[List[List[RunningTask]]] = None
     kv_free_blocks: Optional[List[int]] = None
     kv_total_blocks: Optional[List[int]] = None
+    kv_prefix_tokens: Optional[List[Dict[int, int]]] = None
     tier_load: Optional[List[List[float]]] = None
 
     @property
     def n_servers(self) -> int:
         return len(self.specs)
+
+    # ---------------- KV affinity helpers --------------------------------
+    def prefix_hit_tokens(self, req, j: int) -> int:
+        """Prefill tokens `req` would skip on server j thanks to resident
+        shared-prefix pages (0 without prefix modeling or a match).
+
+        Clipped to full blocks of the request's *own* shared prefix and
+        to strictly less than its prompt (>= 1 token must still prefill
+        to produce logits)."""
+        if self.kv_prefix_tokens is None:
+            return 0
+        pid = getattr(req, "prefix_id", -1)
+        if pid < 0:
+            return 0
+        resident = self.kv_prefix_tokens[j].get(pid, 0)
+        if resident <= 0:
+            return 0
+        bt = getattr(self.specs[j], "kv_block_tokens", 0)
+        if bt <= 0:
+            return 0
+        own = min(getattr(req, "prefix_tokens", 0), req.prompt_tokens - 1)
+        return min(resident, (own // bt) * bt)
+
+    def kv_migration_s(self, req, dst: int) -> Optional[float]:
+        """Predicted seconds to ship `req`'s preserved KV pages from
+        their current home to server `dst` over the link topology —
+        the migration-cost slack policies weigh against re-prefill.
+        None when the request holds no pages or links aren't modeled."""
+        src = getattr(req, "kv_server", -1)
+        n_blocks = getattr(req, "kv_blocks", 0)
+        if src < 0 or n_blocks <= 0 or src == dst:
+            return None
+        if self.link_bw is None or self.paths is None:
+            return None
+        src_spec = self.specs[src]
+        bt = getattr(src_spec, "kv_block_tokens", 0)
+        per_tok = getattr(src_spec, "kv_bytes_per_token", None)
+        if bt <= 0 or per_tok is None:
+            return None
+        path: List[str] = []
+        for name in list(self.paths[src]) + list(self.paths[dst]):
+            if name not in path:
+                path.append(name)
+        bw = min(self.link_bw[name] for name in path)
+        if bw <= 0:
+            return None
+        queue = max((self.link_queue or {}).get(name, 0.0)
+                    for name in path)
+        bits = n_blocks * bt * per_tok() * 8.0
+        return queue + bits / bw
 
     def n_tiers(self, j: int) -> int:
         """Size of server j's DVFS table (1 when the spec predates tiers)."""

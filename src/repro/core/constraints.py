@@ -89,6 +89,13 @@ def evaluate_constraints(req: ServiceRequest, j: int, view: ClusterView,
         else:
             kv_need = spec.kv_blocks_needed(req.prompt_tokens,
                                             req.output_tokens)
+            # shared-prefix pages already resident on j shrink the
+            # request's unique footprint — a prefix hit charges only the
+            # suffix blocks, so the slack reflects what admission will
+            # actually claim
+            hit_fn = getattr(view, "prefix_hit_tokens", None)
+            if hit_fn is not None:
+                kv_need -= hit_fn(req, j) // max(spec.kv_block_tokens, 1)
         kv_slack = (view.kv_free_blocks[j] - kv_need) / totals[j]
 
     return ConstraintSlacks(time=time_slack, compute=compute_slack,

@@ -23,6 +23,10 @@ Event taxonomy
     Preempt          a running victim's batch lane is returned
                      (Decision.preempt_victim); its remaining decode
                      tokens are requeued as a new Arrival
+    KvMigrate        a request's preserved KV pages finished transferring
+                     across the link topology to another server
+                     (Decision.migrate_kv); the request resumes there
+                     with zero re-prefill
     BandwidthChange  a link's bandwidth factor changed (model resample or
                      scenario-injected multiplicative scale, per server
                      index or per named topology link)
@@ -127,6 +131,21 @@ class InferStart(Event):
 
     request: Any = None
     server: int = -1
+    context: Any = None
+    priority = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class KvMigrate(Event):
+    """`request`'s preserved KV pages finished their cross-server
+    transfer at `time` (booked on every link of the migration path when
+    the move was decided — `Decision.migrate_kv`). The runtime's
+    `on_kv_migrate` frees the source pages and resumes the request on
+    the destination with zero re-prefill. `context` is runtime-private
+    (source/destination bookkeeping)."""
+
+    request: Any = None
+    decision: Optional[Decision] = None
     context: Any = None
     priority = 2
 
@@ -242,6 +261,9 @@ class Runtime:
     def on_preempt(self, ev: Preempt) -> None:
         pass
 
+    def on_kv_migrate(self, ev: "KvMigrate") -> None:
+        pass
+
     # ---------------- generic driving ------------------------------------
     def slot_index(self, t: float) -> int:
         """Slot ordinal forwarded to `drive_slot` (diagnostics only);
@@ -289,6 +311,7 @@ class Runtime:
         TxDone: "on_tx_done", InferStart: "on_infer_start",
         InferDone: "on_infer_done", BandwidthChange: "on_bandwidth_change",
         Reject: "on_reject", Preempt: "on_preempt",
+        KvMigrate: "on_kv_migrate",
     }
 
     def handle(self, ev: Event) -> None:
@@ -523,6 +546,38 @@ class KVPressureScenario(Scenario):
             r.payload_bytes = float(r.payload_bytes * self.payload_scale)
 
 
+class SharedPrefixScenario(Scenario):
+    """System-prompt reuse: the ROADMAP's "millions of users" regime where
+    most requests open with one of a small set of shared system prompts.
+
+    Each request draws a prompt pool from a Zipf-like law over `n_pools`
+    pools (rank-`zipf_a` weights — a few pools dominate, a long tail is
+    nearly unique) and *prepends* a `prefix_tokens`-token system prompt:
+    `prompt_tokens` grows by the prefix and the request carries
+    (`prefix_id`, `prefix_tokens`) so KV-modeled runtimes know which
+    admissions share resident pages. Arrivals stay the baseline Poisson
+    process, so wins against the unshared baseline are request-for-request
+    comparable.
+    """
+
+    name = "shared-prefix"
+
+    def __init__(self, n_pools: int = 32, zipf_a: float = 1.2,
+                 prefix_tokens: int = 256):
+        assert n_pools > 0 and prefix_tokens > 0
+        self.n_pools = n_pools
+        self.zipf_a = zipf_a
+        self.prefix_tokens = prefix_tokens
+
+    def shape_requests(self, services, rng) -> None:
+        w = 1.0 / np.arange(1, self.n_pools + 1) ** self.zipf_a
+        pools = rng.choice(self.n_pools, size=len(services), p=w / w.sum())
+        for r, pid in zip(services, pools):
+            r.prefix_id = int(pid)
+            r.prefix_tokens = self.prefix_tokens
+            r.prompt_tokens = int(r.prompt_tokens) + self.prefix_tokens
+
+
 class BandwidthDropScenario(Scenario):
     """Poisson arrivals plus a mid-run uplink degradation: the last server
     (the cloud, by testbed convention) drops to `scale` over the middle
@@ -587,13 +642,15 @@ register_scenario("bwdrop", BandwidthDropScenario)
 register_scenario("overload", OverloadScenario)
 register_scenario("cloud-outage", CloudOutageScenario)
 register_scenario("kv-pressure", KVPressureScenario)
+register_scenario("shared-prefix", SharedPrefixScenario)
 
 
 __all__ = [
     "Arrival", "BandwidthChange", "BandwidthDropScenario", "BurstScenario",
     "CloudOutageScenario", "Deferred", "DiurnalScenario", "Event",
     "EventLoop", "InferDone", "InferStart", "KVPressureScenario",
-    "OverloadScenario", "PoissonScenario", "Preempt", "Reject", "Runtime",
-    "Scenario", "TraceScenario", "TxDone", "available_scenarios",
-    "make_scenario", "register_scenario",
+    "KvMigrate", "OverloadScenario", "PoissonScenario", "Preempt",
+    "Reject", "Runtime", "Scenario", "SharedPrefixScenario",
+    "TraceScenario", "TxDone", "available_scenarios", "make_scenario",
+    "register_scenario",
 ]

@@ -186,6 +186,20 @@ class PerLLMScheduler(SchedulingPolicy):
                            tier_table[j][s]])
         elif feasible.any():
             guarded = feasible
+            hit_fn = getattr(view, "prefix_hit_tokens", None)
+            if hit_fn is not None and getattr(req, "prefix_id", -1) >= 0:
+                # prefix-affinity routing: among feasible servers, prefer
+                # the ones already holding this request's shared system
+                # prompt — landing there skips that much prefill and pins
+                # only the unique suffix. Ties (several servers hold the
+                # same span, or none holds any) leave the bandit's arm
+                # space untouched.
+                hits = np.array([hit_fn(req, jj)
+                                 for jj in range(self.n_servers)])
+                if hits.max() > 0:
+                    aff = guarded & (hits == hits.max())[:, None]
+                    if aff.any():
+                        guarded = aff
             if self.admission and self.bandit.n_tiers > 1:
                 # allocation-aware admission: prefer arms that leave
                 # TIER_ADMIT_GUARD of C1 headroom; shed only when *no*
@@ -196,7 +210,11 @@ class PerLLMScheduler(SchedulingPolicy):
                 roomy = np.array(
                     [[s is not None and s.time >= self.TIER_ADMIT_GUARD
                       for s in row] for row in slacks], bool)
-                if (feasible & roomy).any():
+                if (guarded & roomy).any():
+                    guarded = guarded & roomy
+                elif (feasible & roomy).any():
+                    # roomy arms exist only off the prefix-affine servers:
+                    # admitting elsewhere beats shedding
                     guarded = feasible & roomy
                 else:
                     admit = False
@@ -227,6 +245,10 @@ class PerLLMScheduler(SchedulingPolicy):
                 # the least-bad server — the runtime emits the rejected
                 # Outcome (SLO-violation cost) and frees no capacity
                 admit = False
+        migrate = False
+        if admit and 0 <= kv_home < self.n_servers and j != kv_home \
+                and getattr(req, "kv_blocks", 0) > 0:
+            migrate = self._migration_pays(req, j, view)
         alloc = allocs[j][slot]
         self._pending_slacks[req.sid] = slacks[j][slot]
         self._pending_tier[req.sid] = slot
@@ -238,7 +260,27 @@ class PerLLMScheduler(SchedulingPolicy):
                         slacks=slacks[j][slot], admit=admit,
                         preempt_victim=None if victim is None
                         else victim.sid,
-                        preempt_drop_kv=drop_kv)
+                        preempt_drop_kv=drop_kv,
+                        migrate_kv=migrate)
+
+    def _migration_pays(self, req, j, view):
+        """Ship preserved pages to the chosen server instead of abandoning
+        them? Yes iff the destination can host them and the transfer (at
+        the topology's current bottleneck bandwidth, behind its current
+        backlog) beats the re-prefill it avoids."""
+        totals = getattr(view, "kv_total_blocks", None)
+        if totals is None or totals[j] <= 0:
+            return False
+        spec = view.specs[j]
+        need = spec.kv_blocks_needed(req.prompt_tokens, req.output_tokens)
+        free = view.kv_free_blocks[j]
+        if free is None or free < need:
+            return False
+        mig_fn = getattr(view, "kv_migration_s", None)
+        cost = mig_fn(req, j) if mig_fn is not None else None
+        if cost is None:
+            return False
+        return cost < spec.prefill_time(req.prompt_tokens)
 
     def _find_victim(self, req, view: ClusterView):
         """A running task worth preempting for `req`, or None.

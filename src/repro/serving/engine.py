@@ -73,7 +73,7 @@ class ServingEngine:
                  max_seq: int = 1024, ctx: Optional[ParallelContext] = None,
                  temperature: float = 0.0, seed: int = 0,
                  paged: bool = False, kv_blocks: Optional[int] = None,
-                 kv_block_tokens: int = 16):
+                 kv_block_tokens: int = 16, prefix_sharing: bool = True):
         self.cfg = cfg
         self.params = params
         self.ctx = ctx or cpu_context()
@@ -90,6 +90,9 @@ class ServingEngine:
         self._key = jax.random.key(seed)
         self.completed: List[Request] = []
         self.n_prefills = 0       # prompts actually prefilled (resumes skip)
+        self.n_prefix_hits = 0        # admissions that reused a shared prefix
+        self.prefix_tokens_reused = 0  # prompt tokens those hits skipped
+        self.prefix_sharing = bool(prefix_sharing)
         # DVFS pacing hint: the relative clock frequency this engine's host
         # is currently running at. Compute (`step`) is frequency-blind —
         # the same tokens come out — but the runtime that clocks the engine
@@ -175,6 +178,13 @@ class ServingEngine:
         """Free KV blocks (None when the engine is dense)."""
         return self.kv.free_blocks if self.paged else None
 
+    @property
+    def _sharing(self) -> bool:
+        """Prefix sharing live on this engine (paged + enabled + the
+        pool's leaf layout supports a prefix index)."""
+        return self.paged and self.prefix_sharing \
+            and self.kv.supports_prefix
+
     def _insert_slot(self, slot: int, single_cache):
         def ins(pool, one, ax):
             return jax.lax.dynamic_update_slice_in_dim(pool, one, slot, ax)
@@ -199,7 +209,8 @@ class ServingEngine:
                 continue
             if self.paged:
                 req.pages = self.kv.allocate(
-                    len(req.prompt) + req.max_new_tokens)
+                    len(req.prompt) + req.max_new_tokens,
+                    prompt=req.prompt if self._sharing else None)
                 if req.pages is None:
                     # KV pressure: admission stalls FIFO — but a resumable
                     # continuation further back already holds its pages
@@ -213,19 +224,46 @@ class ServingEngine:
                     continue
             self.queue.pop(0)
             plen = len(req.prompt)
-            bucket = 1 << max(plen - 1, 1).bit_length()   # next pow2 >= plen
-            bucket = min(bucket, self.max_seq)
-            padded = req.prompt + [0] * (bucket - plen)
-            prompt = jnp.asarray(padded, jnp.int32)[None, :]
-            one_cache = M.init_cache(self.cfg, 1, self.max_seq)
-            batch = {"tokens": prompt}
-            if self.cfg.mrope:
-                s = prompt.shape[1]
-                batch["positions"] = jnp.broadcast_to(
-                    jnp.arange(s, dtype=jnp.int32), (3, 1, s))
-            last_logits, one_cache = self._prefill(
-                self.params, batch, one_cache, jnp.int32(plen - 1))
+            skip = 0
+            if self.paged and req.pages is not None \
+                    and req.pages.shared_blocks > 0:
+                skip = req.pages.shared_blocks * self.kv.block_tokens
+            if skip > 0:
+                # prefix hit: the table's read-shared head already holds
+                # the prompt's first `skip` tokens of KV — gather the
+                # pages and prefill only the suffix, one token at a time
+                # through the decode step (its shape-polymorphic jit
+                # serves batch 1; `allocate` guarantees skip < plen)
+                one_cache = self.kv.load(req.pages, [])
+                logits = None
+                for i in range(skip, plen):
+                    tok = jnp.asarray([[req.prompt[i]]], jnp.int32)
+                    logits, one_cache = self._decode(
+                        self.params, tok, one_cache,
+                        jnp.asarray([i], jnp.int32))
+                last_logits = logits
+                self.n_prefix_hits += 1
+                self.prefix_tokens_reused += skip
+            else:
+                bucket = 1 << max(plen - 1, 1).bit_length()  # next pow2 >= plen
+                bucket = min(bucket, self.max_seq)
+                padded = req.prompt + [0] * (bucket - plen)
+                prompt = jnp.asarray(padded, jnp.int32)[None, :]
+                one_cache = M.init_cache(self.cfg, 1, self.max_seq)
+                batch = {"tokens": prompt}
+                if self.cfg.mrope:
+                    s = prompt.shape[1]
+                    batch["positions"] = jnp.broadcast_to(
+                        jnp.arange(s, dtype=jnp.int32), (3, 1, s))
+                last_logits, one_cache = self._prefill(
+                    self.params, batch, one_cache, jnp.int32(plen - 1))
             self.n_prefills += 1
+            if self._sharing:
+                # publish the prompt's full blocks while they really hold
+                # its KV (pages are otherwise only written at eviction) so
+                # later admissions can attach them copy-on-write
+                self.kv.store_prefix(req.pages, one_cache, n_tokens=plen)
+                self.kv.register_prefix(req.prompt, req.pages)
             self._key, k = jax.random.split(self._key)
             tok = int(sample_tokens(k, last_logits, self.temperature)[0])
             self._insert_slot(slot, one_cache)

@@ -35,7 +35,8 @@ from repro.cluster.simulator import Outcome, rejected_outcome
 from repro.cluster.workload import ServiceRequest, classify
 from repro.core.api import NOMINAL, ClusterView, Decision, RunningTask
 from repro.core.runtime import (
-    Arrival, BandwidthChange, InferStart, Preempt, Reject, Runtime, TxDone,
+    Arrival, BandwidthChange, InferStart, KvMigrate, Preempt, Reject,
+    Runtime, TxDone,
 )
 from repro.core.scheduler import PerLLMScheduler
 from repro.serving.engine import Request, ServingEngine
@@ -122,6 +123,8 @@ class PerLLMServer(Runtime, LinkStateMixin):
         self.completed: List[ServedRequest] = []
         self.rejected: List[ServedRequest] = []
         self.n_preempted = 0
+        self.n_kv_migrations = 0
+        self.kv_migrated_bytes = 0.0
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
@@ -369,10 +372,91 @@ class PerLLMServer(Runtime, LinkStateMixin):
         self.engines[old_j].release(old_req)
         return None
 
+    def _kv_compatible(self, src: int, dst: int) -> bool:
+        """Can pages move between these engines byte-for-byte? Same model
+        config and page geometry on two paged engines."""
+        a, b = self.engines[src], self.engines[dst]
+        return (a.paged and b.paged and a.cfg == b.cfg
+                and a.kv.block_tokens == b.kv.block_tokens
+                and a.max_seq == b.max_seq)
+
+    def _start_migration(self, sr: ServedRequest, j: int,
+                         t: float) -> bool:
+        """Begin shipping `sr`'s preserved pages from their home engine to
+        server `j`, if the Decision asked for it and the move is possible
+        (compatible engines, destination pool has room). The transfer
+        occupies the union of both servers' link paths at the bottleneck
+        bandwidth — exactly the simulator's charging rule — and the engine
+        handoff resumes at `KvMigrate`. False = fall through to the normal
+        release-and-re-prefill path."""
+        if sr.evicted is None or sr.decision is None \
+                or not sr.decision.migrate_kv:
+            return False
+        old_j, old_req = sr.evicted
+        if old_j == j or not self._kv_compatible(old_j, j):
+            return False
+        dst = self.engines[j]
+        n_blocks = len(old_req.pages.blocks)
+        if dst.kv.free_blocks < n_blocks:
+            return False
+        n_bytes = n_blocks * self.engines[old_j].kv.block_tokens \
+            * float(self.engines[old_j].cfg.kv_bytes_per_token())
+        path = self.topology.migration_path(old_j, j)
+        bw = self.topology.migration_bandwidth(
+            old_j, j, self._link_factors(t), self.link_scale)
+        if not path or bw <= 0.0 or n_bytes <= 0.0:
+            return False
+        start = max(t, max(self.link_free[name] for name in path))
+        end = start + n_bytes * 8.0 / bw
+        for name in path:
+            self.link_free[name] = end
+        self.n_kv_migrations += 1
+        self.kv_migrated_bytes += n_bytes
+        self.loop.push(KvMigrate(end, request=sr.service,
+                                 decision=sr.decision,
+                                 context=(old_j, j, old_req)))
+        return True
+
+    def on_kv_migrate(self, ev: KvMigrate) -> None:
+        """Migrated pages landed on the destination engine: export them
+        from the source pool, adopt them into the destination's, and
+        resubmit the continuation there — decode resumes with zero
+        re-prefill. If the destination pool filled while the pages were
+        in flight, fall back to a fresh submit (full re-prefill)."""
+        svc = ev.request
+        old_j, j, old_req = ev.context
+        src, dst = self.engines[old_j], self.engines[j]
+        sr = self.active.get(svc.sid)
+        if sr is None:
+            src.release(old_req)     # retired while the pages were in flight
+            return
+        pages = src.kv.export(old_req.pages)
+        table = dst.kv.import_pages(pages, len(old_req.pages.blocks))
+        sr.evicted = None
+        svc.kv_server, svc.kv_blocks = -1, 0
+        if table is None:
+            src.release(old_req)
+            sr.engine_req = dst.submit(
+                sr._prompt, max_new_tokens=svc.output_tokens)
+        else:
+            new_req = Request(rid=next(dst._rid),
+                              prompt=list(old_req.prompt),
+                              max_new_tokens=old_req.max_new_tokens,
+                              eos_id=old_req.eos_id,
+                              generated=list(old_req.generated),
+                              pages=table, kv=old_req.kv)
+            old_req.kv = None        # the snapshot moved with the pages
+            src.release(old_req)
+            sr.engine_req = dst.resubmit(new_req)
+            svc.kv_server, svc.kv_blocks = j, len(table.blocks)
+        self._ensure_tick(j, ev.time)
+
     def on_tx_done(self, ev: TxDone) -> None:
         sr = self.active[ev.request.sid]
         j = sr.server
         eng = self.engines[j]
+        if self._start_migration(sr, j, ev.time):
+            return    # pages in flight: KvMigrate finishes the handoff
         resumable = self._resolve_eviction(sr, j)
         if resumable is not None:
             # KV-preserving requeue: reattach the evicted Request — its
@@ -485,6 +569,11 @@ class PerLLMServer(Runtime, LinkStateMixin):
             "served": len(done),
             "rejected": len(self.rejected),
             "preempted": self.n_preempted,
+            "kv_migrations": self.n_kv_migrations,
+            "kv_migrated_bytes": self.kv_migrated_bytes,
+            "prefix_hits": sum(e.n_prefix_hits for e in self.engines),
+            "prefix_tokens_reused": sum(e.prefix_tokens_reused
+                                        for e in self.engines),
             "deadline_met": float(np.mean([sr.met_deadline for sr in done])),
             "mean_latency": float(lat.mean()),
             "per_server": np.bincount(
