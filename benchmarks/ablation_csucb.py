@@ -52,10 +52,8 @@ def run(n: int = 3000) -> str:
     base = None
     for name, params in VARIANTS:
         sim = Simulator(specs, BandwidthModel(False, seed=1), seed=42)
-        if name.startswith("no C1"):
-            sched = _NoFilter(len(specs))
-        else:
-            sched = PerLLMScheduler(len(specs), params=params)
+        sched = (_NoFilter(len(specs)) if name.startswith("no C1")
+                 else PerLLMScheduler(len(specs), params=params))
         res = sim.run([copy.copy(s) for s in services], sched)
         lines.append(f"{name:32s} {res.success_rate*100:6.1f}% "
                      f"{res.total_energy/1e3:8.1f} "

@@ -13,21 +13,33 @@ writes its own JSON next to the default smoke's)::
     python benchmarks/compare_baseline.py BENCH_smoke.json \
         BENCH_energy.json benchmarks/baseline.json
 
-Gated metrics are the quality-style ones (names containing ``success``,
-``thpt``/``throughput`` or ``goodput`` — higher is better; ``*ratio*``
-names are excluded, since a PerLLM/baseline ratio shrinks when the
-*baseline* improves), the paged-KV subsystem's liveness metrics
-(``kv_evictions``, ``*saved*``, ``*prefix*``, ``*migrat*`` — the
-deterministic smoke run must keep exercising KV-preserving preemption,
-banking resume savings, and taking shared-prefix hits; migration counts
-are gated so the cross-server path can't silently vanish), and the
-allocation subsystem's efficiency metrics: ``admitted_success_rate``
-(higher is better) and ``energy_per_token`` — the one *lower-is-better*
-gate, failing when energy per served token rises more than ``--tolerance``
-above the committed baseline. Wall-clock (`us_per_call`) is reported but
-never gated: CI runners are too noisy for latency gates. Regenerate the
-baseline with the exact smoke-scale commands above after an intentional
-behavior change.
+Gating is **explicit, per metric**: every entry in ``baseline.json``'s
+``metrics`` maps the metric name to an object::
+
+    {"value": 92.5, "gate": true}
+    {"value": 0.31, "gate": true, "direction": "lower"}
+
+``gate: true`` metrics fail the build when the current value drifts more
+than ``--tolerance`` below the baseline (or above it, for ``direction:
+"lower"`` metrics like ``energy_per_token``). ``gate: false`` metrics
+are recorded for context but never compared — e.g. PerLLM-vs-baseline
+*ratios*, which shrink when the baseline improves without any
+regression. Name-pattern heuristics are gone: a metric's gate status is
+whatever its baseline entry says, no matter what it is called.
+
+Wall-clock (``us_per_call``) is reported but never gated: CI runners are
+too noisy for latency gates.
+
+Regenerating the baseline after an intentional behavior change::
+
+    python benchmarks/compare_baseline.py BENCH_smoke.json \
+        BENCH_energy.json benchmarks/baseline.json \
+        --emit-baseline benchmarks/baseline.json
+
+which merges the run values into the baseline schema, preserving each
+existing metric's ``gate``/``direction`` flags; metrics new to the
+baseline default to ``gate: false`` (with a notice) so gating a new
+metric is always a deliberate edit.
 """
 from __future__ import annotations
 
@@ -35,32 +47,22 @@ import argparse
 import json
 import sys
 
-GATED_TAGS = ("success", "thpt", "throughput", "goodput", "kv_evictions",
-              "saved", "admitted_success", "energy_per_token", "prefix",
-              "migrat")
 
-# gated metrics where *smaller* is the good direction
-LOWER_IS_BETTER_TAGS = ("energy_per_token",)
-
-
-def gated(metric_name: str) -> bool:
-    name = metric_name.lower()
-    # PerLLM-vs-baseline ratios are NOT gated: improving a baseline's
-    # absolute goodput shrinks the ratio without any regression
-    if "ratio" in name:
-        return False
-    return any(tag in name for tag in GATED_TAGS)
-
-
-def lower_is_better(metric_name: str) -> bool:
-    name = metric_name.lower()
-    return any(tag in name for tag in LOWER_IS_BETTER_TAGS)
+def _entry(exp: str, key: str, raw) -> dict:
+    """Validate one baseline metric entry (the explicit-gate schema)."""
+    if not isinstance(raw, dict) or "value" not in raw or "gate" not in raw:
+        raise SystemExit(
+            f"baseline entry {exp}.{key} = {raw!r} is not in the explicit "
+            f"gate schema: expected {{\"value\": <num>, \"gate\": "
+            f"true/false}} (optionally \"direction\": \"lower\"); "
+            f"regenerate with --emit-baseline")
+    return raw
 
 
 def compare(current: dict, baseline: dict, tolerance: float) -> list:
-    """Failure messages for every gated metric outside baseline±tol (below
-    the floor for higher-is-better metrics, above the ceiling for
-    lower-is-better ones)."""
+    """Failure messages for every gated metric outside baseline±tol
+    (below the floor for higher-is-better metrics, above the ceiling for
+    ``direction: "lower"`` ones)."""
     failures = []
     checked = 0
     for exp, info in sorted(baseline.items()):
@@ -68,16 +70,18 @@ def compare(current: dict, baseline: dict, tolerance: float) -> list:
         if cur is None:
             failures.append(f"{exp}: missing from current run")
             continue
-        for key, base_val in sorted(info.get("metrics", {}).items()):
-            if not gated(key):
+        for key, raw in sorted(info.get("metrics", {}).items()):
+            entry = _entry(exp, key, raw)
+            if not entry["gate"]:
                 continue
+            base_val = entry["value"]
             cur_val = cur.get("metrics", {}).get(key)
             if cur_val is None:
                 failures.append(f"{exp}.{key}: metric missing "
                                 f"(baseline {base_val:g})")
                 continue
             checked += 1
-            if lower_is_better(key):
+            if entry.get("direction") == "lower":
                 ceiling = base_val * (1.0 + tolerance)
                 bad = cur_val > ceiling
                 status = "ok" if not bad else "REGRESSION"
@@ -105,6 +109,35 @@ def compare(current: dict, baseline: dict, tolerance: float) -> list:
     return failures
 
 
+def emit_baseline(current: dict, baseline: dict) -> dict:
+    """Merge a run's values into the baseline schema, preserving each
+    existing metric's gate/direction flags. Metrics (or experiments) the
+    baseline has never seen default to ``gate: false`` and are listed so
+    the author can promote them deliberately."""
+    out: dict = {}
+    new_metrics = []
+    for exp, cur in sorted(current.items()):
+        old = baseline.get(exp, {})
+        old_metrics = old.get("metrics", {})
+        metrics = {}
+        for key, cur_val in sorted(cur.get("metrics", {}).items()):
+            prev = old_metrics.get(key)
+            entry = {"value": cur_val, "gate": False}
+            if isinstance(prev, dict) and "gate" in prev:
+                entry["gate"] = prev["gate"]
+                if prev.get("direction") == "lower":
+                    entry["direction"] = "lower"
+            else:
+                new_metrics.append(f"{exp}.{key}")
+            metrics[key] = entry
+        out[exp] = {k: v for k, v in cur.items() if k != "metrics"}
+        out[exp]["metrics"] = metrics
+    for name in new_metrics:
+        print(f"note: {name} is new — emitted with gate: false; edit the "
+              f"baseline to gate it", file=sys.stderr)
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Fail if gated benchmark metrics regress vs baseline.")
@@ -115,6 +148,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.05,
                     help="allowed fractional drift from baseline "
                          "(default 0.05)")
+    ap.add_argument("--emit-baseline", metavar="OUT", default=None,
+                    help="instead of gating, write OUT in the baseline "
+                         "schema: current values, existing gate flags "
+                         "preserved, new metrics gate: false")
     args = ap.parse_args(argv)
     current: dict = {}
     for path in args.current:
@@ -122,6 +159,13 @@ def main(argv=None) -> int:
             current.update(json.load(fh))
     with open(args.baseline) as fh:
         baseline = json.load(fh)
+    if args.emit_baseline:
+        merged = emit_baseline(current, baseline)
+        with open(args.emit_baseline, "w") as fh:
+            json.dump(merged, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.emit_baseline}")
+        return 0
     failures = compare(current, baseline, args.tolerance)
     if failures:
         print("\nbenchmark regression gate FAILED:", file=sys.stderr)

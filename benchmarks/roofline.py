@@ -50,11 +50,12 @@ def load_reports(path: str = "dryrun_single.jsonl"):
     if not os.path.exists(path):
         return []
     rows = {}
-    for line in open(path):
-        r = json.loads(line)
-        if r.get("error") or r.get("skipped"):
-            continue
-        rows[(r["arch"], r["shape"])] = r   # keep latest per pair
+    with open(path) as fh:
+        for line in fh:
+            r = json.loads(line)
+            if r.get("error") or r.get("skipped"):
+                continue
+            rows[(r["arch"], r["shape"])] = r   # keep latest per pair
     return list(rows.values())
 
 

@@ -28,6 +28,7 @@ the artifact the CI regression gate feeds to
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import sys
@@ -41,10 +42,8 @@ def _parse_derived(derived: str) -> dict:
         if "=" not in part:
             continue
         key, val = part.split("=", 1)
-        try:
+        with contextlib.suppress(ValueError):
             metrics[key.strip()] = float(val.strip().rstrip("%x"))
-        except ValueError:
-            pass
     return metrics
 
 

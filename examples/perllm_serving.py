@@ -81,9 +81,10 @@ def main():
     tiers_chosen = [specs[d.server].tier_freq(d.alloc.freq_tier)
                     for d in decisions]
     print("allocations: " + " ".join(
-        f"s{d.server}@f{f:.2f}" for d, f in zip(decisions[:8],
-                                                tiers_chosen[:8])) + " ...")
-    for svc, d in zip(slice_, decisions):
+        f"s{d.server}@f{f:.2f}"
+        for d, f in zip(decisions[:8], tiers_chosen[:8],
+                        strict=True)) + " ...")
+    for svc, d in zip(slice_, decisions, strict=True):
         engines[d.server].set_freq_scale(
             specs[d.server].tier_freq(d.alloc.freq_tier))
         engines[d.server].submit([1 + svc.sid % 40, 2, 3, 4],

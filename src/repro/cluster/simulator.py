@@ -227,7 +227,7 @@ class _SlottedSimRuntime(_SimRuntimeBase):
             **self.link_view_kwargs(ev.time, link_factors),
         )
         decisions = drive_slot(self.policy, ev.requests, view, ts)
-        for req, d in zip(ev.requests, decisions):
+        for req, d in zip(ev.requests, decisions, strict=True):
             if not d.admit:
                 self.handle(Reject(ev.time, request=req, decision=d))
                 continue
@@ -873,6 +873,8 @@ class Simulator:
             r.finish = -1.0
             r.server = -1
             r.preemptions = 0
+            # repro-check: orphan(kv_used) — pre-run reset of the claim
+            # record; no pages are charged before the first dispatch
             r.kv_server = -1
             r.kv_blocks = 0
         if not services:

@@ -75,12 +75,12 @@ def generate_workload(n_services: int = 10_000, rate: float = 10.0,
             # baseline arrivals so the scenario's effect can be isolated
             # arrival-for-arrival
             scenario = None
-    if scenario is None \
-            or type(scenario).arrival_times is Scenario.arrival_times:
-        arrivals = np.cumsum(gaps)
-    else:
-        arrivals = scenario.arrival_times(
-            n_services, rate, np.random.default_rng([seed, 0x5CEA]))
+    arrivals = (
+        np.cumsum(gaps)
+        if scenario is None
+        or type(scenario).arrival_times is Scenario.arrival_times
+        else scenario.arrival_times(
+            n_services, rate, np.random.default_rng([seed, 0x5CEA])))
     prompt = np.clip(rng.lognormal(5.0, 0.8, n_services), 32, 2048).astype(int)
     out = np.clip(rng.lognormal(2.8, 0.6, n_services), 4, 96).astype(int)
     deadline = rng.uniform(2.0, 6.0, n_services)

@@ -152,10 +152,8 @@ class ModelConfig:
         if self.family == "ssm":
             return 0.0  # O(1) state, no per-token growth
         hd = self.resolved_head_dim
-        if self.mla is not None:
-            per_layer = self.mla.kv_lora_rank + self.mla.qk_rope_head_dim
-        else:
-            per_layer = 2 * self.n_kv_heads * hd
+        per_layer = (self.mla.kv_lora_rank + self.mla.qk_rope_head_dim
+                     if self.mla is not None else 2 * self.n_kv_heads * hd)
         n_attn = self.attention_layer_count()
         return float(n_attn * per_layer * bytes_per_elem)
 

@@ -276,7 +276,7 @@ class Runtime:
         t_slot = ev.slot_index if ev.slot_index >= 0 \
             else self.slot_index(ev.time)
         decisions = drive_slot(self.policy, ev.requests, view, t_slot)
-        for req, d in zip(ev.requests, decisions):
+        for req, d in zip(ev.requests, decisions, strict=True):
             self.place(ev.time, req, d)
 
     def place(self, t: float, request, decision: Decision) -> None:
@@ -572,7 +572,7 @@ class SharedPrefixScenario(Scenario):
     def shape_requests(self, services, rng) -> None:
         w = 1.0 / np.arange(1, self.n_pools + 1) ** self.zipf_a
         pools = rng.choice(self.n_pools, size=len(services), p=w / w.sum())
-        for r, pid in zip(services, pools):
+        for r, pid in zip(services, pools, strict=True):
             r.prefix_id = int(pid)
             r.prefix_tokens = self.prefix_tokens
             r.prompt_tokens = int(r.prompt_tokens) + self.prefix_tokens

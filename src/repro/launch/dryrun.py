@@ -180,12 +180,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
     t0 = time.time()
     fn, args = build(cfg, shape, ctx, microbatches=microbatches,
                      acc_bf16=acc_bf16)
-    if shape.kind == "train":
-        lowered = fn.lower(*args)
-    elif shape.kind == "prefill":
-        lowered = fn.lower(*args)
-    else:
-        lowered = fn.lower(*args)
+    lowered = fn.lower(*args)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()

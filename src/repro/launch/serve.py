@@ -38,7 +38,7 @@ def _run_fleet(args) -> None:
         policy = make_policy(args.policy, len(specs))
     except KeyError:
         raise SystemExit(f"unknown policy {args.policy!r}; available: "
-                         + ", ".join(available_policies()))
+                         + ", ".join(available_policies())) from None
     key = jax.random.key(0)
     edge_cfg = get_config("gemma-2b").reduced(n_layers=2, d_model=64,
                                               vocab_size=256)
@@ -111,7 +111,7 @@ def main(argv=None):
                         temperature=args.temperature, **_kv_kwargs(args))
     rng = np.random.default_rng(0)
     t0 = time.time()
-    for i in range(args.requests):
+    for _ in range(args.requests):
         plen = int(rng.integers(4, 24))
         eng.submit(list(rng.integers(0, cfg.vocab_size, plen)),
                    max_new_tokens=args.max_new)

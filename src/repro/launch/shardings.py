@@ -35,7 +35,8 @@ def _batch_axis_tree(cfg: ModelConfig, max_seq: int):
     c2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, max_seq))
     return jax.tree.map(
         lambda a, b: next(
-            (i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y),
+            (i for i, (x, y) in enumerate(zip(a.shape, b.shape, strict=True))
+             if x != y),
             -1),
         c1, c2)
 

@@ -446,10 +446,8 @@ def _decode_cp(q, cache, new_k, new_v, pos, window, scale,
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
                        kc.astype(jnp.float32)) * scale
         slots = offset + jnp.arange(s_loc)
-        if window and window <= cache_len:
-            valid = slots < jnp.minimum(pos + 1, window)
-        else:
-            valid = slots <= pos
+        valid = (slots < jnp.minimum(pos + 1, window)
+                 if window and window <= cache_len else slots <= pos)
         s = jnp.where(valid[None, None, None, None, :], s, -1e30)
         m_loc = jnp.max(s, axis=-1)                        # (B,Hkv,G,1)
         p = jnp.exp(s - m_loc[..., None])
@@ -516,11 +514,11 @@ def attention_layer(p, x, *, cfg: ModelConfig, ctx: ParallelContext,
     v = _split_heads(x @ p["wv"], ad.n_kv_heads, ad.head_dim)
 
     if positions is None:
-        if mode == "decode":
-            positions = jnp.broadcast_to(
+        positions = (
+            jnp.broadcast_to(
                 jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, s))
-        else:
-            positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+            if mode == "decode"
+            else jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0))
 
     if cfg.mrope and positions.ndim == 3:
         q = apply_mrope(q, positions, cfg.rope_theta)
@@ -553,27 +551,20 @@ def attention_layer(p, x, *, cfg: ModelConfig, ctx: ParallelContext,
                                         cfg, ctx)
             out = out.reshape(b, s, ad.n_heads * ad.head_dim) @ p["wo"]
             return out, new_cache
-        if window and window <= cache_len:
-            slot = pos % window
-        else:
-            slot = pos
+        slot = pos % window if window and window <= cache_len else pos
         newk = update_cache_seq(cache["k"], k, slot)
         newv = update_cache_seq(cache["v"], v, slot)
         new_cache = {"k": newk, "v": newv}
         if ctx.use_pallas and getattr(pos, "ndim", 0) == 0:
             from repro.kernels import ops as kops
-            if window and window <= cache_len:
-                vl = jnp.minimum(pos + 1, window)
-            else:
-                vl = pos + 1
+            vl = (jnp.minimum(pos + 1, window)
+                  if window and window <= cache_len else pos + 1)
             out = kops.decode_attention(q, newk, newv, vl, scale=scale)
         else:
             ki = jnp.arange(cache_len)[None, :]
             posv = jnp.asarray(pos).reshape(-1, 1)       # scalar or (B, 1)
-            if window and window <= cache_len:
-                valid = ki < jnp.minimum(posv + 1, window)
-            else:
-                valid = ki <= posv
+            valid = (ki < jnp.minimum(posv + 1, window)
+                     if window and window <= cache_len else ki <= posv)
             mask = valid[:, None, None, None, :]  # (B,Hkv,G,Sq,Sk) bcast
             out = sdpa(q, newk, newv, mask, scale, ctx)
     else:
@@ -629,11 +620,11 @@ def mla_layer(p, x, *, cfg: ModelConfig, ctx: ParallelContext, mode: str,
     scale = 1.0 / math.sqrt(qk_hd)
 
     if positions is None:
-        if mode == "decode":
-            positions = jnp.broadcast_to(
+        positions = (
+            jnp.broadcast_to(
                 jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, s))
-        else:
-            positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+            if mode == "decode"
+            else jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0))
 
     q = rmsnorm(p["q_norm"], x @ p["wq_a"]) @ p["wq_b"]
     q = q.reshape(b, s, h, qk_hd)

@@ -207,10 +207,9 @@ def input_specs(cfg: ModelConfig, shape: InputShape, dtype="bfloat16"):
     if kind == "train":
         out["tokens"] = _sds((b, s), jnp.int32)
         out["labels"] = _sds((b, s), jnp.int32)
-    elif kind == "prefill":
-        out["tokens"] = _sds((b, s), jnp.int32)
-    else:  # decode
-        out["tokens"] = _sds((b, 1), jnp.int32)
+    else:  # prefill feeds the whole prompt; decode one token at a time
+        out["tokens"] = _sds((b, s) if kind == "prefill" else (b, 1),
+                             jnp.int32)
 
     seq_here = 1 if kind == "decode" else s
     if cfg.mrope:

@@ -75,10 +75,8 @@ def _gates(p, u):
 
 def _conv_causal(u, kernel, state=None):
     k = kernel.shape[0]
-    if state is None:
-        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
-    else:
-        pad = state.astype(u.dtype)
+    pad = (jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+           if state is None else state.astype(u.dtype))
     up = jnp.concatenate([pad, u], axis=1)
     out = sum(up[:, i:i + u.shape[1]] * kernel[i] for i in range(k))
     return out, (up[:, -(k - 1):] if k > 1 else None)

@@ -65,10 +65,8 @@ def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None):
 def _causal_conv(u, kernel, conv_state=None):
     """Depthwise causal conv along S. u: (B, S, C); kernel: (K, C)."""
     k = kernel.shape[0]
-    if conv_state is None:
-        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
-    else:
-        pad = conv_state.astype(u.dtype)
+    pad = (jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+           if conv_state is None else conv_state.astype(u.dtype))
     up = jnp.concatenate([pad, u], axis=1)
     out = sum(up[:, i:i + u.shape[1]] * kernel[i] for i in range(k))
     new_state = up[:, -(k - 1):] if k > 1 else None

@@ -177,14 +177,12 @@ def apply_layer(spec: LayerSpec, p, x, *, cfg: ModelConfig,
 
     h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
     if spec.moe:
-        if ctx.moe_dispatch == "capacity":
-            moe_fn = MOE.moe_layer_capacity
-        elif ctx.moe_dispatch == "ep_a2a":
-            moe_fn = MOE.moe_layer_ep_a2a
-        elif ctx.moe_expert_parallel:
-            moe_fn = MOE.moe_layer_expert_parallel
-        else:
-            moe_fn = MOE.moe_layer
+        moe_fn = {
+            "capacity": MOE.moe_layer_capacity,
+            "ep_a2a": MOE.moe_layer_ep_a2a,
+        }.get(ctx.moe_dispatch,
+              MOE.moe_layer_expert_parallel if ctx.moe_expert_parallel
+              else MOE.moe_layer)
         out, moe_aux = moe_fn(p["moe"], h, cfg=cfg, ctx=ctx)
         aux.update(moe_aux)
     else:

@@ -64,7 +64,8 @@ def _batch_axis_tree(cfg: ModelConfig, max_seq: int):
     c1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, max_seq))
     c2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, max_seq))
     return jax.tree.map(
-        lambda a, b: next(i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+        lambda a, b: next(i for i, (x, y)
+                          in enumerate(zip(a.shape, b.shape, strict=True))
                           if x != y), c1, c2)
 
 

@@ -285,8 +285,9 @@ class PagedKVCache:
         flat_b, _ = jax.tree.flatten(shape_b)
         self._seq_axis: List[Optional[int]] = []
         self._pools: List[Optional[jnp.ndarray]] = []
-        for a, b in zip(flat_a, flat_b):
-            axis = next((i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+        for a, b in zip(flat_a, flat_b, strict=True):
+            axis = next((i for i, (x, y)
+                         in enumerate(zip(a.shape, b.shape, strict=True))
                          if x != y), None)
             if axis is not None and a.shape[axis] != max_seq:
                 axis = None       # seq-dependent but not max_seq-sized

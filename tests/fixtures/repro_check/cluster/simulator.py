@@ -1,0 +1,28 @@
+# Seeded-violation fixture for repro-check (NOT part of the package).
+#
+# This reproduces the PR 6 orphaned-pages bug shape, pre-fix: a request
+# requeued onto a different server abandons its preserved KV pages by
+# resetting the claim record without freeing them on the old server —
+# `kv_used[old]` stays charged forever and the pool silently shrinks.
+# The shipped fix calls `_prefix_unpin` + `_kv_free` before the reset
+# (src/repro/cluster/simulator.py, dispatch). R1 must flag this file,
+# and `python -m tools.repro_check tests/fixtures/repro_check` must
+# exit non-zero.
+
+
+class _EventSimRuntime:
+    def dispatch(self, t, req, decision):
+        j = decision.server
+        if req.kv_server >= 0 and req.kv_server != j:
+            # BUG (pre-PR 6 fix): pages preserved on another server are
+            # abandoned without release — no _prefix_unpin, no _kv_free
+            self.n_kv_orphaned += 1
+            req.kv_server, req.kv_blocks = -1, 0
+        self._submit(t, req, decision)
+
+    def on_preempt_drop(self, req, b, t):
+        # BUG shape 2 (the R1b half): pages freed and the claim record
+        # reset, but the shared-prefix pin is never released — the pin
+        # ledger leaks and the prefix entry can never be reclaimed
+        self._kv_free(b.j, req.kv_blocks, t)
+        req.kv_server, req.kv_blocks = -1, 0

@@ -169,7 +169,7 @@ def test_rejected_requests_consume_no_server_energy():
         assert res.per_server_served == [0] * len(specs)
         assert len(policy.feedback_log) == 40
         for req, out in zip(sorted(wl, key=lambda r: r.arrival),
-                            policy.feedback_log):
+                            policy.feedback_log, strict=True):
             assert out.rejected and not out.success
             assert out.energy == 0.0
             assert out.processing_time == pytest.approx(2.0 * req.deadline)
@@ -290,10 +290,10 @@ def test_preempted_lane_free_before_preemptors_infer_start(t_victim,
         if end > start:
             intervals.append((start, end))
     intervals.sort()
-    for (s1, e1), (s2, e2) in zip(intervals, intervals[1:]):
+    for (_s1, e1), (s2, _e2) in zip(intervals, intervals[1:], strict=False):
         assert e1 <= s2 + 1e-9, f"lane oversubscribed: {intervals}"
     # the preemptor's own booking starts at/after the preemption instant
-    for t, victim in rt.preempts:
+    for t, _victim in rt.preempts:
         preemptor_bookings = [bk for bk in rt.bookings
                               if bk.request.sid == b.sid]
         assert preemptor_bookings

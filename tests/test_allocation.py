@@ -160,11 +160,11 @@ def test_committed_shares_never_oversubscribe(seed):
     assert len(rt.outcomes) == len(wl)
     # lane windows disjoint
     lanes = sorted((b.begin, b.finish) for b in bookings)
-    for (s1, e1), (s2, e2) in zip(lanes, lanes[1:]):
+    for (_s1, e1), (s2, _e2) in zip(lanes, lanes[1:], strict=False):
         assert e1 <= s2 + 1e-9, "lane oversubscribed"
     # uplink transfer windows disjoint (each holds its stretched duration)
     links = sorted((b.ready - b.tx_dur, b.ready) for b in bookings)
-    for (s1, e1), (s2, e2) in zip(links, links[1:]):
+    for (_s1, e1), (s2, _e2) in zip(links, links[1:], strict=False):
         assert e1 <= s2 + 1e-9, "uplink oversubscribed"
 
 

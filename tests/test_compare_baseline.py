@@ -1,0 +1,113 @@
+"""Tests for the explicit per-metric benchmark gate
+(benchmarks/compare_baseline.py)."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT))
+
+from benchmarks.compare_baseline import (  # noqa: E402
+    compare, emit_baseline, main)
+
+
+def base(metrics):
+    return {"exp": {"metrics": metrics, "us_per_call": 1.0}}
+
+
+def cur(metrics):
+    return {"exp": {"metrics": metrics, "us_per_call": 2.0}}
+
+
+def test_gated_metric_regression_fails():
+    b = base({"success": {"value": 90.0, "gate": True}})
+    fails = compare(cur({"success": 80.0}), b, tolerance=0.05)
+    assert len(fails) == 1 and "floor" in fails[0]
+
+
+def test_gated_metric_within_tolerance_passes():
+    b = base({"success": {"value": 90.0, "gate": True}})
+    assert compare(cur({"success": 86.0}), b, tolerance=0.05) == []
+
+
+def test_ungated_metric_is_ignored_regardless_of_name():
+    # the old name-pattern heuristic would have gated this ("success");
+    # the explicit gate: false wins now
+    b = base({"success": {"value": 90.0, "gate": False},
+              "kept": {"value": 1.0, "gate": True}})
+    assert compare(cur({"success": 1.0, "kept": 1.0}), b,
+                   tolerance=0.05) == []
+
+
+def test_lower_is_better_direction():
+    b = base({"energy_per_token": {"value": 0.3, "gate": True,
+                                   "direction": "lower"}})
+    assert compare(cur({"energy_per_token": 0.31}), b,
+                   tolerance=0.05) == []
+    fails = compare(cur({"energy_per_token": 0.4}), b, tolerance=0.05)
+    assert len(fails) == 1 and "ceiling" in fails[0]
+
+
+def test_legacy_bare_number_entry_is_rejected():
+    b = base({"success": 90.0})
+    with pytest.raises(SystemExit, match="explicit gate schema"):
+        compare(cur({"success": 90.0}), b, tolerance=0.05)
+
+
+def test_missing_gated_metric_fails():
+    b = base({"success": {"value": 90.0, "gate": True}})
+    fails = compare(cur({}), b, tolerance=0.05)
+    assert any("metric missing" in f for f in fails)
+
+
+def test_emit_baseline_preserves_gates_and_defaults_new_to_false(capsys):
+    b = base({"success": {"value": 90.0, "gate": True},
+              "energy": {"value": 0.3, "gate": True,
+                         "direction": "lower"}})
+    merged = emit_baseline(
+        cur({"success": 95.0, "energy": 0.28, "brand_new": 7.0}), b)
+    m = merged["exp"]["metrics"]
+    assert m["success"] == {"value": 95.0, "gate": True}
+    assert m["energy"] == {"value": 0.28, "gate": True,
+                           "direction": "lower"}
+    assert m["brand_new"] == {"value": 7.0, "gate": False}
+    assert merged["exp"]["us_per_call"] == 2.0
+    assert "brand_new is new" in capsys.readouterr().err
+
+
+def test_main_end_to_end(tmp_path):
+    b = base({"success": {"value": 90.0, "gate": True}})
+    c = cur({"success": 91.0})
+    (tmp_path / "baseline.json").write_text(json.dumps(b))
+    (tmp_path / "run.json").write_text(json.dumps(c))
+    assert main([str(tmp_path / "run.json"),
+                 str(tmp_path / "baseline.json")]) == 0
+    bad = cur({"success": 10.0})
+    (tmp_path / "bad.json").write_text(json.dumps(bad))
+    assert main([str(tmp_path / "bad.json"),
+                 str(tmp_path / "baseline.json")]) == 1
+    # regeneration writes the merged schema
+    out = tmp_path / "new_baseline.json"
+    assert main([str(tmp_path / "run.json"),
+                 str(tmp_path / "baseline.json"),
+                 "--emit-baseline", str(out)]) == 0
+    merged = json.loads(out.read_text())
+    assert merged["exp"]["metrics"]["success"] == {"value": 91.0,
+                                                   "gate": True}
+
+
+def test_committed_baseline_is_explicit_schema():
+    """Every metric in benchmarks/baseline.json must carry an explicit
+    gate flag (the schema the CI gate enforces)."""
+    baseline = json.loads(
+        (REPO_ROOT / "benchmarks" / "baseline.json").read_text())
+    assert baseline, "baseline.json is empty"
+    n_gated = 0
+    for exp, info in baseline.items():
+        for key, entry in info["metrics"].items():
+            assert isinstance(entry, dict) and "value" in entry \
+                and "gate" in entry, f"{exp}.{key} not explicit-gate"
+            n_gated += bool(entry["gate"])
+    assert n_gated >= 10     # the quality gates must not silently vanish

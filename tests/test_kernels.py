@@ -186,7 +186,7 @@ def test_flash_jnp_custom_vjp_matches_autodiff():
 
     g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
     g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
-    for a, b in zip(g1, g2):
+    for a, b in zip(g1, g2, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-3, atol=2e-4)
 

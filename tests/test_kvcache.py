@@ -477,7 +477,7 @@ def test_kv_wait_serializes_on_block_exhaustion():
     # serialized by memory: despite 8 idle lanes, no two inference
     # windows overlap (16 of 20 blocks per request -> one at a time)
     windows = sorted((bk.begin, bk.finish) for bk in rt.bookings)
-    for (_, e1), (s2, _) in zip(windows, windows[1:]):
+    for (_, e1), (s2, _) in zip(windows, windows[1:], strict=False):
         assert e1 <= s2 + 1e-9, windows
 
 
@@ -505,7 +505,7 @@ def test_drop_kv_preemptor_gets_freed_blocks_first():
     # victim (16 blocks) runs; waiter (16) queues; preemptor (7) drops the
     # victim's pages and must claim them ahead of the waiter
     sizes = [(1000, 24), (1000, 24), (400, 24)]
-    for r, (p, o) in zip(wl, sizes):
+    for r, (p, o) in zip(wl, sizes, strict=True):
         r.prompt_tokens, r.output_tokens = p, o
         r.arrival = [0.0, 0.5, 8.0][r.sid]
         r.class_id = classify(r)
@@ -541,7 +541,7 @@ def test_kv_wait_is_strictly_fifo_no_leapfrog():
     # A (16 blocks) runs; B (16) waits; C (8) would fit the 4+... free
     # blocks after A starts, but must not jump ahead of B
     sizes = [(1000, 24), (1000, 24), (400, 24)]
-    for r, (p, o) in zip(wl, sizes):
+    for r, (p, o) in zip(wl, sizes, strict=True):
         r.prompt_tokens, r.output_tokens = p, o
         r.arrival = 0.2 * r.sid
         r.class_id = classify(r)

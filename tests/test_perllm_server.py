@@ -41,7 +41,7 @@ def test_server_serves_all_requests():
 
 def test_server_learner_receives_outcomes():
     srv = _server()
-    for i in range(8):
+    for _ in range(8):
         srv.submit([1, 2, 3, 4], max_new_tokens=2, deadline=5.0)
     srv.run_until_idle()
     # the bandit saw one update per request

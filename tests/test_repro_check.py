@@ -1,0 +1,432 @@
+"""Tests for tools/repro_check: per-rule fixtures (flagging / clean /
+suppressed), the PR 6 regression fixture, and the repo self-check."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT))
+
+from tools.repro_check import default_config, run_paths  # noqa: E402
+
+
+def run_on(tmp_path, files, rules=None, config=None):
+    """Write {relpath: code} under tmp_path and run the checker on it."""
+    for rel, code in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(code))
+    return run_paths([str(tmp_path)], rule_ids=rules, config=config,
+                     root=tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# R1 — ledger conservation
+# ---------------------------------------------------------------------------
+
+R1_FLAGGING = """
+    class RT:
+        def requeue(self, req, t):
+            self.n_kv_orphaned += 1
+            req.kv_server, req.kv_blocks = -1, 0
+"""
+
+R1_CLEAN = """
+    class RT:
+        def requeue(self, req, t):
+            self.n_kv_orphaned += 1
+            self._prefix_unpin(req, t)
+            self._kv_free(req.kv_server, req.kv_blocks, t)
+            req.kv_server, req.kv_blocks = -1, 0
+"""
+
+R1_SUPPRESSED = """
+    class RT:
+        def requeue(self, req, t):
+            self.n_kv_orphaned += 1
+            # repro-check: orphan(kv_used)
+            req.kv_server, req.kv_blocks = -1, 0
+"""
+
+
+def test_r1_flags_reset_without_release(tmp_path):
+    fs = run_on(tmp_path, {"cluster/simulator.py": R1_FLAGGING}, ["R1"])
+    assert len(fs) == 1 and fs[0].rule == "R1"
+    assert "kv_used" in fs[0].message
+
+
+def test_r1_clean_on_release_before_reset(tmp_path):
+    assert run_on(tmp_path, {"cluster/simulator.py": R1_CLEAN},
+                  ["R1"]) == []
+
+
+def test_r1_orphan_annotation_suppresses(tmp_path):
+    assert run_on(tmp_path, {"cluster/simulator.py": R1_SUPPRESSED},
+                  ["R1"]) == []
+
+
+def test_r1b_flags_missing_prefix_unpin(tmp_path):
+    code = """
+        class RT:
+            def drop(self, req, b, t):
+                self._kv_free(b.j, req.kv_blocks, t)
+                req.kv_server, req.kv_blocks = -1, 0
+    """
+    fs = run_on(tmp_path, {"cluster/simulator.py": code}, ["R1"])
+    assert len(fs) == 1 and "prefix_pin" in fs[0].message
+
+
+def test_r1_handoff_return_is_not_a_leak(tmp_path):
+    # _resolve_eviction shape: reset then hand the claimed object off
+    code = """
+        class RT:
+            def resolve(self, sr, j):
+                old_j, old_req = sr.evicted
+                sr.service.kv_server = -1
+                sr.service.kv_blocks = 0
+                if old_j == j:
+                    return old_req
+                self.engines[old_j].release(old_req)
+                return None
+    """
+    assert run_on(tmp_path, {"serving/perllm_server.py": code},
+                  ["R1"]) == []
+
+
+def test_r1c_flags_leaked_refcount_charge(tmp_path):
+    code = """
+        class Cache:
+            def grab(self, shared):
+                self.allocator.ref(shared)
+                return None
+    """
+    fs = run_on(tmp_path, {"serving/kvcache.py": code}, ["R1"])
+    assert len(fs) == 1 and "refcount" in fs[0].message
+
+
+def test_r1c_none_guard_idiom_is_clean(tmp_path):
+    # PagedKVCache.allocate shape: correlated `if shared:` branches and
+    # an `ids is None` failure guard that releases the pinned share
+    code = """
+        class Cache:
+            def allocate(self, n, prompt=None):
+                shared = self.match_prefix(prompt)
+                if shared:
+                    self.allocator.ref(shared)
+                ids = self._allocate_fresh(n - len(shared))
+                if ids is None:
+                    if shared:
+                        self.allocator.free(shared)
+                    return None
+                return self.table(shared + ids)
+    """
+    assert run_on(tmp_path, {"serving/kvcache.py": code}, ["R1"]) == []
+
+
+def test_r1d_link_booking_outside_path_loop(tmp_path):
+    code = """
+        class RT:
+            def book_one(self, lk, end):
+                self.link_free[lk] = end
+
+            def book_path(self, path, end):
+                for name in path:
+                    self.link_free[name] = end
+    """
+    fs = run_on(tmp_path, {"cluster/network.py": code}, ["R1"])
+    assert len(fs) == 1 and "link_free" in fs[0].message
+    assert fs[0].line == 4
+
+
+def test_r1_disable_comment_suppresses(tmp_path):
+    code = """
+        class RT:
+            def book_one(self, lk, end):
+                self.link_free[lk] = end  # repro-check: disable=R1
+    """
+    assert run_on(tmp_path, {"cluster/network.py": code}, ["R1"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R2 — event-handler exhaustiveness
+# ---------------------------------------------------------------------------
+
+def r2_config(exemptions=None):
+    cfg = default_config()
+    cfg["r2"].update({
+        "events_file": "core/runtime.py",
+        "runtimes": ["MyRT"],
+        "exemptions": exemptions or {},
+    })
+    return cfg
+
+
+R2_EVENTS_FLAGGING = """
+    class Event:
+        pass
+
+    class Ping(Event):
+        pass
+
+    class Pong(Event):
+        pass
+
+    class Runtime:
+        def on_ping(self, ev):
+            pass
+
+        _HANDLERS = {Ping: "on_ping"}
+"""
+
+
+def test_r2_flags_unrouted_event_and_pass_stub(tmp_path):
+    files = {
+        "core/runtime.py": R2_EVENTS_FLAGGING,
+        "cluster/simulator.py": """
+            from core.runtime import Runtime
+
+            class MyRT(Runtime):
+                pass
+        """,
+    }
+    fs = run_on(tmp_path, files, ["R2"], config=r2_config())
+    msgs = [f.message for f in fs]
+    assert any("Pong" in m and "no entry" in m for m in msgs)
+    assert any("silent `pass` stub" in m for m in msgs)
+
+
+def test_r2_clean_with_real_handler(tmp_path):
+    files = {
+        "core/runtime.py": """
+            class Event:
+                pass
+
+            class Ping(Event):
+                pass
+
+            class Runtime:
+                def on_ping(self, ev):
+                    pass
+
+                _HANDLERS = {Ping: "on_ping"}
+        """,
+        "cluster/simulator.py": """
+            class MyRT(Runtime):
+                def on_ping(self, ev):
+                    self.count += 1
+        """,
+    }
+    assert run_on(tmp_path, files, ["R2"], config=r2_config()) == []
+
+
+def test_r2_exemption_and_suppression(tmp_path):
+    files = {
+        "core/runtime.py": """
+            class Event:
+                pass
+
+            class Ping(Event):
+                pass
+
+            class Pong(Event):  # repro-check: disable=R2
+                pass
+
+            class Runtime:
+                def on_ping(self, ev):
+                    pass
+
+                _HANDLERS = {Ping: "on_ping"}
+        """,
+        "cluster/simulator.py": """
+            class MyRT(Runtime):
+                pass
+        """,
+    }
+    cfg = r2_config(exemptions={"MyRT": {"on_ping": "never pushed"}})
+    assert run_on(tmp_path, files, ["R2"], config=cfg) == []
+
+
+# ---------------------------------------------------------------------------
+# R3 — field coverage
+# ---------------------------------------------------------------------------
+
+def r3_config(guards=None):
+    cfg = default_config()
+    cfg["r3"].update({
+        "decision_classes": ["Decision"],
+        "decision_guards": guards or {},
+        "reader_groups": {
+            "sim": ["core/api.py", "cluster/simulator.py"],
+            "server": ["core/api.py", "serving/perllm_server.py"],
+        },
+    })
+    return cfg
+
+
+R3_API = """
+    import dataclasses
+
+    @dataclasses.dataclass
+    class Decision:
+        server: int = -1
+        infer_scale: float = 1.0
+"""
+
+
+def test_r3_flags_field_unread_by_one_runtime(tmp_path):
+    files = {
+        "core/api.py": R3_API,
+        "cluster/simulator.py": "def f(d):\n    return d.server, d.infer_scale\n",
+        "serving/perllm_server.py": "def g(d):\n    return d.server\n",
+    }
+    fs = run_on(tmp_path, files, ["R3"], config=r3_config())
+    assert len(fs) == 1
+    assert "infer_scale" in fs[0].message and "server" in fs[0].message
+
+
+def test_r3_clean_when_both_read_or_guarded(tmp_path):
+    files = {
+        "core/api.py": R3_API,
+        "cluster/simulator.py": "def f(d):\n    return d.server, d.infer_scale\n",
+        "serving/perllm_server.py": "def g(d):\n    return d.server\n",
+    }
+    cfg = r3_config(guards={"infer_scale": "sim-only physics knob"})
+    assert run_on(tmp_path, files, ["R3"], config=cfg) == []
+
+
+def test_r3_disable_comment_suppresses(tmp_path):
+    api = """
+        import dataclasses
+
+        @dataclasses.dataclass
+        class Decision:
+            server: int = -1
+            infer_scale: float = 1.0  # repro-check: disable=R3
+    """
+    files = {
+        "core/api.py": api,
+        "cluster/simulator.py": "def f(d):\n    return d.server\n",
+        "serving/perllm_server.py": "def g(d):\n    return d.server\n",
+    }
+    fs = run_on(tmp_path, files, ["R3"], config=r3_config())
+    assert fs == []
+
+
+def test_r3_flags_dead_simresult_counter(tmp_path):
+    cfg = default_config()
+    cfg["r3"]["result_file"] = "cluster/simulator.py"
+    files = {
+        "cluster/simulator.py": """
+            import dataclasses
+
+            @dataclasses.dataclass
+            class SimResult:
+                n_done: int = 0
+                n_ghost: int = 0
+
+            def finish():
+                return SimResult(n_done=3)
+        """,
+    }
+    fs = run_on(tmp_path, files, ["R3"], config=cfg)
+    assert len(fs) == 1 and "n_ghost" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# R4 — determinism discipline
+# ---------------------------------------------------------------------------
+
+R4_FLAGGING = """
+    import time
+    import numpy as np
+
+    def jitter():
+        t0 = time.time()
+        noise = np.random.rand()
+        for v in {1, 2, 3}:
+            t0 += v
+        return t0 + noise
+"""
+
+
+def test_r4_flags_wallclock_global_rng_set_iteration(tmp_path):
+    fs = run_on(tmp_path, {"repro/cluster/jitter.py": R4_FLAGGING}, ["R4"])
+    kinds = " ".join(f.message for f in fs)
+    assert len(fs) == 3
+    assert "time.time" in kinds and "np.random.rand" in kinds \
+        and "unordered set" in kinds
+
+
+def test_r4_clean_with_seeded_rng(tmp_path):
+    code = """
+        import numpy as np
+
+        def jitter(seed):
+            rng = np.random.default_rng(seed)
+            return sum(sorted({1, 2, 3})) + rng.uniform()
+    """
+    assert run_on(tmp_path, {"repro/cluster/jitter.py": code}, ["R4"]) == []
+
+
+def test_r4_engine_exempt_and_suppression(tmp_path):
+    files = {
+        # engine is exempt by config: live serving may read the clock
+        "repro/serving/engine.py": "import time\nt = time.time()\n",
+        "repro/core/x.py":
+            "import time\nt = time.time()  # repro-check: disable=R4\n",
+    }
+    assert run_on(tmp_path, files, ["R4"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R5 — unit-suffix arithmetic
+# ---------------------------------------------------------------------------
+
+def test_r5_flags_conflicting_suffixes(tmp_path):
+    code = "def f(wait_s, prompt_tokens):\n    return wait_s + prompt_tokens\n"
+    fs = run_on(tmp_path, {"a.py": code}, ["R5"])
+    assert len(fs) == 1 and "_s" in fs[0].message \
+        and "_tokens" in fs[0].message
+
+
+def test_r5_clean_on_matching_units(tmp_path):
+    code = ("def f(end_s, start_s, n_blocks, k_blocks):\n"
+            "    return (end_s - start_s) + (n_blocks - k_blocks)\n")
+    assert run_on(tmp_path, {"a.py": code}, ["R5"]) == []
+
+
+def test_r5_disable_comment_suppresses(tmp_path):
+    code = ("def f(wait_s, prompt_tokens):\n"
+            "    return wait_s + prompt_tokens  # repro-check: disable=R5\n")
+    assert run_on(tmp_path, {"a.py": code}, ["R5"]) == []
+
+
+# ---------------------------------------------------------------------------
+# regression fixture (PR 6 bug shape) + repo self-check
+# ---------------------------------------------------------------------------
+
+def test_pr6_regression_fixture_is_caught():
+    """The committed pre-fix shape of the PR 6 orphaned-pages bug must
+    keep tripping R1 — both the silent-reset and the missing-unpin
+    halves — and the CLI must exit non-zero on it."""
+    fixture = REPO_ROOT / "tests" / "fixtures" / "repro_check"
+    fs = run_paths([str(fixture)], rule_ids=["R1"], root=REPO_ROOT)
+    assert len(fs) == 2
+    assert any("kv_used" in f.message and "dispatch" in f.message
+               for f in fs)
+    assert any("prefix_pin" in f.message for f in fs)
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.repro_check",
+         "tests/fixtures/repro_check"],
+        cwd=REPO_ROOT, capture_output=True, text=True)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+
+
+def test_repo_tree_is_clean():
+    """`python -m tools.repro_check src/` exits 0 on the repo (the CI
+    contract: every invariant holds or is explicitly annotated)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.repro_check", "src"],
+        cwd=REPO_ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -63,7 +63,7 @@ def _pr1_slotted_run(sim, services, scheduler):
             lane_free=[list(lf) for lf in lane_free],
         )
         decisions = drive_slot(policy, arrivals, view, ts)
-        for req, d in zip(arrivals, decisions):
+        for req, d in zip(arrivals, decisions, strict=True):
             out = sim._realize(req, d, states, lane_free, factors)
             outcomes.append(out)
             policy.feedback(req, out)
@@ -195,12 +195,9 @@ def test_event_ordering_fifo_uplink(t_first, t_second):
     rt.drain()
 
     order = [sid for sid, _t in policy.assign_log]
-    if a.arrival < b.arrival:
-        expected = [a.sid, b.sid]
-    elif b.arrival < a.arrival:
-        expected = [b.sid, a.sid]
-    else:
-        expected = [b.sid, a.sid]     # exact tie: FIFO by insertion
+    # exact ties resolve FIFO by insertion, i.e. b first
+    expected = ([a.sid, b.sid] if a.arrival < b.arrival
+                else [b.sid, a.sid])
     assert order == expected
     # FIFO uplink: the shared link serves transfers in pop order without
     # overlap — the second transfer completes a full tx after the first

@@ -125,7 +125,7 @@ def test_csucb_forced_exploration_then_convergence():
     bandit = CSUCB(1, 4, CSUCBParams(delta=0.4))
     true_mean = np.array([0.1, 0.5, 0.3, 0.9])
     pulls = []
-    for t in range(800):
+    for _ in range(800):
         a = bandit.select(0, np.ones(4, bool))
         r = true_mean[a] + rng.normal(0, 0.05)
         bandit.update(0, a, r, violation_severity=0.0)

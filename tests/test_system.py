@@ -61,7 +61,7 @@ def test_scheduler_drives_real_engines():
         svc.class_id = classify(svc)
     decisions = drive_slot(sched, services, view, 0)
     assert len(decisions) == len(services)
-    for svc, d in zip(services, decisions):
+    for svc, d in zip(services, decisions, strict=True):
         engines[d.server].submit(list(np.arange(4) + svc.sid % 32),
                                  max_new_tokens=2)
     done = [e.run_until_idle() for e in engines]

@@ -52,7 +52,8 @@ def test_checkpoint_roundtrip(tmp_path):
     like = jax.tree.map(jnp.zeros_like, params)
     restored, extra = load_checkpoint(str(tmp_path / "ck"), like)
     assert extra["step"] == 7
-    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
 
@@ -91,7 +92,7 @@ def test_microbatch_accumulation_matches_full_batch():
     p2, _, m2 = make_train_step(cfg, ctx, ocfg, microbatches=2)(
         params, init_opt_state(params), batch)
     assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
-    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2), strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=5e-3, atol=5e-3)

@@ -1,0 +1,47 @@
+"""repro-check: AST-based invariant checker for this repo.
+
+Usage::
+
+    python -m tools.repro_check src/
+
+Rules (see docs/invariants.md):
+
+  R1  ledger conservation (kv_used / refcounts / prefix pins / links)
+  R2  event-handler exhaustiveness across concrete runtimes
+  R3  Decision/SimResult/ClusterView field coverage
+  R4  determinism discipline (no wall clock / global RNG / set order)
+  R5  unit-suffix arithmetic (no seconds + tokens)
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable, List, Optional
+
+from .config import default_config
+from .core import Finding, load_sources
+from .rules import ALL_RULES
+
+__all__ = ["run_paths", "Finding", "ALL_RULES", "default_config"]
+
+
+def run_paths(paths: Iterable[str], rule_ids: Optional[Iterable[str]] = None,
+              config: Optional[dict] = None,
+              root: Optional[Path] = None) -> List[Finding]:
+    """Run the selected rules over the given files/dirs; return findings
+    that survive inline suppression, sorted by (file, line, rule)."""
+    config = config or default_config()
+    files = load_sources(paths, root=root)
+    by_path = {sf.relpath: sf for sf in files}
+    ids = [r.upper() for r in rule_ids] if rule_ids else sorted(ALL_RULES)
+    findings: List[Finding] = []
+    for rid in ids:
+        rule = ALL_RULES.get(rid)
+        if rule is None:
+            raise SystemExit(f"unknown rule {rid!r} "
+                             f"(known: {', '.join(sorted(ALL_RULES))})")
+        findings.extend(rule.check(files, config))
+    kept = [f for f in findings
+            if not (f.file in by_path
+                    and by_path[f.file].suppressed(f.line, f.rule))]
+    return sorted(set(kept), key=lambda f: (f.file, f.line, f.rule,
+                                            f.message))

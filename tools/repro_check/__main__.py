@@ -1,0 +1,41 @@
+"""CLI entry point: ``python -m tools.repro_check src/``."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import ALL_RULES, run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_check",
+        description="AST-based invariant checker (ledgers, events, "
+                    "field coverage, determinism, units).")
+    ap.add_argument("paths", nargs="*", help="files or directories")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset, e.g. R1,R4 "
+                         "(default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rid in sorted(ALL_RULES):
+            doc = (ALL_RULES[rid].__doc__ or "").strip().splitlines()[0]
+            print(f"{rid}  {doc}")
+        return 0
+    if not args.paths:
+        ap.error("the following arguments are required: paths")
+    ids = [r.strip() for r in args.rules.split(",")] if args.rules else None
+    findings = run_paths(args.paths, rule_ids=ids)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"\n{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("repro-check: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

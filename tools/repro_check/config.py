@@ -1,0 +1,157 @@
+"""Shipped configuration for the repro-check rules.
+
+The config is plain Python data: each rule reads its own section. Paths
+are *suffix-matched* against the analyzed files' normalized relative
+paths, so ``cluster/simulator.py`` matches ``src/repro/cluster/
+simulator.py`` regardless of where the checker is invoked from. Tests
+pass a hand-built config to exercise rules against fixture trees.
+"""
+from __future__ import annotations
+
+import copy
+
+DEFAULT_CONFIG = {
+    # ------------------------------------------------------------------
+    # R1 — ledger conservation (kv_used / refcounts / prefix pins /
+    # link bookings)
+    # ------------------------------------------------------------------
+    "r1": {
+        # files whose functions are path-enumerated for charge/release
+        "ledger_files": [
+            "cluster/simulator.py",
+            "serving/perllm_server.py",
+            "serving/kvcache.py",
+            "serving/engine.py",
+        ],
+        # files that additionally maintain the mirrored prefix-pin ledger:
+        # a path that frees kv pages *and* resets the claim record must
+        # also unpin (the PR 6 requeue bug shape)
+        "pin_files": ["cluster/simulator.py"],
+        # files where every subscript store to a link ledger must sit
+        # inside a `for <lk> in <path>` loop (whole-path booking)
+        "link_files": [
+            "cluster/simulator.py",
+            "cluster/network.py",
+            "serving/perllm_server.py",
+        ],
+        "link_ledger_names": ["link_free", "links", "free_at"],
+        # attribute names that form the claim record; resetting them to
+        # the sentinel without releasing is an orphan
+        "claim_resets": {"kv_server": -1, "kv_blocks": 0},
+        # files whose functions participate in the BlockAllocator
+        # refcount discipline (R1c)
+        "refcount_files": ["serving/kvcache.py", "serving/engine.py"],
+        # method names that charge / release the shared-page refcount
+        "refcount_charge": ["allocate", "_allocate_fresh", "ref",
+                            "fork", "import_pages"],
+        "refcount_release": ["free", "release", "reclaim"],
+        # functions that *intentionally* end with a net claim: they are
+        # the charging half of a charge/release pair whose release lives
+        # in a sibling (e.g. _kv_admit charges, _kv_free releases)
+        "owner_functions": [
+            "_kv_admit", "_kv_migrate", "_prefix_attach", "register",
+            "_admit", "_resume",
+        ],
+        # never analyzed: constructors initialize ledgers from nothing
+        "exempt_functions": ["__init__", "__post_init__"],
+        "max_paths": 256,
+    },
+    # ------------------------------------------------------------------
+    # R2 — event-handler exhaustiveness
+    # ------------------------------------------------------------------
+    "r2": {
+        "events_file": "core/runtime.py",
+        "event_base": "Event",
+        "dispatch_class": "Runtime",
+        "dispatch_table": "_HANDLERS",
+        # concrete runtimes that must handle (or be exempted from) every
+        # event in the dispatch table
+        "runtimes": ["_SlottedSimRuntime", "_EventSimRuntime",
+                     "PerLLMServer"],
+        # handler -> reason; a `pass`-inherited handler is fine only if
+        # listed here (silent drops must be deliberate)
+        "exemptions": {
+            "_SlottedSimRuntime": {
+                "on_tx_done": "slotted mode realizes tx synchronously "
+                              "in Simulator._realize",
+                "on_infer_start": "slotted mode realizes inference "
+                                  "synchronously in Simulator._realize",
+                "on_infer_done": "slotted mode realizes inference "
+                                 "synchronously in Simulator._realize",
+                "on_preempt": "slotted decisions cannot preempt "
+                              "(rejected at decision time)",
+                "on_kv_migrate": "slotted decisions cannot migrate KV "
+                                 "(rejected at decision time)",
+            },
+            "_EventSimRuntime": {
+                "on_infer_start": "event sim schedules InferDone "
+                                  "directly; InferStart is never pushed",
+            },
+            "PerLLMServer": {
+                "on_infer_done": "live server detects completions inside "
+                                 "engine ticks (on_infer_start); "
+                                 "InferDone is never pushed",
+            },
+        },
+    },
+    # ------------------------------------------------------------------
+    # R3 — decision / result / view field coverage
+    # ------------------------------------------------------------------
+    "r3": {
+        "api_file": "core/api.py",
+        "decision_classes": ["Decision", "Allocation"],
+        # module groups that must each read every Decision/Allocation
+        # field (api.py holds the shared helpers both runtimes call)
+        "reader_groups": {
+            "event-simulator": ["core/api.py", "core/runtime.py",
+                                "cluster/simulator.py"],
+            "live-server": ["core/api.py", "core/runtime.py",
+                            "serving/perllm_server.py",
+                            "serving/engine.py"],
+        },
+        # fields exempt from the both-groups read requirement, with the
+        # guarding reason
+        "decision_guards": {
+            "slacks": "observational (feedback/diagnostics only)",
+        },
+        "result_class": "SimResult",
+        "result_file": "cluster/simulator.py",
+        "view_class": "ClusterView",
+        # builders per group: files scanned for ClusterView(...) calls;
+        # helpers are functions whose returned dict keys also count
+        # (they are splatted into the call via **kwargs)
+        "view_builders": {
+            "event-simulator": ["cluster/simulator.py"],
+            "live-server": ["serving/perllm_server.py"],
+        },
+        "view_helpers": {"cluster/network.py": ["link_view_kwargs"]},
+        "view_guards": {
+            "kv_prefix_tokens": "simulator-only mirrored prefix ledger; "
+                                "the live server's PrefixIndex serves "
+                                "hits engine-side",
+        },
+    },
+    # ------------------------------------------------------------------
+    # R4 — determinism discipline
+    # ------------------------------------------------------------------
+    "r4": {
+        "scope": ["repro/cluster/", "repro/core/", "repro/serving/"],
+        "exempt_files": ["serving/engine.py"],
+        "wallclock": ["time", "monotonic", "perf_counter",
+                      "perf_counter_ns", "time_ns", "monotonic_ns"],
+        "np_random_allowed": ["default_rng", "Generator", "SeedSequence",
+                              "PCG64", "Philox", "BitGenerator"],
+    },
+    # ------------------------------------------------------------------
+    # R5 — unit-suffix arithmetic
+    # ------------------------------------------------------------------
+    "r5": {
+        "suffixes": ["_s", "_ms", "_us", "_tokens", "_blocks", "_bytes",
+                     "_j", "_bw"],
+        "bare_units": ["tokens", "blocks", "bytes"],
+    },
+}
+
+
+def default_config() -> dict:
+    return copy.deepcopy(DEFAULT_CONFIG)

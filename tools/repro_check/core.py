@@ -1,0 +1,126 @@
+"""Shared infrastructure for repro-check: findings, source loading,
+inline suppressions.
+
+Suppression syntax (see docs/invariants.md):
+
+``# repro-check: disable=R1,R5``
+    On any line: suppress those rules' findings anchored to that line.
+    ``disable=all`` suppresses every rule on the line.
+
+``# repro-check: orphan(<counter>)``
+    R1-specific: declares that the enclosing exit path intentionally
+    leaves ``<counter>`` (``kv_used``, ``refcount``, ``prefix_pin``)
+    claimed or dropped — e.g. an ownership handoff the analyzer cannot
+    see. Applies to the function whose body span contains the comment.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Set
+
+DISABLE_RE = re.compile(r"#\s*repro-check:\s*disable=([A-Za-z0-9_,\s]+)")
+ORPHAN_RE = re.compile(r"#\s*repro-check:\s*orphan\(\s*([A-Za-z0-9_,\s]+?)\s*\)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    file: str
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line} {self.rule} {self.message}"
+
+
+@dataclass
+class SourceFile:
+    """A parsed source file plus its repro-check comment pragmas."""
+
+    path: Path
+    relpath: str            # normalized posix path used in findings/config
+    text: str
+    tree: ast.Module
+    disables: Dict[int, Set[str]] = field(default_factory=dict)
+    orphans: Dict[int, Set[str]] = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: Path, root: Path) -> "SourceFile":
+        text = path.read_text()
+        tree = ast.parse(text, filename=str(path))
+        try:
+            relpath = path.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            relpath = path.as_posix()
+        sf = cls(path=path, relpath=relpath, text=text, tree=tree)
+        sf._scan_comments()
+        return sf
+
+    def _scan_comments(self) -> None:
+        reader = io.StringIO(self.text).readline
+        try:
+            tokens = list(tokenize.generate_tokens(reader))
+        except tokenize.TokenError:
+            return
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            line = tok.start[0]
+            m = DISABLE_RE.search(tok.string)
+            if m:
+                rules = {r.strip().upper() for r in m.group(1).split(",")
+                         if r.strip()}
+                self.disables.setdefault(line, set()).update(rules)
+            m = ORPHAN_RE.search(tok.string)
+            if m:
+                counters = {c.strip() for c in m.group(1).split(",")
+                            if c.strip()}
+                self.orphans.setdefault(line, set()).update(counters)
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        rules = self.disables.get(line, ())
+        return rule.upper() in rules or "ALL" in rules
+
+    def orphan_counters(self, lo: int, hi: int) -> Set[str]:
+        """Union of orphan(...) annotations on lines lo..hi inclusive."""
+        out: Set[str] = set()
+        for line, counters in self.orphans.items():
+            if lo <= line <= hi:
+                out |= counters
+        return out
+
+    def matches(self, suffixes: Iterable[str]) -> bool:
+        return any(self.relpath.endswith(s) for s in suffixes)
+
+
+def collect_py_files(paths: Iterable[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    # dedupe, stable order
+    seen: Set[Path] = set()
+    uniq = []
+    for f in out:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            uniq.append(f)
+    return uniq
+
+
+def load_sources(paths: Iterable[str], root: Path = None) -> List[SourceFile]:
+    root = root or Path.cwd()
+    return [SourceFile.load(f, root) for f in collect_py_files(paths)]
+
+
+def end_line(node: ast.AST) -> int:
+    return getattr(node, "end_lineno", getattr(node, "lineno", 0))

@@ -1,0 +1,8 @@
+"""Rule registry. Each module exposes RULE_ID and check(files, config)."""
+from . import (r1_ledger, r2_events, r3_coverage, r4_determinism,
+               r5_units)
+
+ALL_RULES = {
+    m.RULE_ID: m
+    for m in (r1_ledger, r2_events, r3_coverage, r4_determinism, r5_units)
+}

@@ -1,0 +1,391 @@
+"""R1 — ledger conservation.
+
+Enumerates bounded per-function control-flow paths and checks that every
+path which *claims* a resource (kv_used page charge, BlockAllocator
+refcount, prefix pin) or *resets* a claim record (``req.kv_server = -1``
+/ ``req.kv_blocks = 0``) also carries the matching release — or hands
+the claim off by returning a non-constant value, or is explicitly
+annotated ``# repro-check: orphan(<counter>)``.
+
+The enumerator is condition-correlated for the two guard idioms the
+repo uses: ``if x is None:`` after ``x = ...allocate(...)`` cancels the
+charge on the None branch, and two ``if shared:`` tests on the same
+un-reassigned name take consistent branches (so a charge guarded by
+``if shared:`` is matched against a release under the same guard).
+
+Sub-checks:
+
+R1a  a path that resets the claim record must release the pages (or
+     hand the still-claimed object off via a value return).
+R1b  in pin-ledger files, a path that frees kv pages *and* resets the
+     claim record must also unpin the shared prefix (the PR 6 requeue
+     bug shape: ``_kv_free`` without ``_prefix_unpin`` leaked pins).
+R1c  in refcount files, a path with a net-positive refcount charge that
+     ends in a constant return (None/False — i.e. "I failed") leaked
+     the charge.
+R1d  every subscript store to a link ledger (``link_free``/``links``/
+     ``free_at``) must sit inside a ``for ... in <path>`` loop so the
+     booking covers the whole path, not one link.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from ..core import Finding, SourceFile, end_line
+
+RULE_ID = "R1"
+
+
+@dataclass(frozen=True)
+class Ev:
+    kind: str               # charge | release | reset | pin_charge |
+                            # pin_release | cancel
+    counter: str            # kv_used | refcount | prefix_pin
+    line: int
+    target: Optional[str] = None   # assign target (None-guard cancelling)
+
+
+# a path: (events, terminal, assumptions); terminals are
+# fall | return_expr | return_const | raise
+Path = Tuple[Tuple[Ev, ...], str, dict]
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _const_int(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)):
+        return node.value
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = _const_int(node.operand)
+        return None if inner is None else -inner
+    return None
+
+
+def _is_kv_used_sub(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Subscript):
+        return False
+    v = node.value
+    name = v.attr if isinstance(v, ast.Attribute) else \
+        (v.id if isinstance(v, ast.Name) else None)
+    return name == "kv_used"
+
+
+def _test_info(test: ast.AST) -> Optional[Tuple[str, str, bool]]:
+    """(kind, name, body_value) for correlatable tests.
+
+    kind 'truthy': body taken when name is truthy (body_value=True) or
+    falsy (``not name``). kind 'none': body taken when name is None
+    (``x is None``) or not None (``x is not None``).
+    """
+    if isinstance(test, ast.Name):
+        return "truthy", test.id, True
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not) and \
+            isinstance(test.operand, ast.Name):
+        return "truthy", test.operand.id, False
+    if isinstance(test, ast.Compare) and len(test.ops) == 1 and \
+            isinstance(test.comparators[0], ast.Constant) and \
+            test.comparators[0].value is None and \
+            isinstance(test.left, ast.Name):
+        if isinstance(test.ops[0], ast.Is):
+            return "none", test.left.id, True
+        if isinstance(test.ops[0], ast.IsNot):
+            return "none", test.left.id, False
+    return None
+
+
+class _StmtEvents:
+    """Extract ledger events from one simple statement."""
+
+    def __init__(self, cfg: dict):
+        self.cfg = cfg
+
+    def _calls(self, node: ast.AST, target: Optional[str],
+               line: int) -> List[Ev]:
+        evs: List[Ev] = []
+        for call in (n for n in ast.walk(node) if isinstance(n, ast.Call)):
+            name = _call_name(call)
+            if name == "_kv_free":
+                evs.append(Ev("release", "kv_used", line))
+            elif name == "_prefix_unpin":
+                evs.append(Ev("pin_release", "prefix_pin", line))
+            elif name == "_prefix_attach":
+                evs.append(Ev("pin_charge", "prefix_pin", line))
+            elif name in self.cfg["refcount_charge"]:
+                evs.append(Ev("charge", "refcount", line, target=target))
+            elif name in self.cfg["refcount_release"]:
+                evs.append(Ev("release", "refcount", line))
+        return evs
+
+    def _resets(self, targets, values, line: int) -> List[Ev]:
+        evs: List[Ev] = []
+        resets = self.cfg["claim_resets"]
+        for tgt, val in zip(targets, values, strict=True):
+            if isinstance(tgt, ast.Attribute) and tgt.attr in resets \
+                    and val is not None \
+                    and _const_int(val) == resets[tgt.attr]:
+                evs.append(Ev("reset", "kv_used", line))
+        return evs
+
+    def events(self, st: ast.stmt) -> List[Ev]:
+        line = st.lineno
+        evs: List[Ev] = []
+        if isinstance(st, ast.AugAssign) and _is_kv_used_sub(st.target):
+            if isinstance(st.op, ast.Add):
+                evs.append(Ev("charge", "kv_used", line))
+            elif isinstance(st.op, ast.Sub):
+                evs.append(Ev("release", "kv_used", line))
+            evs.extend(self._calls(st.value, None, line))
+            return evs
+        if isinstance(st, ast.Assign):
+            # single Name target with a charging call on the RHS keeps
+            # the target so a later `if target is None` can cancel it
+            target = st.targets[0].id \
+                if len(st.targets) == 1 and isinstance(st.targets[0], ast.Name) \
+                else None
+            evs.extend(self._calls(st.value, target, line))
+            for tgt in st.targets:
+                if isinstance(tgt, ast.Tuple) and \
+                        isinstance(st.value, ast.Tuple) and \
+                        len(tgt.elts) == len(st.value.elts):
+                    evs.extend(self._resets(tgt.elts, st.value.elts, line))
+                else:
+                    evs.extend(self._resets([tgt], [st.value], line))
+            return evs
+        evs.extend(self._calls(st, None, line))
+        return evs
+
+
+class _PathEnumerator:
+    def __init__(self, extractor: _StmtEvents, max_paths: int):
+        self.ex = extractor
+        self.max_paths = max_paths
+
+    def paths(self, stmts: List[ast.stmt], assume: dict) -> List[Path]:
+        acc: List[Path] = [((), "fall", dict(assume))]
+        for st in stmts:
+            nxt: List[Path] = []
+            for evs, term, asm in acc:
+                if term != "fall":
+                    nxt.append((evs, term, asm))
+                    continue
+                for evs2, term2, asm2 in self._stmt(st, asm):
+                    nxt.append((evs + evs2, term2, asm2))
+            acc = nxt[: self.max_paths]
+        return acc
+
+    def _assigned_names(self, st: ast.stmt) -> List[str]:
+        if isinstance(st, ast.Assign):
+            return [t.id for t in st.targets if isinstance(t, ast.Name)]
+        if isinstance(st, (ast.AugAssign, ast.AnnAssign)) and \
+                isinstance(st.target, ast.Name):
+            return [st.target.id]
+        return []
+
+    def _stmt(self, st: ast.stmt, asm: dict) -> List[Path]:
+        if isinstance(st, ast.Return):
+            term = "return_const" if st.value is None or \
+                isinstance(st.value, ast.Constant) else "return_expr"
+            return [(tuple(self.ex.events(st)), term, asm)]
+        if isinstance(st, ast.Raise):
+            return [((), "raise", asm)]
+        if isinstance(st, (ast.Break, ast.Continue)):
+            return [((), "fall", asm)]
+        if isinstance(st, ast.If):
+            return self._if(st, asm)
+        if isinstance(st, (ast.For, ast.AsyncFor, ast.While)):
+            once = self.paths(list(st.body) + list(st.orelse or []), asm)
+            skip = self.paths(list(st.orelse), asm) if st.orelse \
+                else [((), "fall", asm)]
+            return once + skip
+        if isinstance(st, (ast.With, ast.AsyncWith)):
+            return self.paths(st.body, asm)
+        if isinstance(st, ast.Try):
+            out = self.paths(
+                list(st.body) + list(st.orelse) + list(st.finalbody), asm)
+            for h in st.handlers:
+                out.extend(self.paths(list(h.body) + list(st.finalbody),
+                                      asm))
+            return out
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            return [((), "fall", asm)]
+        evs = tuple(self.ex.events(st))
+        names = self._assigned_names(st)
+        if names:
+            asm = {k: v for k, v in asm.items() if k[1] not in names}
+        return [(evs, "fall", asm)]
+
+    def _if(self, st: ast.If, asm: dict) -> List[Path]:
+        info = _test_info(st.test)
+        out: List[Path] = []
+        branches = [(True, st.body), (False, list(st.orelse))]
+        for is_body, stmts in branches:
+            pre: Tuple[Ev, ...] = ()
+            asm2 = dict(asm)
+            if info is not None:
+                kind, name, body_val = info
+                val = body_val if is_body else (not body_val)
+                known = asm.get((kind, name))
+                if known is not None and known != val:
+                    continue                    # inconsistent branch
+                asm2[(kind, name)] = val
+                # the None branch of an `x is None` guard cancels x's
+                # pending charge: allocation failed, nothing was claimed
+                if kind == "none" and val:
+                    pre = (Ev("cancel", "", st.lineno, target=name),)
+                if kind == "truthy" and not val:
+                    pre = (Ev("cancel", "", st.lineno, target=name),)
+            if stmts:
+                for evs, term, asm3 in self.paths(stmts, asm2):
+                    out.append((pre + evs, term, asm3))
+            else:
+                out.append((pre, "fall", asm2))
+        return out
+
+
+def _apply_cancels(evs: Tuple[Ev, ...]) -> List[Ev]:
+    """Drop charges whose assign target was observed to be None/falsy."""
+    out: List[Optional[Ev]] = list(evs)
+    for i, ev in enumerate(out):
+        if ev is not None and ev.kind == "cancel" and ev.target:
+            for j in range(i - 1, -1, -1):
+                prev = out[j]
+                if prev is not None and prev.kind == "charge" and \
+                        prev.target == ev.target:
+                    out[j] = None
+                    break
+    return [e for e in out if e is not None and e.kind != "cancel"]
+
+
+def _check_function(fn, sf: SourceFile, cfg: dict, findings: List[Finding],
+                    in_pin_file: bool, in_refcount_file: bool) -> None:
+    if fn.name in cfg["exempt_functions"]:
+        return
+    is_owner = fn.name in cfg["owner_functions"]
+    annotated = sf.orphan_counters(fn.lineno, end_line(fn))
+    enum = _PathEnumerator(_StmtEvents(cfg), cfg["max_paths"])
+    seen = set()
+    for evs_raw, term, _asm in enum.paths(fn.body, {}):
+        evs = _apply_cancels(evs_raw)
+        kv_release = any(e.kind == "release" and e.counter == "kv_used"
+                         for e in evs)
+        any_release = any(e.kind == "release" for e in evs)
+        resets = [e for e in evs if e.kind == "reset"]
+        pin_release = any(e.kind == "pin_release" for e in evs)
+        # R1a — claim record reset without a release on the same path
+        if resets and not any_release and term != "return_expr" \
+                and "kv_used" not in annotated:
+            key = ("a", resets[0].line)
+            if key not in seen:
+                seen.add(key)
+                findings.append(Finding(
+                    sf.relpath, resets[0].line, RULE_ID,
+                    f"{fn.name}: kv claim record reset without releasing "
+                    f"the pages on this path (kv_used); release, hand the "
+                    f"claim off, or annotate `# repro-check: "
+                    f"orphan(kv_used)`"))
+        # R1b — freed + reset but prefix pin not released (PR 6 shape)
+        if in_pin_file and kv_release and resets and not pin_release \
+                and "prefix_pin" not in annotated:
+            key = ("b", resets[0].line)
+            if key not in seen:
+                seen.add(key)
+                findings.append(Finding(
+                    sf.relpath, resets[0].line, RULE_ID,
+                    f"{fn.name}: kv pages freed and claim reset but the "
+                    f"shared-prefix pin is not released on this path "
+                    f"(prefix_pin); call _prefix_unpin or annotate "
+                    f"`# repro-check: orphan(prefix_pin)`"))
+        # R1c — net refcount charge leaked through a failure return
+        if in_refcount_file and not is_owner and term == "return_const" \
+                and "refcount" not in annotated:
+            charges = [e for e in evs
+                       if e.kind == "charge" and e.counter == "refcount"]
+            n_rel = sum(e.kind == "release" and e.counter == "refcount"
+                        for e in evs)
+            if len(charges) > n_rel:
+                key = ("c", charges[-1].line)
+                if key not in seen:
+                    seen.add(key)
+                    findings.append(Finding(
+                        sf.relpath, charges[-1].line, RULE_ID,
+                        f"{fn.name}: refcount charged here but a failure "
+                        f"path returns a constant without releasing it "
+                        f"(refcount); free the blocks or annotate "
+                        f"`# repro-check: orphan(refcount)`"))
+
+
+def _check_link_bookings(sf: SourceFile, cfg: dict,
+                         findings: List[Finding]) -> None:
+    ledgers = set(cfg["link_ledger_names"])
+
+    class V(ast.NodeVisitor):
+        def __init__(self):
+            self.loop_iters: List[str] = []
+
+        def _iter_text(self, node) -> str:
+            try:
+                return ast.unparse(node.iter)
+            except Exception:
+                return ""
+
+        def visit_For(self, node):
+            self.loop_iters.append(self._iter_text(node))
+            self.generic_visit(node)
+            self.loop_iters.pop()
+
+        def _store_name(self, tgt) -> Optional[str]:
+            if not isinstance(tgt, ast.Subscript):
+                return None
+            v = tgt.value
+            name = v.attr if isinstance(v, ast.Attribute) else \
+                (v.id if isinstance(v, ast.Name) else None)
+            return name if name in ledgers else None
+
+        def _check(self, tgt, line):
+            name = self._store_name(tgt)
+            if name is None:
+                return
+            if not any("path" in it for it in self.loop_iters):
+                findings.append(Finding(
+                    sf.relpath, line, RULE_ID,
+                    f"link ledger `{name}[...]` booked outside a "
+                    f"`for ... in <path>` loop — a booking must cover "
+                    f"every link on the path"))
+
+        def visit_Assign(self, node):
+            for tgt in node.targets:
+                self._check(tgt, node.lineno)
+            self.generic_visit(node)
+
+        def visit_AugAssign(self, node):
+            self._check(node.target, node.lineno)
+            self.generic_visit(node)
+
+    V().visit(sf.tree)
+
+
+def check(files: List[SourceFile], config: dict) -> List[Finding]:
+    cfg = config["r1"]
+    findings: List[Finding] = []
+    for sf in files:
+        if sf.matches(cfg["ledger_files"]):
+            in_pin = sf.matches(cfg["pin_files"])
+            in_ref = sf.matches(cfg["refcount_files"])
+            funcs = [n for n in ast.walk(sf.tree)
+                     if isinstance(n, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef))]
+            for fn in funcs:
+                _check_function(fn, sf, cfg, findings, in_pin, in_ref)
+        if sf.matches(cfg["link_files"]):
+            _check_link_bookings(sf, cfg, findings)
+    return findings

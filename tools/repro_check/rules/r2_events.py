@@ -1,0 +1,183 @@
+"""R2 — event-handler exhaustiveness.
+
+Three checks, whole-program:
+
+1. Every ``Event`` subclass defined in the events file must be a key of
+   the ``Runtime._HANDLERS`` dispatch table (subclassed events may route
+   to a handled base, so only root-of-dispatch events are required).
+2. Every concrete runtime must *really* handle every handler in the
+   table: the MRO-resolved method must have a non-``pass`` body (an
+   explicit ``raise`` counts — loud is fine, silent drop is not), or be
+   listed in the config exemptions with a reason.
+3. No dead handlers: an ``on_*`` method on a runtime that no dispatch
+   table entry routes to is unreachable via ``handle``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..core import Finding, SourceFile
+
+RULE_ID = "R2"
+
+
+def _base_name(b: ast.expr) -> Optional[str]:
+    if isinstance(b, ast.Name):
+        return b.id
+    if isinstance(b, ast.Attribute):
+        return b.attr
+    return None
+
+
+def _method_kind(fn: ast.FunctionDef) -> str:
+    """'pass' for a stub body, 'raise' if it only raises, else 'real'."""
+    body = list(fn.body)
+    if body and isinstance(body[0], ast.Expr) and \
+            isinstance(body[0].value, ast.Constant) and \
+            isinstance(body[0].value.value, str):
+        body = body[1:]                          # drop docstring
+    if all(isinstance(st, ast.Pass) for st in body):
+        return "pass"
+    if len(body) == 1 and isinstance(body[0], ast.Raise):
+        return "raise"
+    return "real"
+
+
+class _ClassIndex:
+    """name -> (bases, {method: kind}, file, line) over all files."""
+
+    def __init__(self, files: List[SourceFile]):
+        self.classes: Dict[str, Tuple[List[str], Dict[str, str],
+                                      str, int]] = {}
+        for sf in files:
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.ClassDef):
+                    continue
+                bases = [b for b in map(_base_name, node.bases) if b]
+                methods = {st.name: _method_kind(st) for st in node.body
+                           if isinstance(st, (ast.FunctionDef,
+                                              ast.AsyncFunctionDef))}
+                self.classes[node.name] = (bases, methods, sf.relpath,
+                                           node.lineno)
+
+    def mro(self, name: str) -> List[str]:
+        """Depth-first left-to-right linearization (good enough here)."""
+        out, stack = [], [name]
+        while stack:
+            cur = stack.pop(0)
+            if cur in out or cur not in self.classes:
+                continue
+            out.append(cur)
+            stack = list(self.classes[cur][0]) + stack
+        return out
+
+    def resolve(self, cls: str, method: str) -> Optional[Tuple[str, str]]:
+        """(defining_class, kind) for the MRO-resolved method."""
+        for c in self.mro(cls):
+            methods = self.classes[c][1]
+            if method in methods:
+                return c, methods[method]
+        return None
+
+    def event_subclasses(self, base: str) -> List[Tuple[str, str, int]]:
+        roots = {base}
+        changed = True
+        found: List[Tuple[str, str, int]] = []
+        while changed:
+            changed = False
+            for name, (bases, _m, f, line) in self.classes.items():
+                if name in roots:
+                    continue
+                if any(b in roots for b in bases):
+                    roots.add(name)
+                    found.append((name, f, line))
+                    changed = True
+        return found
+
+
+def _dispatch_table(sf: SourceFile, cls_name: str,
+                    attr: str) -> Tuple[Dict[str, str], int]:
+    """{EventClassName: handler_name} from the class-level dict literal."""
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls_name:
+            for st in node.body:
+                if isinstance(st, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == attr
+                        for t in st.targets) and \
+                        isinstance(st.value, ast.Dict):
+                    table = {}
+                    for k, v in zip(st.value.keys, st.value.values,
+                                    strict=True):
+                        kn = _base_name(k) if k is not None else None
+                        if kn and isinstance(v, ast.Constant):
+                            table[kn] = v.value
+                    return table, st.lineno
+    return {}, 0
+
+
+def check(files: List[SourceFile], config: dict) -> List[Finding]:
+    cfg = config["r2"]
+    findings: List[Finding] = []
+    ev_file = next((sf for sf in files
+                    if sf.relpath.endswith(cfg["events_file"])), None)
+    if ev_file is None:
+        return findings     # fixture trees without the events file
+    index = _ClassIndex(files)
+    table, table_line = _dispatch_table(ev_file, cfg["dispatch_class"],
+                                        cfg["dispatch_table"])
+    if not table:
+        findings.append(Finding(
+            ev_file.relpath, 1, RULE_ID,
+            f"{cfg['dispatch_class']}.{cfg['dispatch_table']} dispatch "
+            f"table not found or not a dict literal"))
+        return findings
+
+    # (1) every Event subclass has a dispatch entry (itself or a base)
+    handled: Set[str] = set(table)
+    for name, f, line in index.event_subclasses(cfg["event_base"]):
+        if not f.endswith(cfg["events_file"]):
+            continue
+        if name not in handled and \
+                not any(b in handled for b in index.mro(name)[1:]):
+            findings.append(Finding(
+                f, line, RULE_ID,
+                f"event class {name} has no entry in "
+                f"{cfg['dispatch_class']}.{cfg['dispatch_table']} — "
+                f"handle() would raise TypeError on it"))
+
+    # (2) every concrete runtime really handles every table entry
+    for rt in cfg["runtimes"]:
+        if rt not in index.classes:
+            continue
+        _bases, _methods, rt_file, rt_line = index.classes[rt]
+        exempt = cfg["exemptions"].get(rt, {})
+        for ev_name, handler in sorted(table.items()):
+            resolved = index.resolve(rt, handler)
+            if resolved is None:
+                findings.append(Finding(
+                    rt_file, rt_line, RULE_ID,
+                    f"{rt}: no definition of {handler} anywhere in its "
+                    f"MRO — {ev_name} events would crash"))
+                continue
+            _definer, kind = resolved
+            if kind == "pass" and handler not in exempt:
+                findings.append(Finding(
+                    rt_file, rt_line, RULE_ID,
+                    f"{rt}: {ev_name} events fall through to a silent "
+                    f"`pass` stub for {handler}; implement it, raise, or "
+                    f"add a config exemption with a reason"))
+
+    # (3) dead on_* handlers nothing dispatches to
+    routed = set(table.values())
+    for rt in cfg["runtimes"]:
+        if rt not in index.classes:
+            continue
+        _bases, methods, rt_file, _line = index.classes[rt]
+        for m in sorted(methods):
+            if m.startswith("on_") and m not in routed:
+                findings.append(Finding(
+                    rt_file, index.classes[rt][3], RULE_ID,
+                    f"{rt}.{m} looks like an event handler but no "
+                    f"{cfg['dispatch_table']} entry routes to it"))
+    return findings

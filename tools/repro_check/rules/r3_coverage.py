@@ -1,0 +1,189 @@
+"""R3 — decision / result / view field coverage.
+
+Name-level whole-program checks:
+
+1. Every ``Decision``/``Allocation`` field must be *read* (attribute
+   access) in every configured reader group (event simulator and live
+   server), or carry a config guard explaining why one side may ignore
+   it. A field silently ignored by one runtime means the two physics
+   implementations diverge on the scheduling contract.
+2. Every ``SimResult`` counter must be written by at least one site
+   (keyword in a SimResult(...) construction, or attribute store).
+3. Every ``ClusterView`` field must be populated by both view builders
+   (keyword in a ClusterView(...) call, or a key of the dict returned
+   by a configured ``**kwargs`` helper like ``link_view_kwargs``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from ..core import Finding, SourceFile
+
+RULE_ID = "R3"
+
+
+def _dataclass_fields(sf: SourceFile, cls_name: str):
+    """[(field, line)] of annotated assignments in the class body."""
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls_name:
+            out = []
+            for st in node.body:
+                if isinstance(st, ast.AnnAssign) and \
+                        isinstance(st.target, ast.Name):
+                    out.append((st.target.id, st.lineno))
+            return node.lineno, out
+    return None, []
+
+
+def _attr_reads(files: List[SourceFile], suffixes: List[str]) -> Set[str]:
+    """All attribute names *loaded* anywhere in the given files."""
+    out: Set[str] = set()
+    for sf in files:
+        if not sf.matches(suffixes):
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Attribute) and \
+                    isinstance(node.ctx, ast.Load):
+                out.add(node.attr)
+    return out
+
+
+def _find(files: List[SourceFile], suffix: str) -> Optional[SourceFile]:
+    return next((sf for sf in files if sf.relpath.endswith(suffix)), None)
+
+
+def _call_keywords(files: List[SourceFile], suffixes: List[str],
+                   callee: str) -> Set[str]:
+    out: Set[str] = set()
+    for sf in files:
+        if not sf.matches(suffixes):
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                f = node.func
+                name = f.attr if isinstance(f, ast.Attribute) else \
+                    (f.id if isinstance(f, ast.Name) else None)
+                if name == callee:
+                    out.update(kw.arg for kw in node.keywords if kw.arg)
+    return out
+
+
+def _builder_keywords(files: List[SourceFile], suffixes: List[str],
+                      callee: str) -> Set[str]:
+    """Fields populated by builder functions: direct keywords of the
+    ``callee(...)`` call plus keys of any dict literal / ``dict(...)``
+    inside the same function (the ``**local_kwargs`` splat idiom)."""
+    out = _call_keywords(files, suffixes, callee)
+    for sf in files:
+        if not sf.matches(suffixes):
+            continue
+        for fn in ast.walk(sf.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            calls_builder = any(
+                isinstance(n, ast.Call) and (
+                    (isinstance(n.func, ast.Name) and n.func.id == callee)
+                    or (isinstance(n.func, ast.Attribute)
+                        and n.func.attr == callee))
+                for n in ast.walk(fn))
+            if not calls_builder:
+                continue
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Dict):
+                    out.update(k.value for k in sub.keys
+                               if isinstance(k, ast.Constant)
+                               and isinstance(k.value, str))
+                if isinstance(sub, ast.Call) and \
+                        isinstance(sub.func, ast.Name) and \
+                        sub.func.id == "dict":
+                    out.update(kw.arg for kw in sub.keywords if kw.arg)
+    return out
+
+
+def _helper_dict_keys(sf: SourceFile, func_name: str) -> Set[str]:
+    """String keys of dict literals / dict(...) calls inside a helper
+    whose return value is splatted into a view constructor."""
+    out: Set[str] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node.name == func_name:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Dict):
+                    for k in sub.keys:
+                        if isinstance(k, ast.Constant) and \
+                                isinstance(k.value, str):
+                            out.add(k.value)
+                if isinstance(sub, ast.Call):
+                    f = sub.func
+                    if isinstance(f, ast.Name) and f.id == "dict":
+                        out.update(kw.arg for kw in sub.keywords if kw.arg)
+    return out
+
+
+def check(files: List[SourceFile], config: dict) -> List[Finding]:
+    cfg = config["r3"]
+    findings: List[Finding] = []
+    api = _find(files, cfg["api_file"])
+
+    # (1) Decision/Allocation fields read by every reader group
+    guards = cfg["decision_guards"]
+    group_reads: Dict[str, Set[str]] = {
+        g: _attr_reads(files, suffixes)
+        for g, suffixes in cfg["reader_groups"].items()}
+    for cls in cfg["decision_classes"] if api is not None else []:
+        _cline, fields = _dataclass_fields(api, cls)
+        for fname, line in fields:
+            if fname in guards:
+                continue
+            missing = [g for g, reads in group_reads.items()
+                       if fname not in reads]
+            if missing:
+                findings.append(Finding(
+                    api.relpath, line, RULE_ID,
+                    f"{cls}.{fname} is never read by "
+                    f"{'/'.join(sorted(missing))} — honor it there or add "
+                    f"a decision_guards entry explaining the asymmetry"))
+
+    # (2) SimResult counters all written somewhere
+    res_file = _find(files, cfg["result_file"])
+    if res_file is not None:
+        _cline, fields = _dataclass_fields(res_file, cfg["result_class"])
+        written = _call_keywords([res_file], [cfg["result_file"]],
+                                 cfg["result_class"])
+        stored = {node.attr for node in ast.walk(res_file.tree)
+                  if isinstance(node, ast.Attribute)
+                  and isinstance(node.ctx, ast.Store)}
+        for fname, line in fields:
+            if fname not in written and fname not in stored:
+                findings.append(Finding(
+                    res_file.relpath, line, RULE_ID,
+                    f"{cfg['result_class']}.{fname} is declared but no "
+                    f"site ever writes it — dead counter or missing "
+                    f"bookkeeping"))
+
+    # (3) ClusterView fields populated by both builders
+    if api is None:
+        return findings
+    _cline, view_fields = _dataclass_fields(api, cfg["view_class"])
+    helper_keys: Set[str] = set()
+    for hfile, funcs in cfg["view_helpers"].items():
+        sf = _find(files, hfile)
+        if sf is not None:
+            for fn in funcs:
+                helper_keys |= _helper_dict_keys(sf, fn)
+    vguards = cfg["view_guards"]
+    for group, suffixes in cfg["view_builders"].items():
+        populated = _builder_keywords(files, suffixes, cfg["view_class"]) \
+            | helper_keys
+        if not populated:
+            continue        # group's builder file absent (fixture tree)
+        for fname, line in view_fields:
+            if fname in vguards or fname in populated:
+                continue
+            findings.append(Finding(
+                api.relpath, line, RULE_ID,
+                f"{cfg['view_class']}.{fname} is not populated by the "
+                f"{group} view builder — pass it or add a view_guards "
+                f"entry explaining the asymmetry"))
+    return findings

@@ -1,0 +1,95 @@
+"""R4 — determinism discipline.
+
+Simulation results must be a pure function of (scenario, seed). Inside
+the configured scope, flag:
+
+- wall-clock reads (``time.time()`` & friends),
+- the process-global RNGs (``np.random.<legacy>``, stdlib
+  ``random.*``) — per-stream seeded generators
+  (``np.random.default_rng(...)``) are fine,
+- iteration over unordered sets (literal ``{...}``, ``set(...)`` calls,
+  set comprehensions) whose order would leak hash randomization into
+  event order.
+
+Live-serving wall-clock users (``serving/engine.py``) are exempt via
+config.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..core import Finding, SourceFile
+
+RULE_ID = "R4"
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("set", "frozenset"):
+        return True
+    return False
+
+
+def check(files: List[SourceFile], config: dict) -> List[Finding]:
+    cfg = config["r4"]
+    findings: List[Finding] = []
+    wallclock = set(cfg["wallclock"])
+    np_ok = set(cfg["np_random_allowed"])
+    for sf in files:
+        if not any(s in sf.relpath for s in cfg["scope"]):
+            continue
+        if sf.matches(cfg["exempt_files"]):
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                f = node.func
+                # time.time() / time.monotonic() / ...
+                if isinstance(f, ast.Attribute) and \
+                        isinstance(f.value, ast.Name) and \
+                        f.value.id == "time" and f.attr in wallclock:
+                    findings.append(Finding(
+                        sf.relpath, node.lineno, RULE_ID,
+                        f"wall-clock read time.{f.attr}() in "
+                        f"deterministic scope — derive times from the "
+                        f"event clock"))
+                # stdlib random.X(...)
+                if isinstance(f, ast.Attribute) and \
+                        isinstance(f.value, ast.Name) and \
+                        f.value.id == "random":
+                    findings.append(Finding(
+                        sf.relpath, node.lineno, RULE_ID,
+                        f"process-global random.{f.attr}() in "
+                        f"deterministic scope — use a seeded "
+                        f"np.random.default_rng substream"))
+            # np.random.X for X outside the seeded-constructor allowlist
+            if isinstance(node, ast.Attribute) and \
+                    isinstance(node.value, ast.Attribute) and \
+                    node.value.attr == "random" and \
+                    isinstance(node.value.value, ast.Name) and \
+                    node.value.value.id in ("np", "numpy") and \
+                    node.attr not in np_ok:
+                findings.append(Finding(
+                    sf.relpath, node.lineno, RULE_ID,
+                    f"global-state np.random.{node.attr} in "
+                    f"deterministic scope — use np.random.default_rng "
+                    f"with an explicit seed"))
+            # iteration over unordered sets
+            if isinstance(node, (ast.For, ast.AsyncFor)) and \
+                    _is_set_expr(node.iter):
+                findings.append(Finding(
+                    sf.relpath, node.lineno, RULE_ID,
+                    "iteration over an unordered set in deterministic "
+                    "scope — sort it or use an ordered container"))
+            if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                 ast.GeneratorExp)):
+                for gen in node.generators:
+                    if _is_set_expr(gen.iter):
+                        findings.append(Finding(
+                            sf.relpath, node.lineno, RULE_ID,
+                            "comprehension over an unordered set in "
+                            "deterministic scope — sort it or use an "
+                            "ordered container"))
+    return findings

@@ -1,0 +1,58 @@
+"""R5 — unit-suffix arithmetic.
+
+Flags ``+``/``-`` expressions whose two operands are plain identifiers
+(names or attribute reads) carrying *conflicting* unit suffixes
+(``_s`` vs ``_tokens`` vs ``_blocks`` vs ``_bytes`` vs ``_j`` vs
+``_bw``...). Adding seconds to tokens is never meaningful; conversions
+go through a named helper (``kv_blocks_needed``) or a multiplication,
+both of which this rule ignores.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from ..core import Finding, SourceFile
+
+RULE_ID = "R5"
+
+
+def _ident(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _unit(name: str, suffixes, bare) -> Optional[str]:
+    if name in bare:
+        return "_" + name
+    for s in suffixes:
+        if name.endswith(s) and len(name) > len(s):
+            return s
+    return None
+
+
+def check(files: List[SourceFile], config: dict) -> List[Finding]:
+    cfg = config["r5"]
+    suffixes = sorted(cfg["suffixes"], key=len, reverse=True)
+    bare = set(cfg["bare_units"])
+    findings: List[Finding] = []
+    for sf in files:
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.BinOp) and
+                    isinstance(node.op, (ast.Add, ast.Sub))):
+                continue
+            ln, rn = _ident(node.left), _ident(node.right)
+            if ln is None or rn is None:
+                continue
+            lu = _unit(ln, suffixes, bare)
+            ru = _unit(rn, suffixes, bare)
+            if lu and ru and lu != ru:
+                op = "+" if isinstance(node.op, ast.Add) else "-"
+                findings.append(Finding(
+                    sf.relpath, node.lineno, RULE_ID,
+                    f"`{ln} {op} {rn}` mixes units {lu} and {ru} — "
+                    f"convert explicitly before combining"))
+    return findings
