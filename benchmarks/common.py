@@ -6,14 +6,15 @@ once and cached; Fig 5 runs its own saturation sweep. `BENCH_N` scales the
 workload (default 6000 services; the paper uses 10000 — set BENCH_N=10000
 for the full run).
 
-Scenario/runtime plumbing (also settable via `python -m benchmarks.run
---scenario/--runtime`):
+Every cell runs the event-driven simulator (the historical slotted mode
+was retired; all baselines are event-driven numbers).
+
+Scenario plumbing (also settable via `python -m benchmarks.run
+--scenario`):
 
 * `BENCH_SCENARIO` — a registered scenario name (`burst`, `diurnal`,
   `bwdrop`, `overload`, `cloud-outage`, ...) shaping the matrix's arrival
   process and injecting its bandwidth events into every simulation cell.
-* `BENCH_RUNTIME` — `slot` (default, quantized 0.5 s slots) or `event`
-  (pure event-driven scheduling, fresh per-arrival views).
 * `BENCH_ADMISSION` — any non-empty value other than `0` gives PerLLM
   admission control (`Decision.admit`): infeasible requests are shed with
   an SLO-violation cost instead of queueing; results report the
@@ -47,13 +48,14 @@ EDGE_MODELS = ("yi-6b", "llama2-7b", "llama3-8b", "yi-9b")
 METHODS = ("PerLLM", "FineInfer", "AGOD", "RewardlessGuidance")
 BENCH_N = int(os.environ.get("BENCH_N", "6000"))
 SCENARIO = os.environ.get("BENCH_SCENARIO") or None
-RUNTIME = os.environ.get("BENCH_RUNTIME", "slot")
 ADMISSION = os.environ.get("BENCH_ADMISSION", "") not in ("", "0")
 TOPOLOGY = os.environ.get("BENCH_TOPOLOGY", "degenerate")
 TIERS = os.environ.get("BENCH_TIERS", "") not in ("", "0")
-if RUNTIME not in ("slot", "event"):
-    raise SystemExit(f"BENCH_RUNTIME={RUNTIME!r} is not one of "
-                     "'slot'/'event'")
+if os.environ.get("BENCH_RUNTIME", "event") != "event":
+    raise SystemExit(
+        f"BENCH_RUNTIME={os.environ['BENCH_RUNTIME']!r}: the slotted "
+        "runtime was retired — every benchmark runs event-driven now; "
+        "unset BENCH_RUNTIME")
 SIM_SEED = 42
 BW_SEED = 1
 
@@ -99,7 +101,6 @@ def run_cell(edge_model: str, fluctuating: bool, method: str,
                                  seed=BW_SEED)
     sim = Simulator(specs, BandwidthModel(fluctuating=fluctuating,
                                           seed=BW_SEED), seed=SIM_SEED,
-                    slot=None if RUNTIME == "event" else 0.5,
                     topology=topology)
     sched = make_scheduler(method, len(specs), tiers=tiers)
     t0 = time.time()

@@ -1,0 +1,150 @@
+"""Scale sweep: wall-clock per arrival of the event core at N up to 10⁶.
+
+The tentpole claim behind the array-backed `_EventSimRuntime` is that
+simulator throughput — not scheduling quality — was the bottleneck for
+"millions of users" experiments. This sweep measures exactly that
+surface, at a fixed operating point, for two schedulers:
+
+* ``probe``  — a minimal O(n_servers) argmin over ``uplink_free_at``.
+  Near-zero policy cost, so its µs/arrival is the *runtime core's* cost:
+  event heap, ledger bookkeeping, view construction, booking. This is
+  the number the CI scale gate holds.
+* ``perllm`` — the full CS-UCB scheduler, whose per-arrival scan puts an
+  upper bound on a realistic policy's cost on top of the same core
+  (swept to 10⁵ only; its cost is policy-dominated and linear in N).
+
+Operating point: ``paper_testbed(n_edge=40)`` (41 servers), Poisson
+rate 100 req/s, workload seed 42 — heavy enough that uplink queues and
+lane backlogs are real, calm enough that the success rate stays
+meaningful (no queue meltdown).
+
+Reported per sweep point: ``us_per_arrival`` (sim.run wall / N),
+``wl_us_per_arrival`` (workload generation), ``peak_rss_mb`` (ru_maxrss
+high-water mark — includes everything allocated so far this process),
+and the success rate (a cheap trajectory checksum: any core change that
+alters scheduling shows up here before anyone reads a profile).
+
+CI usage (the `scale-gate` job; nightly raises --max-n to 1e5)::
+
+    python -m benchmarks.scale --max-n 10000 --json BENCH_scale.json
+    python benchmarks/compare_baseline.py BENCH_scale.json \
+        benchmarks/BENCH_scale.json
+
+The committed baseline gates ``us_per_arrival`` with ``direction:
+"lower"`` and a generous per-metric 25% tolerance (runner jitter), only
+at the N every CI run reaches (10³, 10⁴) — nightly-only points are
+reported, not gated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import resource
+import sys
+import time
+
+from repro.cluster import Simulator, generate_workload, paper_testbed
+from repro.core import Decision, make_policy
+
+N_EDGE = 40
+RATE = 100.0
+WL_SEED = 42
+PROBE_NS = (1_000, 10_000, 100_000, 1_000_000)
+PERLLM_CAP = 100_000
+
+
+class UplinkProbe:
+    """Cheapest useful policy: route to the server whose uplink frees
+    first. One O(n_servers) scalar scan per arrival, no learning — the
+    measured µs/arrival is the runtime core, not the policy."""
+
+    name = "uplink-probe"
+
+    def assign(self, req, view):
+        up = view.uplink_free_at
+        best, best_v = 0, up[0]
+        for j in range(1, len(up)):
+            v = up[j]
+            if v < best_v:
+                best, best_v = j, v
+        return Decision(server=best)
+
+    def feedback(self, req, out):
+        pass
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _make_policy(kind: str, n_servers: int):
+    if kind == "probe":
+        return UplinkProbe()
+    return make_policy("perllm", n_servers)
+
+
+def run_point(kind: str, n: int, specs) -> dict:
+    t0 = time.perf_counter()
+    services = generate_workload(n, rate=RATE, seed=WL_SEED)
+    wl_s = time.perf_counter() - t0
+    sim = Simulator(specs)
+    policy = _make_policy(kind, len(specs))
+    t0 = time.perf_counter()
+    res = sim.run(services, policy)
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": round(wall, 3),
+        "metrics": {
+            "us_per_arrival": wall / n * 1e6,
+            "wl_us_per_arrival": wl_s / n * 1e6,
+            "peak_rss_mb": _peak_rss_mb(),
+            "success_rate": res.success_rate,
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Event-core scale sweep (us/arrival + peak RSS).")
+    ap.add_argument("--max-n", type=int, default=1_000_000,
+                    help="largest probe sweep point (default 1e6; the "
+                         "perllm sweep is additionally capped at 1e5)")
+    ap.add_argument("--policies", default="probe,perllm",
+                    help="comma-separated subset of probe,perllm")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as compare_baseline-schema JSON "
+                         "(the CI scale-gate artifact)")
+    args = ap.parse_args(argv)
+    kinds = [k for k in args.policies.split(",") if k]
+    bad = [k for k in kinds if k not in ("probe", "perllm")]
+    if bad:
+        sys.exit(f"unknown policy kind(s) {bad}; choose from probe,perllm")
+
+    specs = paper_testbed(n_edge=N_EDGE)
+    out = {}
+    print(f"# testbed: {len(specs)} servers (n_edge={N_EDGE}), "
+          f"rate={RATE:g} req/s, workload seed {WL_SEED}")
+    print(f"# {'experiment':24s} {'us/arr':>8s} {'wl us/arr':>9s} "
+          f"{'wall s':>8s} {'rss MB':>7s} {'success':>8s}")
+    for kind in kinds:
+        cap = args.max_n if kind == "probe" else min(args.max_n, PERLLM_CAP)
+        for n in PROBE_NS:
+            if n > cap:
+                break
+            point = run_point(kind, n, specs)
+            name = f"scale_{kind}_n{n}"
+            out[name] = point
+            m = point["metrics"]
+            print(f"  {name:24s} {m['us_per_arrival']:8.1f} "
+                  f"{m['wl_us_per_arrival']:9.2f} {point['wall_s']:8.2f} "
+                  f"{m['peak_rss_mb']:7.0f} {m['success_rate']:8.4f}")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,11 +18,10 @@ every link's trace to the cluster size and sampling order; it survives
 unchanged as the bit-exact shim behind `LinkTopology.degenerate`, guarded
 by the frozen golden tests.)
 
-In the slotted simulator factors are sampled once per non-empty slot; the
-event-driven runtimes resample on a periodic `BandwidthChange` stream
-instead (see `repro.core.runtime`), and scenario events may overlay
-multiplicative scales per server *or per named link* (congestion/outage
-windows) on top.
+Factors are resampled on a periodic `BandwidthChange` stream (see
+`repro.core.runtime`), and scenario events may overlay multiplicative
+scales per server *or per named link* (congestion/outage windows) on
+top.
 """
 from __future__ import annotations
 

@@ -16,6 +16,7 @@ unchanged unless tiers are asked for.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Tuple
 
@@ -74,29 +75,61 @@ class ServerSpec:
     def model_cfg(self):
         return get_config(self.arch_id)
 
-    def active_params(self) -> float:
+    # The config-derived constants below are immutable per spec but sit on
+    # every per-arrival cost prediction; cached_property stores them in the
+    # instance __dict__ (legal on a frozen, non-slots dataclass) so the
+    # config walk runs once per spec instead of once per predicted time.
+    @functools.cached_property
+    def _active_params(self) -> float:
         return float(self.model_cfg().active_param_count())
 
+    @functools.cached_property
+    def _kv_bytes_per_token(self) -> float:
+        return float(self.model_cfg().kv_bytes_per_token())
+
+    @functools.cached_property
+    def _decode_weight_stream(self) -> float:
+        # same expression decode_step_time evaluated inline before caching
+        return (self._active_params * self.weight_bytes_per_param
+                / self.mem_bw)
+
+    def active_params(self) -> float:
+        return self._active_params
+
     def prefill_time(self, prompt_tokens: int, tier: int = -1) -> float:
-        fl = 2.0 * self.active_params() * prompt_tokens
+        fl = 2.0 * self._active_params * prompt_tokens
         return fl / self.flops / self.tier_freq(tier)
 
     def decode_step_time(self, batch: int = 1, tier: int = -1) -> float:
         """Seconds per decode step for a batch (memory- vs compute-bound),
         at DVFS tier `tier` (time ∝ 1/f)."""
-        weight_stream = (self.active_params() * self.weight_bytes_per_param
-                         / self.mem_bw)
-        compute = batch * 2.0 * self.active_params() / self.flops
+        weight_stream = self._decode_weight_stream
+        compute = batch * 2.0 * self._active_params / self.flops
         return max(weight_stream, compute) / self.tier_freq(tier)
 
     def decode_time(self, output_tokens: int, batch: int = 1,
                     tier: int = -1) -> float:
         return output_tokens * self.decode_step_time(batch, tier)
 
+    @functools.cached_property
+    def _service_memo(self) -> dict:
+        # one-entry memo (cleared on every miss, so it never grows): each
+        # dispatched request evaluates service_time twice back-to-back with
+        # the same arguments — once in the view's nominal predictor, once
+        # in the runtime's realized draw
+        return {}
+
     def service_time(self, prompt_tokens: int, output_tokens: int,
                      batch: int = 1, tier: int = -1) -> float:
-        return self.prefill_time(prompt_tokens, tier) + self.decode_time(
-            output_tokens, batch, tier)
+        memo = self._service_memo
+        key = (prompt_tokens, output_tokens, batch, tier)
+        hit = memo.get(key)
+        if hit is None:
+            hit = self.prefill_time(prompt_tokens, tier) \
+                + self.decode_time(output_tokens, batch, tier)
+            memo.clear()
+            memo[key] = hit
+        return hit
 
     def tx_time(self, payload_bytes: float, share: float = 1.0) -> float:
         """share: fraction of the uplink granted to this transfer."""
@@ -112,7 +145,7 @@ class ServerSpec:
     def kv_bytes_per_token(self) -> float:
         """KV-cache bytes one token pins on this server's model — the
         wire size of a KV migration is `blocks × block_tokens × this`."""
-        return float(self.model_cfg().kv_bytes_per_token())
+        return self._kv_bytes_per_token
 
     def infer_energy(self, t_inf: float, tier: int = -1,
                      lane_share: float = 1.0) -> float:

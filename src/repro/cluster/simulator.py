@@ -6,20 +6,22 @@ fluctuating) uplink, then occupy a batch lane for prefill+decode. Processing
 time = transmission + queue + inference; energy = transmission + inference +
 idle (idle accrues over the run's makespan).
 
-Both execution modes run on the shared event-driven `Runtime` / `EventLoop`
-from `repro.core.runtime`:
+The simulator is purely event-driven, on the shared `Runtime` /
+`EventLoop` from `repro.core.runtime`: every service is its own `Arrival`
+at its true timestamp, observed against a *fresh* view of live uplink/
+lane state; transmission and completion unfold as `TxDone`/`InferDone`
+events and the policy's `feedback` fires at the request's actual
+completion time. Bandwidth fluctuation is a periodic `BandwidthChange`
+resample stream. (The historical quantized-slot compat mode was retired
+once the array-backed event core became the single measured path; a
+numeric `slot=` argument now raises.)
 
-* **Slotted-compat mode** (default, `slot=0.5`): arrivals are quantized —
-  each non-empty slot becomes one batched `Arrival` event at the slot
-  boundary, scheduled against a slot-start `ClusterView` and realized
-  synchronously (feedback at decision time). This reproduces the PR 1
-  slotted simulator bit-for-bit (see the golden tests).
-* **Event-driven mode** (`slot=None`): every service is its own `Arrival`
-  at its true timestamp, observed against a *fresh* view of live uplink/
-  lane state; transmission and completion unfold as `TxDone`/`InferDone`
-  events and the policy's `feedback` fires at the request's actual
-  completion time. Bandwidth fluctuation is a periodic `BandwidthChange`
-  resample stream.
+Two interchangeable cores execute those semantics: the default array-
+backed core (`core="array"`: flat typed event heap, cached bandwidth/
+uplink vectors, lazily materialized views) and the straight-line
+reference core (`core="reference"`), kept as the readable specification —
+trajectories are bit-identical between them (see
+tests/test_scale_equivalence.py).
 
 Scenario hooks (`repro.core.runtime.Scenario`) inject extra event streams —
 bursty/diurnal/trace arrivals shape the workload (see
@@ -32,10 +34,9 @@ per server, bit-exact with the legacy per-server `BandwidthModel`):
 transfers serialize on every link of the target server's path at the
 path's bottleneck bandwidth. Policies may shed arrivals
 (`Decision.admit=False` — a `Reject` event emits the SLO-violation
-Outcome with zero server energy) and, in event mode, reclaim a running
+Outcome with zero server energy) and reclaim a running
 victim's lane (`Decision.preempt_victim` — the victim's remaining decode
-tokens requeue as a fresh Arrival; slotted mode raises, since it realizes
-outcomes synchronously). In event mode the KV ledger also models *sharing*
+tokens requeue as a fresh Arrival). The KV ledger also models *sharing*
 and *mobility*: requests carrying a `prefix_id` reuse resident shared-prefix
 pages (skipping that much prefill), and a cross-server requeue with
 `Decision.migrate_kv` ships its preserved pages over the link topology
@@ -48,6 +49,7 @@ meaningful (and is how the real testbed behaves).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -57,16 +59,15 @@ from repro.cluster.network import BandwidthModel, LinkStateMixin, LinkTopology
 from repro.cluster.server import ServerSpec, ServerState
 from repro.cluster.workload import ServiceRequest, classify
 from repro.core.api import (
-    NOMINAL, Allocation, ClusterView, Decision, RunningTask, drive_slot,
-    ensure_policy,
+    NOMINAL, Allocation, ClusterView, Decision, RunningTask, ensure_policy,
 )
 from repro.core.runtime import (
-    Arrival, BandwidthChange, InferDone, KvMigrate, Preempt, Reject, Runtime,
-    Scenario, TxDone, make_scenario,
+    Arrival, BandwidthChange, EventLoop, InferDone, KvMigrate, Preempt,
+    Reject, Runtime, Scenario, TxDone, make_scenario,
 )
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Outcome:
     server: int
     tx_time: float
@@ -203,53 +204,7 @@ class _SimRuntimeBase(Runtime, LinkStateMixin):
         self.policy.feedback(req, out)
 
 
-class _SlottedSimRuntime(_SimRuntimeBase):
-    """Legacy quantized-slot semantics as events.
-
-    Each non-empty slot is one batched Arrival at the slot boundary; the
-    whole slot is assigned against the slot-start view and realized
-    synchronously, so feedback reaches the learner at decision time —
-    exactly the PR 1 slotted loop, bit-for-bit when no scenario overlay is
-    active.
-    """
-
-    def on_arrival(self, ev: Arrival) -> None:
-        ts = ev.slot_index
-        sim = self.sim
-        link_factors = self.topo.factors(ts)
-        factors = [self.server_factor(j, link_factors)
-                   for j in range(len(self.specs))]
-        view = ClusterView(
-            t=ev.time, specs=self.specs, bw_factor=list(factors),
-            uplink_free_at=[self.topo.path_free_at(j, self.link_free)
-                            for j in range(len(self.specs))],
-            lane_free=[list(lf) for lf in self.lane_free],
-            **self.link_view_kwargs(ev.time, link_factors),
-        )
-        decisions = drive_slot(self.policy, ev.requests, view, ts)
-        for req, d in zip(ev.requests, decisions, strict=True):
-            if not d.admit:
-                self.handle(Reject(ev.time, request=req, decision=d))
-                continue
-            if d.preempt_victim is not None:
-                raise ValueError(
-                    "preemption needs the event-driven simulator "
-                    "(slot=None): slotted mode realizes outcomes "
-                    "synchronously, so there is no in-flight victim to "
-                    "return a lane from")
-            if d.migrate_kv:
-                raise NotImplementedError(
-                    "Decision.migrate_kv needs the event-driven simulator "
-                    "(slot=None): slotted mode keeps no page ledger and no "
-                    "link timeline to ship KV pages over")
-            out = sim._realize(req, d, self.states, self.lane_free, factors,
-                               links=self.link_free,
-                               path=self.topo.paths[d.server])
-            self.outcomes.append(out)
-            self.policy.feedback(req, out)
-
-
-@dataclasses.dataclass(eq=False)
+@dataclasses.dataclass(eq=False, slots=True)
 class _Booking:
     """One dispatched request's committed physics (identity-hashed so a
     cancelled booking can never be confused with its requeue's)."""
@@ -290,20 +245,186 @@ class _PrefixEntry:
     stamp: float         # last touch, for LRU reclaim of idle entries
 
 
-class _EventSimRuntime(_SimRuntimeBase):
-    """Pure event-driven semantics.
+class _LazyViewList(list):
+    """ClusterView list field materialized on first read.
 
-    Every arrival observes a fresh view of the cluster at its actual
-    timestamp; physics are resolved at dispatch (links and lane booked
-    immediately, so later arrivals see the consumed capacity) while the
-    timeline unfolds as TxDone → InferStart → InferDone events, with energy
-    accounting and policy feedback at the times things actually happen.
+    The fill callback snapshots runtime state; it runs (at most once)
+    inside the policy's `assign`, before any state mutates, so the
+    content is identical to an eager snapshot at view-build time. Fields
+    most policies never touch (`running`, `tier_load`) then cost nothing
+    per arrival."""
+
+    __slots__ = ("_fill",)
+
+    def __init__(self, fill):
+        super().__init__()
+        self._fill = fill
+
+    def _ensure(self):
+        fill, self._fill = self._fill, None
+        if fill is not None:
+            self.extend(fill())
+
+    def __len__(self):
+        self._ensure()
+        return list.__len__(self)
+
+    def __iter__(self):
+        self._ensure()
+        return list.__iter__(self)
+
+    def __getitem__(self, i):
+        self._ensure()
+        return list.__getitem__(self, i)
+
+    def __eq__(self, other):
+        self._ensure()
+        return list.__eq__(self, other)
+
+    def __ne__(self, other):
+        self._ensure()
+        return list.__ne__(self, other)
+
+    def __contains__(self, x):
+        self._ensure()
+        return list.__contains__(self, x)
+
+    def __repr__(self):
+        self._ensure()
+        return list.__repr__(self)
+
+    def index(self, *a):
+        self._ensure()
+        return list.index(self, *a)
+
+    def count(self, x):
+        self._ensure()
+        return list.count(self, x)
+
+    def copy(self):
+        self._ensure()
+        return list(self)
+
+    __hash__ = None
+
+
+class _LazyViewDict(dict):
+    """ClusterView dict field materialized on first read (same snapshot
+    argument as `_LazyViewList`)."""
+
+    __slots__ = ("_fill",)
+
+    def __init__(self, fill):
+        super().__init__()
+        self._fill = fill
+
+    def _ensure(self):
+        fill, self._fill = self._fill, None
+        if fill is not None:
+            dict.update(self, fill())
+
+    def __len__(self):
+        self._ensure()
+        return dict.__len__(self)
+
+    def __iter__(self):
+        self._ensure()
+        return dict.__iter__(self)
+
+    def __getitem__(self, k):
+        self._ensure()
+        return dict.__getitem__(self, k)
+
+    def __contains__(self, k):
+        self._ensure()
+        return dict.__contains__(self, k)
+
+    def __eq__(self, other):
+        self._ensure()
+        return dict.__eq__(self, other)
+
+    def __ne__(self, other):
+        self._ensure()
+        return dict.__ne__(self, other)
+
+    def __repr__(self):
+        self._ensure()
+        return dict.__repr__(self)
+
+    def get(self, k, default=None):
+        self._ensure()
+        return dict.get(self, k, default)
+
+    def keys(self):
+        self._ensure()
+        return dict.keys(self)
+
+    def values(self):
+        self._ensure()
+        return dict.values(self)
+
+    def items(self):
+        self._ensure()
+        return dict.items(self)
+
+    def copy(self):
+        self._ensure()
+        return dict(self)
+
+    __hash__ = None
+
+
+class _CountingLoop(EventLoop):
+    """EventLoop that tracks how many pending events are real work
+    (anything but `BandwidthChange`), so the fast drain's only-
+    housekeeping-left termination check is O(1) instead of scanning the
+    heap."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.n_work = 0
+
+    def push(self, event) -> None:
+        if event.priority != 0:          # BandwidthChange is priority 0
+            self.n_work += 1
+        super().push(event)
+
+
+class _EventSimRuntime(_SimRuntimeBase):
+    """Pure event-driven semantics — the array-backed fast core.
+
+    Result-identical to `reference_sim._ReferenceEventRuntime` (the
+    retained pre-vectorization implementation, pinned by property tests
+    and the goldens), but engineered for million-arrival runs:
+
+    * **Ledger vectors, not per-view rebuilds**: the per-server bandwidth
+      factor and path-free-at vectors are maintained incrementally —
+      updated at the events that change them (bandwidth changes, link
+      bookings) — so `build_view` hands out copies instead of recomputing
+      dict-driven topology walks per arrival.
+    * **Lazy view fields**: `running`, `tier_load`, `link_bw` and
+      `link_queue` materialize on first read inside the policy's
+      `assign` (before any state mutates, so content is identical);
+      policies that never read them no longer pay O(in-flight) snapshot
+      cost on every arrival.
+    * **Arrival cursor**: the sorted workload is walked with a cursor
+      merged against the heap instead of pre-pushing one Arrival dataclass
+      per service, with virtual sequence numbers reserved so every
+      tie-break matches the seeded-heap ordering.
+    * **Flat hot events**: TxDone/InferDone are pushed as raw
+      `(time, priority, seq, booking)` heap entries and dispatched by a
+      type switch in `drain`, skipping per-event dataclass allocation and
+      the generic MRO handler walk. Rare events (bandwidth, deferrals,
+      KV migrations, requeues) keep the generic dataclass path.
+
     Bookings stay in `_inflight` until completion, which is what gives
-    views their `running` tasks and `Preempt` a victim ledger to roll back.
+    views their `running` tasks and `Preempt` a victim ledger to roll
+    back.
     """
 
     def __init__(self, sim: "Simulator", policy) -> None:
         super().__init__(sim, policy)
+        self.loop = _CountingLoop()
         self._link_factors: Dict[str, float] = \
             {n: 1.0 for n in self.topo.links}
         self._inflight: Dict[int, _Booking] = {}
@@ -323,10 +444,48 @@ class _EventSimRuntime(_SimRuntimeBase):
             [{} for _ in self.specs]
         self._prefix_pin: Dict[int, tuple] = {}
         self._prefix_saved: Dict[int, int] = {}
+        n = len(self.specs)
+        self._n = n
+        self._tiered = any(s.n_tiers > 1 for s in self.specs)
+        # link topology index: which servers each link serves, and the
+        # dedicated-link fast path (a single private link lets bookings
+        # update the path-free vector without a path walk)
+        topo = self.topo
+        self._link_servers: Dict[str, List[int]] = \
+            {name: [] for name in topo.links}
+        for j in range(n):
+            for name in topo.paths[j]:
+                self._link_servers[name].append(j)
+        self._single_link: List[Optional[str]] = []
+        for j in range(n):
+            path = topo.paths[j]
+            if len(path) == 1 and self._link_servers[path[0]] == [j]:
+                self._single_link.append(path[0])
+            else:
+                self._single_link.append(None)
+        # incrementally maintained ledger vectors (the reference core
+        # recomputes both per view)
+        self._uplink_vec: List[float] = [0.0] * n
+        # arrival cursor state (`seed_arrivals`)
+        self._services: Optional[List[ServiceRequest]] = None
         if any(link.fluctuating for link in self.topo.links.values()):
             self._resample_factors(0.0)
+        self._refresh_bandwidth_caches()
 
     # ---------------- bandwidth as an event stream -----------------------
+    def _refresh_bandwidth_caches(self) -> None:
+        """Recompute the per-server factor vector and the observed
+        per-link bandwidth map. Only bandwidth events change either, so
+        this runs per `BandwidthChange` instead of per arrival — same
+        floats as the reference core's per-view recomputation."""
+        factors, scale = self._link_factors, self.link_scale
+        topo = self.topo
+        self._factor_vec = [self.server_factor(j, factors)
+                            for j in range(self._n)]
+        self._link_bw_cache = {
+            name: topo.links[name].capacity * factors.get(name, 1.0)
+            * scale[name] for name in topo.links}
+
     def _resample_factors(self, t: float) -> None:
         k = int(round(t / self.sim.bw_interval))
         self._link_factors = self.topo.factors(k)
@@ -337,9 +496,10 @@ class _EventSimRuntime(_SimRuntimeBase):
         super().on_bandwidth_change(ev)
         if ev.resample:
             self._resample_factors(ev.time)
+        self._refresh_bandwidth_caches()
 
     def _factor(self, j: int) -> float:
-        return self.server_factor(j, self._link_factors)
+        return self._factor_vec[j]
 
     def on_reject(self, ev: Reject) -> None:
         """A previously preempted request shed on requeue must not leak
@@ -352,31 +512,55 @@ class _EventSimRuntime(_SimRuntimeBase):
             self._kv_free(j, blocks, ev.time)
         super().on_reject(ev)
 
+    # ---------------- link ledger ----------------------------------------
+    def _book_links(self, path, end: float) -> None:
+        """Advance every link on `path` to `end` and refresh the
+        path-free-at vector of each server those links serve."""
+        link_free = self.link_free
+        for name in path:
+            link_free[name] = end
+        vec = self._uplink_vec
+        paths = self.topo.paths
+        done = set()
+        for name in path:
+            for j in self._link_servers[name]:
+                if j not in done:
+                    done.add(j)
+                    vec[j] = max(link_free[lk] for lk in paths[j])
+
     # ---------------- the Runtime contract -------------------------------
     def slot_index(self, t: float) -> int:
         return int(t / self.sim.bw_interval)
 
-    def build_view(self, t: float) -> ClusterView:
-        n = len(self.specs)
-        running: List[List[RunningTask]] = [[] for _ in range(n)]
+    def _fill_running(self) -> List[List[RunningTask]]:
+        per: List[List[RunningTask]] = [[] for _ in range(self._n)]
         for sid, b in self._inflight.items():
-            running[b.j].append(RunningTask(
-                sid=sid, server=b.j, class_id=b.request.class_id,
-                deadline_at=b.request.arrival + b.request.deadline,
+            req = b.request
+            per[b.j].append(RunningTask(
+                sid=sid, server=b.j, class_id=req.class_id,
+                deadline_at=req.arrival + req.deadline,
                 begin=b.begin, finish_est=b.finish,
                 tier=b.alloc.freq_tier))
-        tier_kwargs = {}
-        if any(s.n_tiers > 1 for s in self.specs):
-            # per-server tier state: committed in-flight lane-seconds per
-            # DVFS tier (the within-batch commits stack on via the view's
-            # own `commit`)
-            tier_load = [[0.0] * s.n_tiers for s in self.specs]
-            for b in self._inflight.values():
-                k = b.alloc.freq_tier
-                if k < 0:
-                    k = self.specs[b.j].nominal_tier
-                tier_load[b.j][k] += max(b.finish - max(b.begin, t), 0.0)
-            tier_kwargs = dict(tier_load=tier_load)
+        return per
+
+    def _fill_tier_load(self, t: float) -> List[List[float]]:
+        # per-server tier state: committed in-flight lane-seconds per
+        # DVFS tier (the within-batch commits stack on via the view's
+        # own `commit`)
+        tier_load = [[0.0] * s.n_tiers for s in self.specs]
+        for b in self._inflight.values():
+            k = b.alloc.freq_tier
+            if k < 0:
+                k = self.specs[b.j].nominal_tier
+            tier_load[b.j][k] += max(b.finish - max(b.begin, t), 0.0)
+        return tier_load
+
+    def _fill_link_queue(self, t: float) -> Dict[str, float]:
+        return {name: max(f - t, 0.0)
+                for name, f in self.link_free.items()}
+
+    def build_view(self, t: float) -> ClusterView:
+        n = self._n
         kv_kwargs = {}
         if self._kv_modeled:
             # idle prefix entries are reclaimable page cache, so the view
@@ -393,17 +577,28 @@ class _EventSimRuntime(_SimRuntimeBase):
                 kv_prefix_tokens=[
                     {pid: e.tokens for pid, e in self._prefix[j].items()
                      if e.ready <= t} for j in range(n)])
-        return ClusterView(
-            t=t, specs=self.specs,
-            bw_factor=[self._factor(j) for j in range(n)],
-            uplink_free_at=[self.topo.path_free_at(j, self.link_free)
-                            for j in range(n)],
-            lane_free=[list(lf) for lf in self.lane_free],
-            running=running,
-            **tier_kwargs,
-            **kv_kwargs,
-            **self.link_view_kwargs(t, self._link_factors),
-        )
+        # direct construction (no dataclass __init__/kwarg machinery):
+        # ClusterView is a plain dataclass with no __post_init__, so
+        # assigning its instance dict wholesale is equivalent — this runs
+        # once per arrival and the savings are real at 10^6 arrivals
+        view = ClusterView.__new__(ClusterView)
+        view.__dict__ = {
+            "t": t,
+            "specs": self.specs,
+            "bw_factor": self._factor_vec.copy(),
+            "uplink_free_at": self._uplink_vec.copy(),
+            "lane_free": list(map(list.copy, self.lane_free)),
+            "link_bw": _LazyViewDict(self._link_bw_cache.copy),
+            "link_queue": _LazyViewDict(lambda: self._fill_link_queue(t)),
+            "paths": self.topo.paths,
+            "running": _LazyViewList(self._fill_running),
+            "kv_free_blocks": kv_kwargs.get("kv_free_blocks"),
+            "kv_total_blocks": kv_kwargs.get("kv_total_blocks"),
+            "kv_prefix_tokens": kv_kwargs.get("kv_prefix_tokens"),
+            "tier_load": (_LazyViewList(lambda: self._fill_tier_load(t))
+                          if self._tiered else None),
+        }
+        return view
 
     # ---------------- shared-prefix ledger -------------------------------
     def _prefix_blocks(self, req: ServiceRequest, j: int) -> int:
@@ -577,27 +772,37 @@ class _EventSimRuntime(_SimRuntimeBase):
                 return                       # waiting on KV blocks
             prefix_saved = self._prefix_saved.pop(req.sid, 0)
         alloc = decision.alloc
-        tx_start = max(t, self.topo.path_free_at(j, self.link_free))
+        free = self._uplink_vec[j]
+        tx_start = t if t > free else free
         # a sub-unit bandwidth share stretches the transfer by 1/share and
         # occupies the path for the whole stretched window (exclusive-
         # window semantics: shares can never oversubscribe a link)
-        tx_dur = spec.tx_time(req.payload_bytes,
-                              self._factor(j) * alloc.bw_share)
+        share = self._factor_vec[j] * alloc.bw_share
+        tx_dur = req.payload_bytes * 8.0 \
+            / (spec.bandwidth * (share if share > 1e-9 else 1e-9))
         end = tx_start + tx_dur
         # a transfer occupies its whole path
-        for name in self.topo.paths[j]:
+        name = self._single_link[j]
+        if name is not None:
             self.link_free[name] = end
+            self._uplink_vec[j] = end
+        else:
+            self._book_links(self.topo.paths[j], end)
         st.uplink_free_at = end
         ready = end
         # the lane is booked at dispatch — the routed request is committed
         # capacity, visible to every later arrival's fresh view — while the
         # events below mark when its phases actually happen
         lanes = self.lane_free[j]
-        li = int(np.argmin(lanes))
-        lane_prev = lanes[li]
-        begin = max(ready, lane_prev)
-        t_inf = self.sim._draw_infer(req, j, resume=kv_resumed, alloc=alloc,
-                                     prefix_tokens=prefix_saved)
+        li = 0
+        lane_prev = lanes[0]
+        for k in range(1, len(lanes)):
+            v = lanes[k]
+            if v < lane_prev:
+                li = k
+                lane_prev = v
+        begin = ready if ready > lane_prev else lane_prev
+        t_inf = self.sim._draw_infer(req, j, kv_resumed, alloc, prefix_saved)
         finish = begin + t_inf
         lanes[li] = finish
         pin = self._prefix_pin.get(req.sid)
@@ -614,9 +819,15 @@ class _EventSimRuntime(_SimRuntimeBase):
                        kv_resumed=kv_resumed, prefix_saved=prefix_saved,
                        alloc=alloc)
         self._inflight[req.sid] = ctx
-        self.loop.push(TxDone(ready, request=req, decision=decision,
-                              context=ctx))
-        self.loop.push(InferDone(finish, request=req, context=ctx))
+        # flat hot events: the booking itself is the payload; priorities 3
+        # (TxDone) and 1 (InferDone) are unique among pushed events, so
+        # `drain` routes on them without per-event dataclass churn
+        loop = self.loop
+        heap = loop._heap
+        heapq.heappush(heap, (ready, 3, loop._seq, ctx))
+        heapq.heappush(heap, (finish, 1, loop._seq + 1, ctx))
+        loop._seq += 2
+        loop.n_work += 2
 
     def _kv_migrate(self, t: float, req: ServiceRequest,
                     decision: Decision) -> bool:
@@ -657,8 +868,7 @@ class _EventSimRuntime(_SimRuntimeBase):
         self.kv_used[j] += need
         start = max(t, max(self.link_free[name] for name in path))
         end = start + n_bytes * 8.0 / bw
-        for name in path:
-            self.link_free[name] = end
+        self._book_links(path, end)
         st = self.states[src]
         # the source's radio pushes the pages; like payload transfers,
         # energy accrues over the whole window including the queue wait
@@ -683,8 +893,7 @@ class _EventSimRuntime(_SimRuntimeBase):
         req.kv_server, req.kv_blocks = j, need
         self.dispatch(ev.time, req, ev.decision)
 
-    def on_tx_done(self, ev: TxDone) -> None:
-        b: _Booking = ev.context
+    def _tx_done(self, b: _Booking) -> None:
         st = self.states[b.j]
         # transmission energy accrues over the whole transfer window,
         # including the congestion queue (paper §2.3); for a preempted
@@ -697,6 +906,9 @@ class _EventSimRuntime(_SimRuntimeBase):
         st.e_tx += (b.ready - b.charge_from) * self.specs[b.j].tx_power \
             - (1.0 - b.alloc.bw_share) * b.tx_dur * self.specs[b.j].tx_power
         st.tx_busy_time += b.tx_dur
+
+    def on_tx_done(self, ev: TxDone) -> None:
+        self._tx_done(ev.context)
 
     def on_preempt(self, ev: Preempt) -> None:
         """Return the victim's lane and requeue its remaining work.
@@ -776,18 +988,17 @@ class _EventSimRuntime(_SimRuntimeBase):
         self.n_preempted += 1
         self.loop.push(Arrival(t, requests=(req,)))
 
-    def on_infer_done(self, ev: InferDone) -> None:
-        b: _Booking = ev.context
+    def _infer_done(self, b: _Booking, finish: float) -> None:
         if b.cancelled:
             return                       # preempted: the requeue completes
-        req = ev.request
+        req = b.request
         self._inflight.pop(req.sid, None)
         spec = self.specs[b.j]
         st = self.states[b.j]
-        finish = ev.time
         st.busy_time += b.t_inf / spec.max_concurrency
-        st.e_infer += spec.infer_energy(b.t_inf, tier=b.alloc.freq_tier,
-                                        lane_share=b.alloc.lane_share)
+        e_inf = spec.infer_energy(b.t_inf, tier=b.alloc.freq_tier,
+                                  lane_share=b.alloc.lane_share)
+        st.e_infer += e_inf
         st.tokens_out += req.output_tokens
         st.served += 1
         if spec.kv_blocks > 0 and req.kv_blocks > 0:
@@ -810,11 +1021,91 @@ class _EventSimRuntime(_SimRuntimeBase):
             queue_time=max(b.begin - b.ready, 0.0), infer_time=b.t_inf,
             finish=finish, processing_time=proc,
             success=proc <= req.deadline,
-            energy=b.tx_dur * spec.tx_power * b.alloc.bw_share
-            + spec.infer_energy(b.t_inf, tier=b.alloc.freq_tier,
-                                lane_share=b.alloc.lane_share))
+            energy=b.tx_dur * spec.tx_power * b.alloc.bw_share + e_inf)
         self.outcomes.append(out)
         self.policy.feedback(req, out)
+
+    def on_infer_done(self, ev: InferDone) -> None:
+        self._infer_done(ev.context, ev.time)
+
+    # ---------------- arrival cursor & fast drain ------------------------
+    def seed_arrivals(self, services: List[ServiceRequest]) -> None:
+        """Walk `services` (sorted by arrival) with a cursor instead of
+        pre-pushing one Arrival event each. Virtual sequence numbers
+        0..N-1 are reserved for the cursor so every equal-time tie-break
+        (seeded vs requeued arrivals, scenario events) orders exactly as
+        the seeded-heap reference core."""
+        self._services = services
+        self.loop._seq = len(services)
+
+    def _cursor_arrival(self, t: float, req: ServiceRequest) -> None:
+        """Inlined single-request `on_arrival` (same semantics as
+        `Runtime.on_arrival` + `drive_slot` for a 1-tuple; `drain` has
+        already advanced the clock)."""
+        view = self.build_view(t)
+        d = self.policy.assign(req, view)
+        if d.admit:
+            view.apply(req, d)
+            if d.preempt_victim is None and d.defer_until <= t:
+                self.dispatch(t, req, d)
+                return
+        self.place(t, req, d)
+
+    def drain(self, max_events: int = 10_000_000) -> None:
+        """Merge the arrival cursor with the event heap; stop when only
+        housekeeping (BandwidthChange) events remain."""
+        services = self._services if self._services is not None else []
+        n = len(services)
+        i = 0
+        clock = self.clock
+        loop = self.loop
+        heap = loop._heap
+        pop = heapq.heappop
+        cursor_arrival = self._cursor_arrival
+        tx_done = self._tx_done
+        infer_done = self._infer_done
+        handled = 0
+        while handled < max_events:
+            handled += 1
+            if i < n:
+                r = services[i]
+                ta = r.arrival
+                if heap:
+                    h0 = heap[0]
+                    t0 = h0[0]
+                    take_heap = t0 < ta or (
+                        t0 == ta and (h0[1] < 5 or (h0[1] == 5
+                                                    and h0[2] < i)))
+                else:
+                    take_heap = False
+                if not take_heap:
+                    i += 1
+                    if ta > clock:
+                        clock = ta
+                        self.clock = ta
+                    cursor_arrival(ta, r)
+                    continue
+            elif not heap or loop.n_work == 0:
+                return
+            item = pop(heap)
+            ev = item[3]
+            t = item[0]
+            if t > clock:
+                clock = t
+                self.clock = t
+            cls = ev.__class__
+            if cls is _Booking:
+                loop.n_work -= 1
+                if item[1] == 3:
+                    tx_done(ev)
+                else:
+                    infer_done(ev, t)
+            elif cls is BandwidthChange:
+                self.on_bandwidth_change(ev)
+            else:
+                loop.n_work -= 1
+                self.handle(ev)
+        raise RuntimeError(f"runtime did not drain in {max_events} events")
 
 
 # ---------------------------------------------------------------------------
@@ -823,10 +1114,13 @@ class _EventSimRuntime(_SimRuntimeBase):
 
 
 class Simulator:
-    """`slot=0.5` (default) runs the slotted-compat mode; `slot=None` runs
-    pure event-driven scheduling. `bw_interval` is the fluctuating
-    bandwidth model's resample cadence in event mode (and the pseudo-slot
+    """Event-driven edge-cloud simulator. `bw_interval` is the
+    fluctuating bandwidth model's resample cadence (and the pseudo-slot
     length of `Runtime.slot_index`).
+
+    `slot` is retired: the simulator always runs event-driven. The
+    parameter is kept so legacy call sites fail with a clear message —
+    any numeric value raises, `slot=None` is accepted and ignored.
 
     `topology` is the network (`repro.cluster.network.LinkTopology`);
     `None` builds the degenerate one-link-per-server topology around
@@ -835,9 +1129,21 @@ class Simulator:
 
     def __init__(self, specs: Sequence[ServerSpec],
                  bandwidth: Optional[BandwidthModel] = None,
-                 slot: Optional[float] = 0.5, seed: int = 0,
+                 slot: None = None, seed: int = 0,
                  bw_interval: float = 0.5,
-                 topology: Optional[LinkTopology] = None):
+                 topology: Optional[LinkTopology] = None,
+                 core: str = "array"):
+        if slot is not None:
+            raise ValueError(
+                f"slotted mode was removed: Simulator always runs "
+                f"event-driven now, so slot={slot!r} has no "
+                f"implementation. Drop the slot= argument (slot=None is "
+                f"accepted for compatibility); quantized-slot goldens "
+                f"were migrated to event-mode goldens.")
+        if core not in ("array", "reference"):
+            raise ValueError(f"core must be 'array' or 'reference', "
+                             f"got {core!r}")
+        self.core = core
         self.specs = list(specs)
         self.bandwidth = bandwidth or BandwidthModel()
         self.topology = topology \
@@ -856,6 +1162,8 @@ class Simulator:
         from repro.cluster.workload import N_CLASSES
         self.efficiency = rng.uniform(0.7, 1.0, (N_CLASSES, len(specs)))
         self.noise_rng = np.random.default_rng(seed + 1)
+        self._noise_buf: List[float] = []
+        self._noise_i = 0
 
     def run(self, services: List[ServiceRequest], scheduler,
             scenario: Union[Scenario, str, None] = None) -> SimResult:
@@ -879,46 +1187,21 @@ class Simulator:
             r.kv_blocks = 0
         if not services:
             return SimResult.empty(policy.name, len(self.specs))
-        if self.slot is not None \
-                and any(s.kv_blocks > 0 for s in self.specs) \
-                and any(r.prefix_id >= 0 for r in services):
-            raise NotImplementedError(
-                "shared-prefix workloads on KV-modeled servers need the "
-                "event-driven simulator (slot=None): the slotted runtime "
-                "keeps no page ledger to hold resident prefixes in")
 
-        if self.slot is not None:
-            rt: _SimRuntimeBase = _SlottedSimRuntime(self, policy)
-            self._seed_slotted(rt, services)
-        else:
-            rt = _EventSimRuntime(self, policy)
+        if self.core == "reference":
+            from repro.cluster.reference_sim import _ReferenceEventRuntime
+            rt: _SimRuntimeBase = _ReferenceEventRuntime(self, policy)
             for r in services:
                 rt.loop.push(Arrival(r.arrival, requests=(r,)))
+        else:
+            rt = _EventSimRuntime(self, policy)
+            rt.seed_arrivals(services)
         if scenario is not None:
             horizon = services[-1].arrival
             for ev in scenario.bandwidth_events(horizon, len(self.specs)):
                 rt.loop.push(ev)
         rt.drain()
         return self._aggregate(policy.name, services, rt)
-
-    def _seed_slotted(self, rt: _SimRuntimeBase,
-                      services: List[ServiceRequest]) -> None:
-        """Quantized arrivals: one batched Arrival event per non-empty
-        slot, grouped by the same boundary scan as the PR 1 slot loop (so
-        float-boundary membership is bit-identical)."""
-        idx = 0
-        ts = 0
-        while idx < len(services):
-            t0 = ts * self.slot
-            t1 = t0 + self.slot
-            batch = []
-            while idx < len(services) and services[idx].arrival < t1:
-                batch.append(services[idx])
-                idx += 1
-            if batch:
-                rt.loop.push(Arrival(t0, requests=tuple(batch),
-                                     slot_index=ts))
-            ts += 1
 
     def _aggregate(self, name: str, services: List[ServiceRequest],
                    rt: _SimRuntimeBase) -> SimResult:
@@ -971,8 +1254,8 @@ class Simulator:
         )
 
     # ------------------------------------------------------------------
-    # Shared physics: both execution modes realize requests with exactly
-    # these draws/formulas, so slot-vs-event comparisons measure the
+    # Shared physics: both cores realize requests with exactly these
+    # draws/formulas, so array-vs-reference comparisons measure the
     # *scheduling* semantics, never drifting cost models.
     # ------------------------------------------------------------------
     def _draw_infer(self, req: ServiceRequest, j: int,
@@ -988,7 +1271,19 @@ class Simulator:
         prefix. `alloc` stretches the window by 1/(freq × lane_share) —
         the DVFS tier slows the clock, a sub-unit lane share slices the
         lane."""
-        noise = float(self.noise_rng.lognormal(0.0, 0.08))
+        # draws are buffered: one bulk `lognormal(size=4096)` consumes the
+        # same RNG stream as 4096 sequential scalar draws (verified
+        # bit-identical, including across refills), at a fraction of the
+        # per-call overhead. The buffer lives on the Simulator, so draw
+        # sequences across multiple `run` calls also match the scalar path.
+        i = self._noise_i
+        buf = self._noise_buf
+        if i >= len(buf):
+            buf = self._noise_buf = \
+                self.noise_rng.lognormal(0.0, 0.08, 4096).tolist()
+            i = 0
+        noise = buf[i]
+        self._noise_i = i + 1
         nominal = (self.specs[j].decode_time(req.output_tokens) if resume
                    else self.specs[j].service_time(
                        req.prompt_tokens - prefix_tokens,
@@ -997,60 +1292,3 @@ class Simulator:
         if alloc is not None:
             t_inf /= alloc.freq(self.specs[j]) * alloc.lane_share
         return t_inf
-
-    def _realize(self, req: ServiceRequest, decision: Decision,
-                 states: List[ServerState], lane_free: List[List[float]],
-                 factors: List[float], *,
-                 links: Optional[Dict[str, float]] = None,
-                 path: Optional[Sequence[str]] = None) -> Outcome:
-        j = decision.server
-        spec = self.specs[j]
-        st = states[j]
-        # upload over the shared FIFO uplink; the runtime applies the
-        # Decision's dispatch deferral (e.g. FineInfer's batching windows).
-        # With a link ledger (`links` + the server's `path`) the transfer
-        # serializes on every link it traverses; the legacy per-server
-        # ledger (`st.uplink_free_at`) is the fallback and stays mirrored.
-        alloc = decision.alloc
-        dispatch = max(req.arrival, decision.defer_until)
-        free = st.uplink_free_at if links is None \
-            else max(links[name] for name in path)
-        tx_start = max(dispatch, free)
-        tx_dur = spec.tx_time(req.payload_bytes, factors[j] * alloc.bw_share)
-        if links is not None:
-            for name in path:
-                links[name] = tx_start + tx_dur
-        st.uplink_free_at = tx_start + tx_dur
-        ready = tx_start + tx_dur
-        # transmission energy accrues over the whole transfer window,
-        # including the congestion queue — "network congestion causes cloud
-        # servers to incur unnecessary energy costs" (paper §2.3); the
-        # transfer itself draws tx_power × bw_share (see the event runtime)
-        st.e_tx += (ready - req.arrival) * spec.tx_power \
-            - (1.0 - alloc.bw_share) * tx_dur * spec.tx_power
-        st.tx_busy_time += tx_dur
-
-        # batch lane with hidden efficiency + noise, stretched by the
-        # allocation (tier frequency × lane share)
-        lanes = lane_free[j]
-        li = int(np.argmin(lanes))
-        begin = max(ready, lanes[li])
-        t_inf = self._draw_infer(req, j, alloc=alloc)
-        finish = begin + t_inf
-        lanes[li] = finish
-        st.busy_time += t_inf / spec.max_concurrency
-        st.e_infer += spec.infer_energy(t_inf, tier=alloc.freq_tier,
-                                        lane_share=alloc.lane_share)
-        st.tokens_out += req.output_tokens
-        st.served += 1
-
-        req.finish = finish
-        req.server = j
-        proc = finish - req.arrival
-        return Outcome(
-            server=j, tx_time=(ready - req.arrival), queue_time=max(
-                begin - ready, 0.0), infer_time=t_inf, finish=finish,
-            processing_time=proc, success=proc <= req.deadline,
-            energy=tx_dur * spec.tx_power * alloc.bw_share
-            + spec.infer_energy(t_inf, tier=alloc.freq_tier,
-                                lane_share=alloc.lane_share))

@@ -100,7 +100,7 @@ NOMINAL = Allocation()
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Decision:
     """One request's placement + allocation, returned by
     `SchedulingPolicy.assign`.
@@ -357,9 +357,20 @@ class ClusterView:
         self.uplink_free_at[j] = start + dur
         ready = start + dur
         lanes = self.lane_free[j]
-        li = int(np.argmin(lanes))
-        begin = max(ready, lanes[li])
-        booked = self.predict_infer(req, j, alloc) * infer_scale
+        # first-occurrence min, same lane np.argmin picked; a plain loop
+        # skips the list->ndarray round-trip that dominated this method
+        li = 0
+        lane_min = lanes[0]
+        for k in range(1, len(lanes)):
+            if lanes[k] < lane_min:
+                li = k
+                lane_min = lanes[k]
+        begin = max(ready, lane_min)
+        # predict_infer, inlined (hot path: once per admitted request)
+        nominal = spec.service_time(req.prompt_tokens, req.output_tokens)
+        if alloc is not None:
+            nominal = nominal / (alloc.freq(spec) * alloc.lane_share)
+        booked = nominal * infer_scale
         lanes[li] = begin + booked
         if self.tier_load is not None:
             tier = -1 if alloc is None else alloc.freq_tier

@@ -123,7 +123,10 @@ class CSUCB:
         """Eq. 4: r = −E_norm + λ·f(y), with f(y) clipped into [−1, 0]
         (violations penalized, surplus slack not rewarded — see module
         docstring)."""
-        return -energy_norm + self.p.lam * float(np.clip(f_y, -1.0, 0.0))
+        f = f_y if f_y > -1.0 else -1.0
+        if f > 0.0:
+            f = 0.0
+        return -energy_norm + self.p.lam * f
 
     def update(self, cls: int, server: int, reward: float,
                violation_severity: float, tier: int = 0) -> None:

@@ -26,3 +26,11 @@ class _EventSimRuntime:
         # ledger leaks and the prefix entry can never be reclaimed
         self._kv_free(b.j, req.kv_blocks, t)
         req.kv_server, req.kv_blocks = -1, 0
+
+    def book_first_hop_only(self, j, end):
+        # BUG shape 3 (R1d, vectorized era): books only the first link
+        # of the path — neither a `for ... in path` loop, a whole-path
+        # index, nor a guarded single-link fast path
+        lk = self.topo.paths[j][0]
+        self.link_free[lk] = end
+

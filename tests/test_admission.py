@@ -67,15 +67,15 @@ def test_link_trace_invariant_to_cluster_size():
 
 def test_degenerate_topology_is_bit_exact_with_default():
     """Passing the explicit degenerate topology == passing none, in both
-    runtime modes (the golden guarantee the rewrite rides on)."""
+    event cores (the golden guarantee the rewrite rides on)."""
     specs = paper_testbed("llama2-7b")
     wl = generate_workload(300, seed=0)
-    for slot in (0.5, None):
+    for core in ("array", "reference"):
         results = []
         for explicit in (False, True):
             bw = BandwidthModel(fluctuating=True, seed=1)
             sim = Simulator(
-                specs, bw, slot=slot, seed=42,
+                specs, bw, seed=42, core=core,
                 topology=LinkTopology.degenerate(specs, bw)
                 if explicit else None)
             results.append(sim.run([copy.copy(s) for s in wl],
@@ -100,12 +100,12 @@ def test_shared_backhaul_serializes_cloud_transfers():
     assert topo.paths[cloud] == ["user-cloud", "edge-cloud"]
     sc = make_scenario("cloud-outage", scale=0.02, start_frac=0.0,
                        stop_frac=1.0)
-    for slot in (0.5, None):
+    for core in ("array", "reference"):
         wl = generate_workload(80, seed=4)
-        base = Simulator(specs, slot=slot, seed=3,
+        base = Simulator(specs, seed=3, core=core,
                          topology=LinkTopology.edge_cloud(specs)).run(
             [copy.copy(s) for s in wl], PinCloud())
-        degraded = Simulator(specs, slot=slot, seed=3,
+        degraded = Simulator(specs, seed=3, core=core,
                              topology=LinkTopology.edge_cloud(specs)).run(
             [copy.copy(s) for s in wl], PinCloud(), scenario=sc)
         assert degraded.avg_processing_time > 2 * base.avg_processing_time
@@ -159,10 +159,10 @@ def test_rejected_requests_consume_no_server_energy():
     served count, success False, and the rejected Outcome still reaches
     the policy's feedback with the SLO-violation cost."""
     specs = paper_testbed()
-    for slot in (0.5, None):
+    for core in ("array", "reference"):
         policy = RejectAll()
         wl = [copy.copy(s) for s in generate_workload(40, seed=2)]
-        res = Simulator(specs, slot=slot, seed=0).run(wl, policy)
+        res = Simulator(specs, seed=0, core=core).run(wl, policy)
         assert res.n_rejected == 40
         assert res.success_rate == 0.0
         assert res.e_tx == 0.0 and res.e_infer == 0.0
@@ -314,18 +314,13 @@ def test_preemption_requeues_remaining_tokens():
     assert victim_out.processing_time == pytest.approx(a.finish - a.arrival)
 
 
-def test_preemption_rejected_in_slotted_mode():
-    class AlwaysPreempt(SchedulingPolicy):
-        name = "always-preempt"
-
-        def assign(self, req, view):
-            return Decision(server=0, preempt_victim=999)
-
+def test_slotted_construction_rejected():
+    """Slotted mode is retired: a numeric `slot=` fails at construction
+    with a migration-pointing error, so a policy that relies on event
+    semantics (e.g. preemption) can never land in a quantized runtime."""
     spec = _one_lane_spec()
-    sim = Simulator([spec], slot=0.5, seed=0)
-    wl = [copy.copy(s) for s in generate_workload(3, seed=0)]
-    with pytest.raises(ValueError, match="event-driven"):
-        sim.run(wl, AlwaysPreempt())
+    with pytest.raises(ValueError, match="slotted mode was removed"):
+        Simulator([spec], slot=0.5, seed=0)
 
 
 def test_live_server_preempts_engine_slot():

@@ -207,7 +207,7 @@ def test_csucb_grid_select_respects_mask_and_returns_pair():
 # ---------------------------------------------------------------------------
 
 
-def _golden_pair(scenario=None, slot=0.5, n=400, kv_blocks=0,
+def _golden_pair(scenario=None, n=400, kv_blocks=0,
                  admission=False, preempt=False):
     """(single-tier reference, multi-tier-specs-pinned-nominal) SimResults
     plus per-request server choices, on identical seeds."""
@@ -219,7 +219,7 @@ def _golden_pair(scenario=None, slot=0.5, n=400, kv_blocks=0,
         wl = [copy.copy(s) for s in generate_workload(
             n, seed=0, scenario=scenario)]
         sim = Simulator(specs, BandwidthModel(fluctuating=True, seed=1),
-                        slot=slot, seed=42)
+                        seed=42)
         # reference: single-tier specs (default policy); candidate:
         # multi-tier specs with every decision pinned to the nominal tier
         pol = make_policy("perllm", len(specs), admission=admission,
@@ -231,11 +231,10 @@ def _golden_pair(scenario=None, slot=0.5, n=400, kv_blocks=0,
 
 
 @pytest.mark.parametrize("kw", [
-    dict(),                                             # PR-1/2 slotted
-    dict(slot=None),                                    # event mode
-    dict(slot=None, scenario="overload", admission=True,
+    dict(),                                             # plain event mode
+    dict(scenario="overload", admission=True,
          preempt=True),                                 # PR-3 semantics
-    dict(slot=None, scenario="kv-pressure", kv_blocks=48,
+    dict(scenario="kv-pressure", kv_blocks=48,
          admission=True, preempt=True),                 # PR-4 semantics
 ])
 def test_nominal_tier_bit_exact_golden(kw):

@@ -314,26 +314,12 @@ def test_view_prefix_hit_tokens_clips_to_own_full_blocks():
 # ---------------------------------------------------------------------------
 
 
-class _AlwaysMigrate(SchedulingPolicy):
-    name = "always-migrate"
-
-    def assign(self, req, view):
-        return Decision(server=0, migrate_kv=True)
-
-
-def test_slotted_mode_rejects_migration_decisions():
-    sim = Simulator(_kv_specs(), slot=0.5, seed=0)
-    reqs = generate_workload(3, seed=0)
-    with pytest.raises(NotImplementedError, match="migrate_kv"):
-        sim.run(reqs, _AlwaysMigrate())
-
-
-def test_slotted_mode_rejects_prefix_workloads():
-    sim = Simulator(_kv_specs(), slot=0.5, seed=0)
-    reqs = generate_workload(3, seed=0, scenario="shared-prefix")
-    assert any(r.prefix_id >= 0 for r in reqs)
-    with pytest.raises(NotImplementedError, match="shared-prefix"):
-        sim.run(reqs, make_policy("perllm", 2))
+def test_slotted_construction_rejected_for_kv_workloads():
+    """Slotted mode is retired; KV-sharing workloads always run on the
+    event cores, so the historical slotted rejections are now a single
+    construction-time error."""
+    with pytest.raises(ValueError, match="slotted mode was removed"):
+        Simulator(_kv_specs(), slot=0.5, seed=0)
 
 
 # ---------------------------------------------------------------------------

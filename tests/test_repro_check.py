@@ -139,6 +139,51 @@ def test_r1d_link_booking_outside_path_loop(tmp_path):
     assert fs[0].line == 4
 
 
+def test_r1d_vectorized_and_single_link_bookings_are_clean(tmp_path):
+    """The array-backed fast path's booking forms: a vectorized
+    whole-path index, `np.add.at` over path indices, and the guarded
+    single-link shortcut are all complete-path bookings."""
+    code = """
+        import numpy as np
+
+        class RT:
+            def book_vectorized(self, path_idx, end):
+                self.link_free[path_idx] = end
+
+            def book_add_at(self, path_idx, dur):
+                np.add.at(self.link_free, path_idx, dur)
+
+            def book_fast(self, j, end):
+                name = self._single_link[j]
+                if name is not None:
+                    self.link_free[name] = end
+                else:
+                    for lk in self.topo.paths[j]:
+                        self.link_free[lk] = end
+    """
+    assert run_on(tmp_path, {"cluster/network.py": code}, ["R1"]) == []
+
+
+def test_r1d_unguarded_single_link_and_scalar_add_at_flagged(tmp_path):
+    """The shortcut without the `is not None` guard (the name may not be
+    a whole path) and an `np.add.at` over a scalar link index are still
+    partial bookings."""
+    code = """
+        import numpy as np
+
+        class RT:
+            def book_unguarded(self, j, end):
+                name = self._single_link[j]
+                self.link_free[name] = end
+
+            def book_one_link(self, lk, dur):
+                np.add.at(self.link_free, lk, dur)
+    """
+    fs = run_on(tmp_path, {"cluster/network.py": code}, ["R1"])
+    assert len(fs) == 2
+    assert any("np.add.at" in f.message for f in fs)
+
+
 def test_r1_disable_comment_suppresses(tmp_path):
     code = """
         class RT:
@@ -369,6 +414,33 @@ def test_r4_clean_with_seeded_rng(tmp_path):
     assert run_on(tmp_path, {"repro/cluster/jitter.py": code}, ["R4"]) == []
 
 
+def test_r4_unseeded_generator_flagged_seeded_clean(tmp_path):
+    """`default_rng()` / `PCG64()` with no seed pull OS entropy; with an
+    explicit seed (or spawned substreams) the Generator idiom is fine."""
+    bad = """
+        import numpy as np
+
+        def jitter():
+            rng = np.random.default_rng()
+            gen = np.random.Generator(np.random.PCG64())
+            return rng.uniform() + gen.uniform()
+    """
+    fs = run_on(tmp_path, {"repro/cluster/jitter.py": bad}, ["R4"])
+    assert len(fs) == 2
+    assert all("unseeded" in f.message for f in fs)
+
+    good = """
+        import numpy as np
+
+        def jitter(seed):
+            rng = np.random.default_rng(seed)
+            gen = np.random.Generator(np.random.PCG64(seed + 1))
+            sub = rng.spawn(1)[0]
+            return rng.uniform() + gen.uniform() + sub.uniform()
+    """
+    assert run_on(tmp_path, {"repro/cluster/jitter.py": good}, ["R4"]) == []
+
+
 def test_r4_engine_exempt_and_suppression(tmp_path):
     files = {
         # engine is exempt by config: live serving may read the clock
@@ -409,13 +481,16 @@ def test_r5_disable_comment_suppresses(tmp_path):
 def test_pr6_regression_fixture_is_caught():
     """The committed pre-fix shape of the PR 6 orphaned-pages bug must
     keep tripping R1 — both the silent-reset and the missing-unpin
-    halves — and the CLI must exit non-zero on it."""
+    halves — plus the first-hop-only link booking (the shape the
+    vectorized fast path must never regress into), and the CLI must
+    exit non-zero on it."""
     fixture = REPO_ROOT / "tests" / "fixtures" / "repro_check"
     fs = run_paths([str(fixture)], rule_ids=["R1"], root=REPO_ROOT)
-    assert len(fs) == 2
+    assert len(fs) == 3
     assert any("kv_used" in f.message and "dispatch" in f.message
                for f in fs)
     assert any("prefix_pin" in f.message for f in fs)
+    assert any("link_free" in f.message for f in fs)
     proc = subprocess.run(
         [sys.executable, "-m", "tools.repro_check",
          "tests/fixtures/repro_check"],

@@ -1,10 +1,11 @@
-"""Event-driven runtime: golden slotted equivalence, event ordering,
-scenario hooks, and the live server's realized outcome semantics.
+"""Event-driven runtime: golden array-vs-reference equivalence, event
+ordering, scenario hooks, and the live server's realized outcome
+semantics.
 
-The golden test freezes the *PR 1 slotted loop* — a verbatim copy of the
-pre-redesign `Simulator.run` body — and checks that the event-loop
-simulator in slotted-compat mode (quantized batched `Arrival` events)
-reproduces its `SimResult` bit-for-bit on the seeded benchmark workload.
+The golden test runs the same seeded benchmark workload through the
+array-backed fast core (the default) and the scalar reference core
+(`core="reference"`, a verbatim copy of the pre-vectorization event
+runtime) and checks that the `SimResult`s agree bit-for-bit.
 """
 import copy
 import math
@@ -14,76 +15,15 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.cluster import (
-    BandwidthModel, ClusterView, ServerState, Simulator, generate_workload,
-    paper_testbed,
+    BandwidthModel, Simulator, generate_workload, paper_testbed,
 )
 from repro.cluster.workload import classify
 from repro.core import (
     Arrival, BandwidthChange, Decision, Deferred, EventLoop, InferDone,
     SchedulingPolicy, TxDone, available_scenarios,
-    drive_slot, make_policy, make_scenario,
+    make_policy, make_scenario,
 )
 from repro.core.runtime import TraceScenario
-
-
-# ---------------------------------------------------------------------------
-# Frozen PR 1 slotted loop (reference implementation, verbatim)
-# ---------------------------------------------------------------------------
-
-
-def _pr1_slotted_run(sim, services, scheduler):
-    """The pre-redesign `Simulator.run` slot loop, frozen for comparison."""
-    policy = scheduler
-    specs = sim.specs
-    states = [ServerState(spec=s) for s in specs]
-    lane_free = [[0.0] * s.max_concurrency for s in specs]
-    outcomes = []
-
-    services = sorted(services, key=lambda r: r.arrival)
-    for r in services:
-        r.class_id = classify(r)
-        r.finish = -1.0
-        r.server = -1
-    horizon_slots = int(math.ceil(services[-1].arrival / sim.slot)) + 1
-
-    idx = 0
-    for ts in range(horizon_slots):
-        t0 = ts * sim.slot
-        t1 = t0 + sim.slot
-        arrivals = []
-        while idx < len(services) and services[idx].arrival < t1:
-            arrivals.append(services[idx])
-            idx += 1
-        if not arrivals:
-            continue
-        factors = [sim.bandwidth.factor(ts, j) for j in range(len(specs))]
-        view = ClusterView(
-            t=t0, specs=specs, bw_factor=list(factors),
-            uplink_free_at=[st_.uplink_free_at for st_ in states],
-            lane_free=[list(lf) for lf in lane_free],
-        )
-        decisions = drive_slot(policy, arrivals, view, ts)
-        for req, d in zip(arrivals, decisions, strict=True):
-            out = sim._realize(req, d, states, lane_free, factors)
-            outcomes.append(out)
-            policy.feedback(req, out)
-
-    makespan = max(o.finish for o in outcomes)
-    for st_ in states:
-        st_.finalize_idle(makespan)
-    times = np.array([o.processing_time for o in outcomes])
-    succ = np.array([o.success for o in outcomes])
-    return {
-        "success_rate": float(np.mean(succ)),
-        "avg_processing_time": float(np.mean(times)),
-        "p95_processing_time": float(np.percentile(times, 95)),
-        "makespan": float(makespan),
-        "e_tx": sum(st_.e_tx for st_ in states),
-        "e_infer": sum(st_.e_infer for st_ in states),
-        "e_idle": sum(st_.e_idle for st_ in states),
-        "per_server_served": [st_.served for st_ in states],
-        "servers": [r.server for r in sorted(services, key=lambda r: r.sid)],
-    }
 
 
 # Seeded benchmark workload parameters (benchmarks/common.py at smoke scale)
@@ -93,17 +33,17 @@ _BENCH = dict(edge="llama2-7b", n=400, wl_seed=0, bw_seed=1, sim_seed=42)
 @pytest.mark.parametrize("policy_name,fluctuating", [
     ("perllm", True), ("perllm", False), ("fineinfer", True),
 ])
-def test_golden_slotted_compat_bit_exact(policy_name, fluctuating):
-    """Event-loop simulator in slotted-compat mode == PR 1 slot loop,
-    bit-for-bit, on the seeded benchmark workload."""
+def test_golden_array_core_bit_exact(policy_name, fluctuating):
+    """Array-backed fast core == scalar reference core, bit-for-bit, on
+    the seeded benchmark workload."""
     specs = paper_testbed(_BENCH["edge"])
     services = generate_workload(_BENCH["n"], seed=_BENCH["wl_seed"])
 
     sim_ref = Simulator(specs, BandwidthModel(fluctuating=fluctuating,
                                               seed=_BENCH["bw_seed"]),
-                        seed=_BENCH["sim_seed"])
-    ref = _pr1_slotted_run(sim_ref, [copy.copy(s) for s in services],
-                           make_policy(policy_name, len(specs)))
+                        seed=_BENCH["sim_seed"], core="reference")
+    ref_services = [copy.copy(s) for s in services]
+    ref = sim_ref.run(ref_services, make_policy(policy_name, len(specs)))
 
     sim_new = Simulator(specs, BandwidthModel(fluctuating=fluctuating,
                                               seed=_BENCH["bw_seed"]),
@@ -111,16 +51,26 @@ def test_golden_slotted_compat_bit_exact(policy_name, fluctuating):
     new_services = [copy.copy(s) for s in services]
     res = sim_new.run(new_services, make_policy(policy_name, len(specs)))
 
-    assert res.success_rate == ref["success_rate"]
-    assert res.avg_processing_time == ref["avg_processing_time"]
-    assert res.p95_processing_time == ref["p95_processing_time"]
-    assert res.makespan == ref["makespan"]
-    assert res.e_tx == ref["e_tx"]
-    assert res.e_infer == ref["e_infer"]
-    assert res.e_idle == ref["e_idle"]
-    assert res.per_server_served == ref["per_server_served"]
+    assert res.success_rate == ref.success_rate
+    assert res.avg_processing_time == ref.avg_processing_time
+    assert res.p95_processing_time == ref.p95_processing_time
+    assert res.makespan == ref.makespan
+    assert res.e_tx == ref.e_tx
+    assert res.e_infer == ref.e_infer
+    assert res.e_idle == ref.e_idle
+    assert res.per_server_served == ref.per_server_served
     assert [r.server for r in sorted(new_services, key=lambda r: r.sid)] \
-        == ref["servers"]
+        == [r.server for r in sorted(ref_services, key=lambda r: r.sid)]
+
+
+def test_numeric_slot_rejected_with_clear_error():
+    """The quantized-slot compat mode is retired: pinning a numeric
+    `slot=` must fail loudly, pointing at the migration."""
+    specs = paper_testbed(n_edge=1)
+    with pytest.raises(ValueError, match="slotted mode was removed"):
+        Simulator(specs, slot=0.5)
+    # slot=None (the old way to request event mode) stays accepted
+    assert Simulator(specs, slot=None).slot is None
 
 
 # ---------------------------------------------------------------------------
@@ -212,40 +162,27 @@ def test_event_ordering_fifo_uplink(t_first, t_second):
 
 
 def test_event_mode_views_are_fresh_per_arrival():
-    """Each arrival is scheduled against a view at its true timestamp (the
-    slotted runtime quantizes to slot boundaries)."""
+    """Each arrival is scheduled against a view at its true timestamp
+    (nothing quantizes arrivals to a grid)."""
     specs = paper_testbed()
     services = [copy.copy(s) for s in generate_workload(40, seed=2)]
     pin = _PinTo0()
-    Simulator(specs, slot=None, seed=1).run(services, pin)
+    Simulator(specs, seed=1).run(services, pin)
     arrivals = {r.sid: r.arrival for r in services}
     assert all(t == arrivals[sid] for sid, t in pin.assign_log)
 
-    pin2 = _PinTo0()
-    Simulator(specs, slot=0.5, seed=1).run(
-        [copy.copy(s) for s in generate_workload(40, seed=2)], pin2)
-    assert all(t == round(t / 0.5) * 0.5 or t % 0.5 == 0.0
-               for _sid, t in pin2.assign_log)
-
 
 def test_event_mode_feedback_at_true_completion():
-    """In event mode the learner hears about a request only when it
-    actually finishes — a later arrival can be assigned first."""
+    """The learner hears about a request only when it actually finishes —
+    a later arrival can be assigned first."""
     specs = paper_testbed(n_edge=1)
-    a, b = _two_requests(0.1, 0.9)    # different slots, a finishes > 0.9
+    a, b = _two_requests(0.1, 0.9)    # a finishes > 0.9, after b arrives
     a.prompt_tokens, a.output_tokens = 2048, 96
     policy = _PinTo0()
-    Simulator(specs, slot=None, seed=0).run([a, b], policy)
+    Simulator(specs, seed=0).run([a, b], policy)
     assert [sid for sid, _ in policy.assign_log] == [a.sid, b.sid]
-    # a's feedback arrived after b was assigned (interleaved timeline) —
-    # under slotted semantics a's feedback precedes b's slot
+    # a's feedback arrived after b was assigned (interleaved timeline)
     assert policy.feedback_log[0][1].finish > 0.9
-
-    policy2 = _PinTo0()
-    a2, b2 = _two_requests(0.1, 0.9)
-    a2.prompt_tokens, a2.output_tokens = 2048, 96
-    Simulator(specs, slot=0.5, seed=0).run([a2, b2], policy2)
-    assert [sid for sid, _ in policy2.assign_log] == [a2.sid, b2.sid]
 
 
 def test_deferral_applied_by_event_runtime():
@@ -334,11 +271,11 @@ def test_bwdrop_scenario_degrades_the_dropped_link():
     events = sc.bandwidth_events(10.0, len(specs))
     assert [ev.scale for ev in events] == [{cloud: 0.25}, {cloud: 1.0}]
 
-    for slot in (0.5, None):
+    for core in ("array", "reference"):
         services = [copy.copy(s) for s in generate_workload(150, seed=4)]
-        base = Simulator(specs, slot=slot, seed=3).run(services, PinCloud())
+        base = Simulator(specs, seed=3, core=core).run(services, PinCloud())
         services = [copy.copy(s) for s in generate_workload(150, seed=4)]
-        dropped = Simulator(specs, slot=slot, seed=3).run(
+        dropped = Simulator(specs, seed=3, core=core).run(
             services, PinCloud(), scenario=sc)
         assert dropped.avg_processing_time > base.avg_processing_time
         assert dropped.e_tx > base.e_tx

@@ -1,0 +1,64 @@
+"""Property test: the array-backed fast core is result-identical to the
+scalar reference core on randomized small workloads.
+
+The PR-8 vectorization rebuilt `_EventSimRuntime` around array ledgers,
+a flat event heap, and lazily-built views; `core="reference"` keeps the
+original scalar event loop (`cluster/reference_sim.py`) as the readable
+spec. The seeded golden in `test_runtime.py` pins one benchmark
+workload; this file sweeps randomized (n, rate, seeds, testbed size,
+bandwidth mode, policy) corners so a fast-path divergence that happens
+to cancel on the golden still gets caught.
+"""
+import copy
+
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (
+    BandwidthModel, Simulator, generate_workload, paper_testbed,
+)
+from repro.core import make_policy
+
+
+def _run(core, specs, services, policy_name, fluctuating, bw_seed,
+         sim_seed):
+    sim = Simulator(specs,
+                    BandwidthModel(fluctuating=fluctuating, seed=bw_seed),
+                    seed=sim_seed, core=core)
+    svcs = [copy.copy(s) for s in services]
+    res = sim.run(svcs, make_policy(policy_name, len(specs)))
+    return res, svcs
+
+
+@given(
+    n=st.integers(1, 120),
+    rate=st.sampled_from([2.0, 10.0, 50.0]),
+    wl_seed=st.integers(0, 1000),
+    bw_seed=st.integers(0, 1000),
+    sim_seed=st.integers(0, 1000),
+    n_edge=st.integers(1, 6),
+    fluctuating=st.sampled_from([False, True]),
+    policy_name=st.sampled_from(["perllm", "fineinfer", "agod"]),
+)
+@settings(max_examples=12, deadline=None)
+def test_array_core_matches_reference_on_random_workloads(
+        n, rate, wl_seed, bw_seed, sim_seed, n_edge, fluctuating,
+        policy_name):
+    specs = paper_testbed(n_edge=n_edge)
+    services = generate_workload(n, rate=rate, seed=wl_seed)
+
+    ref, ref_svcs = _run("reference", specs, services, policy_name,
+                         fluctuating, bw_seed, sim_seed)
+    res, new_svcs = _run("array", specs, services, policy_name,
+                         fluctuating, bw_seed, sim_seed)
+
+    assert res.success_rate == ref.success_rate
+    assert res.avg_processing_time == ref.avg_processing_time
+    assert res.p95_processing_time == ref.p95_processing_time
+    assert res.makespan == ref.makespan
+    assert res.e_tx == ref.e_tx
+    assert res.e_infer == ref.e_infer
+    assert res.e_idle == ref.e_idle
+    assert res.per_server_served == ref.per_server_served
+    key = lambda r: r.sid  # noqa: E731
+    assert [r.server for r in sorted(new_svcs, key=key)] \
+        == [r.server for r in sorted(ref_svcs, key=key)]

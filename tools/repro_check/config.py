@@ -35,6 +35,13 @@ DEFAULT_CONFIG = {
             "serving/perllm_server.py",
         ],
         "link_ledger_names": ["link_free", "links", "free_at"],
+        # single-link maps: `name = self._single_link[j]` + an
+        # `if name is not None:` guard marks a one-link path whose
+        # direct booking covers the whole path by construction
+        "single_link_names": ["_single_link"],
+        # index-expression substrings that mark a vectorized whole-path
+        # booking (`link_free[path_idx] += ...`, `np.add.at(...)`)
+        "path_index_markers": ["path"],
         # attribute names that form the claim record; resetting them to
         # the sentinel without releasing is an orphan
         "claim_resets": {"kv_server": -1, "kv_blocks": 0},
@@ -66,26 +73,19 @@ DEFAULT_CONFIG = {
         "dispatch_table": "_HANDLERS",
         # concrete runtimes that must handle (or be exempted from) every
         # event in the dispatch table
-        "runtimes": ["_SlottedSimRuntime", "_EventSimRuntime",
+        "runtimes": ["_EventSimRuntime", "_ReferenceEventRuntime",
                      "PerLLMServer"],
         # handler -> reason; a `pass`-inherited handler is fine only if
         # listed here (silent drops must be deliberate)
         "exemptions": {
-            "_SlottedSimRuntime": {
-                "on_tx_done": "slotted mode realizes tx synchronously "
-                              "in Simulator._realize",
-                "on_infer_start": "slotted mode realizes inference "
-                                  "synchronously in Simulator._realize",
-                "on_infer_done": "slotted mode realizes inference "
-                                 "synchronously in Simulator._realize",
-                "on_preempt": "slotted decisions cannot preempt "
-                              "(rejected at decision time)",
-                "on_kv_migrate": "slotted decisions cannot migrate KV "
-                                 "(rejected at decision time)",
-            },
             "_EventSimRuntime": {
                 "on_infer_start": "event sim schedules InferDone "
                                   "directly; InferStart is never pushed",
+            },
+            "_ReferenceEventRuntime": {
+                "on_infer_start": "reference core mirrors the event sim: "
+                                  "InferDone is scheduled directly and "
+                                  "InferStart is never pushed",
             },
             "PerLLMServer": {
                 "on_infer_done": "live server detects completions inside "
@@ -120,8 +120,14 @@ DEFAULT_CONFIG = {
         # builders per group: files scanned for ClusterView(...) calls;
         # helpers are functions whose returned dict keys also count
         # (they are splatted into the call via **kwargs)
+        # the event-simulator group's keyword-constructed ClusterView
+        # lives in the reference core; the array core materializes the
+        # same view from its ledger arrays (`ClusterView.__new__` +
+        # wholesale `__dict__` fill, invisible to this AST scan) and is
+        # pinned field-for-field to the reference by the golden and
+        # property equivalence tests
         "view_builders": {
-            "event-simulator": ["cluster/simulator.py"],
+            "event-simulator": ["cluster/reference_sim.py"],
             "live-server": ["serving/perllm_server.py"],
         },
         "view_helpers": {"cluster/network.py": ["link_view_kwargs"]},
@@ -141,6 +147,9 @@ DEFAULT_CONFIG = {
                       "perf_counter_ns", "time_ns", "monotonic_ns"],
         "np_random_allowed": ["default_rng", "Generator", "SeedSequence",
                               "PCG64", "Philox", "BitGenerator"],
+        # Generator constructors that must receive an explicit seed —
+        # called empty they pull OS entropy (nondeterministic streams)
+        "seeded_ctors": ["default_rng", "PCG64", "Philox"],
     },
     # ------------------------------------------------------------------
     # R5 — unit-suffix arithmetic

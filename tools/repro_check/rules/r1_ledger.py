@@ -24,8 +24,14 @@ R1c  in refcount files, a path with a net-positive refcount charge that
      ends in a constant return (None/False — i.e. "I failed") leaked
      the charge.
 R1d  every subscript store to a link ledger (``link_free``/``links``/
-     ``free_at``) must sit inside a ``for ... in <path>`` loop so the
-     booking covers the whole path, not one link.
+     ``free_at``) must cover the whole path, not one link. Accepted
+     whole-path forms: a store inside a ``for ... in <path>`` loop; a
+     vectorized store / ``np.add.at`` whose index expression mentions
+     the path (``link_free[path_idx] = ...``); and the single-link fast
+     path — a store indexed by a name assigned from a configured
+     single-link map (``name = self._single_link[j]``) under an
+     ``if name is not None:`` guard, where a one-link path *is* the
+     whole path by construction.
 """
 from __future__ import annotations
 
@@ -327,21 +333,42 @@ def _check_function(fn, sf: SourceFile, cfg: dict, findings: List[Finding],
 def _check_link_bookings(sf: SourceFile, cfg: dict,
                          findings: List[Finding]) -> None:
     ledgers = set(cfg["link_ledger_names"])
+    singles = set(cfg.get("single_link_names", []))
+    markers = list(cfg.get("path_index_markers", ["path"]))
+
+    def _unparse(node) -> str:
+        try:
+            return ast.unparse(node)
+        except Exception:
+            return ""
 
     class V(ast.NodeVisitor):
         def __init__(self):
             self.loop_iters: List[str] = []
-
-        def _iter_text(self, node) -> str:
-            try:
-                return ast.unparse(node.iter)
-            except Exception:
-                return ""
+            # names assigned from a single-link map (`n = _single_link[j]`)
+            self.single_names: set = set()
+            # names currently guarded by `if <name> is not None:`
+            self.not_none: List[str] = []
 
         def visit_For(self, node):
-            self.loop_iters.append(self._iter_text(node))
+            self.loop_iters.append(_unparse(node.iter))
             self.generic_visit(node)
             self.loop_iters.pop()
+
+        def visit_If(self, node):
+            info = _test_info(node.test)
+            self.visit(node.test)
+            guard = None
+            if info is not None and info[0] == "none" and not info[2]:
+                guard = info[1]          # `x is not None` — body branch
+            if guard is not None:
+                self.not_none.append(guard)
+            for st in node.body:
+                self.visit(st)
+            if guard is not None:
+                self.not_none.pop()
+            for st in node.orelse:
+                self.visit(st)
 
         def _store_name(self, tgt) -> Optional[str]:
             if not isinstance(tgt, ast.Subscript):
@@ -351,24 +378,69 @@ def _check_link_bookings(sf: SourceFile, cfg: dict,
                 (v.id if isinstance(v, ast.Name) else None)
             return name if name in ledgers else None
 
+        def _index_ok(self, idx) -> bool:
+            # vectorized whole-path booking: the index expression itself
+            # names the path (`link_free[path_idx] = ...`)
+            text = _unparse(idx)
+            if any(m in text for m in markers):
+                return True
+            # single-link fast path: index assigned from a single-link
+            # map and proven non-None — a one-link path is the whole path
+            return isinstance(idx, ast.Name) \
+                and idx.id in self.single_names \
+                and idx.id in self.not_none
+
         def _check(self, tgt, line):
             name = self._store_name(tgt)
             if name is None:
                 return
-            if not any("path" in it for it in self.loop_iters):
-                findings.append(Finding(
-                    sf.relpath, line, RULE_ID,
-                    f"link ledger `{name}[...]` booked outside a "
-                    f"`for ... in <path>` loop — a booking must cover "
-                    f"every link on the path"))
+            if any("path" in it for it in self.loop_iters):
+                return
+            if self._index_ok(tgt.slice):
+                return
+            findings.append(Finding(
+                sf.relpath, line, RULE_ID,
+                f"link ledger `{name}[...]` booked outside a "
+                f"`for ... in <path>` loop — a booking must cover "
+                f"every link on the path"))
 
         def visit_Assign(self, node):
+            if len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Subscript):
+                v = node.value.value
+                base = v.attr if isinstance(v, ast.Attribute) else \
+                    (v.id if isinstance(v, ast.Name) else None)
+                if base in singles:
+                    self.single_names.add(node.targets[0].id)
             for tgt in node.targets:
                 self._check(tgt, node.lineno)
             self.generic_visit(node)
 
         def visit_AugAssign(self, node):
             self._check(node.target, node.lineno)
+            self.generic_visit(node)
+
+        def visit_Call(self, node):
+            # vectorized booking via `np.add.at(ledger, idx, dur)` — the
+            # ufunc form of `ledger[idx] += dur`; same whole-path rule
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "at" \
+                    and isinstance(f.value, ast.Attribute) \
+                    and isinstance(f.value.value, ast.Name) \
+                    and f.value.value.id in ("np", "numpy") \
+                    and len(node.args) >= 2:
+                tgt = node.args[0]
+                name = tgt.attr if isinstance(tgt, ast.Attribute) else \
+                    (tgt.id if isinstance(tgt, ast.Name) else None)
+                if name in ledgers \
+                        and not any("path" in it for it in self.loop_iters) \
+                        and not self._index_ok(node.args[1]):
+                    findings.append(Finding(
+                        sf.relpath, node.lineno, RULE_ID,
+                        f"link ledger `{name}` booked via np.{f.value.attr}"
+                        f".at without indexing the whole path — a booking "
+                        f"must cover every link on the path"))
             self.generic_visit(node)
 
     V().visit(sf.tree)

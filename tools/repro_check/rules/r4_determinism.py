@@ -6,7 +6,11 @@ the configured scope, flag:
 - wall-clock reads (``time.time()`` & friends),
 - the process-global RNGs (``np.random.<legacy>``, stdlib
   ``random.*``) — per-stream seeded generators
-  (``np.random.default_rng(...)``) are fine,
+  (``np.random.default_rng(seed)``) are fine,
+- *unseeded* ``Generator`` construction — ``np.random.default_rng()``
+  or a bit generator (``PCG64()``/``Philox()``/...) called with no
+  arguments pulls OS entropy, so results stop being a function of
+  the seed,
 - iteration over unordered sets (literal ``{...}``, ``set(...)`` calls,
   set comprehensions) whose order would leak hash randomization into
   event order.
@@ -38,6 +42,8 @@ def check(files: List[SourceFile], config: dict) -> List[Finding]:
     findings: List[Finding] = []
     wallclock = set(cfg["wallclock"])
     np_ok = set(cfg["np_random_allowed"])
+    seeded_ctors = set(cfg.get("seeded_ctors",
+                               ["default_rng", "PCG64", "Philox"]))
     for sf in files:
         if not any(s in sf.relpath for s in cfg["scope"]):
             continue
@@ -55,6 +61,20 @@ def check(files: List[SourceFile], config: dict) -> List[Finding]:
                         f"wall-clock read time.{f.attr}() in "
                         f"deterministic scope — derive times from the "
                         f"event clock"))
+                # unseeded Generator construction: default_rng() or a
+                # bit generator with no arguments draws OS entropy
+                ctor = None
+                if isinstance(f, ast.Attribute) and f.attr in seeded_ctors:
+                    ctor = f.attr
+                elif isinstance(f, ast.Name) and f.id in seeded_ctors:
+                    ctor = f.id
+                if ctor is not None and not node.args \
+                        and not node.keywords:
+                    findings.append(Finding(
+                        sf.relpath, node.lineno, RULE_ID,
+                        f"unseeded {ctor}() in deterministic scope — "
+                        f"pass an explicit seed so the Generator stream "
+                        f"is reproducible"))
                 # stdlib random.X(...)
                 if isinstance(f, ast.Attribute) and \
                         isinstance(f.value, ast.Name) and \
