@@ -103,6 +103,42 @@ def run_point(kind: str, n: int, specs) -> dict:
     }
 
 
+def trace_overhead_point(n: int, specs) -> dict:
+    """Interleaved probe runs at the gated N, untraced vs traced
+    (alternating pairs so clock drift hits both sides equally; min of 7
+    each after a warmup): ``trace_overhead_ratio`` is the recorder's
+    hot-path cost on top of the event core, gated in CI at +10% over
+    the untraced ``us_per_arrival``."""
+    from repro.obs import TraceRecorder
+
+    def one(trace):
+        services = generate_workload(n, rate=RATE, seed=WL_SEED)
+        sim = Simulator(specs)
+        policy = _make_policy("probe", len(specs))
+        t0 = time.perf_counter()
+        sim.run(services, policy, trace=trace)
+        return time.perf_counter() - t0
+
+    one(None)                                   # warmup
+    base_walls, traced_walls, rows, dropped = [], [], 0, 0
+    for _ in range(7):
+        base_walls.append(one(None))
+        rec = TraceRecorder()
+        traced_walls.append(one(rec))
+        rows, dropped = len(rec), rec.dropped
+    base, traced = min(base_walls), min(traced_walls)
+    return {
+        "wall_s": round(traced, 3),
+        "metrics": {
+            "trace_overhead_ratio": traced / base,
+            "us_per_arrival": base / n * 1e6,
+            "traced_us_per_arrival": traced / n * 1e6,
+            "trace_rows": rows,
+            "trace_rows_dropped": dropped,
+        },
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Event-core scale sweep (us/arrival + peak RSS).")
@@ -114,6 +150,10 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write results as compare_baseline-schema JSON "
                          "(the CI scale-gate artifact)")
+    ap.add_argument("--trace-overhead-n", type=int, default=10_000,
+                    metavar="N",
+                    help="N for the traced-vs-untraced probe overhead "
+                         "point (0 disables; skipped when N > --max-n)")
     args = ap.parse_args(argv)
     kinds = [k for k in args.policies.split(",") if k]
     bad = [k for k in kinds if k not in ("probe", "perllm")]
@@ -138,6 +178,17 @@ def main(argv=None) -> int:
             print(f"  {name:24s} {m['us_per_arrival']:8.1f} "
                   f"{m['wl_us_per_arrival']:9.2f} {point['wall_s']:8.2f} "
                   f"{m['peak_rss_mb']:7.0f} {m['success_rate']:8.4f}")
+    n_tr = args.trace_overhead_n
+    if "probe" in kinds and 0 < n_tr <= args.max_n:
+        point = trace_overhead_point(n_tr, specs)
+        name = f"scale_probe_traced_n{n_tr}"
+        out[name] = point
+        m = point["metrics"]
+        print(f"  {name:24s} traced {m['traced_us_per_arrival']:.1f} "
+              f"vs {m['us_per_arrival']:.1f} us/arr -> overhead ratio "
+              f"{m['trace_overhead_ratio']:.3f} "
+              f"({m['trace_rows']} rows, {m['trace_rows_dropped']} "
+              f"dropped)")
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(out, fh, indent=2, sort_keys=True)

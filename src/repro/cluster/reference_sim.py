@@ -24,6 +24,7 @@ from repro.cluster.simulator import (
 )
 from repro.cluster.workload import ServiceRequest
 from repro.core.api import ClusterView, Decision, RunningTask
+from repro.obs.trace import KIND_MIGRATE, KIND_PREEMPT
 from repro.core.runtime import (
     Arrival, BandwidthChange, InferDone, KvMigrate, Preempt, Reject, TxDone,
 )
@@ -41,8 +42,8 @@ class _ReferenceEventRuntime(_SimRuntimeBase):
     views their `running` tasks and `Preempt` a victim ledger to roll back.
     """
 
-    def __init__(self, sim: "Simulator", policy) -> None:
-        super().__init__(sim, policy)
+    def __init__(self, sim: "Simulator", policy, trace=None) -> None:
+        super().__init__(sim, policy, trace=trace)
         self._link_factors: Dict[str, float] = \
             {n: 1.0 for n in self.topo.links}
         self._inflight: Dict[int, _Booking] = {}
@@ -267,6 +268,8 @@ class _ReferenceEventRuntime(_SimRuntimeBase):
         if self.kv_used[j] + need > spec.kv_blocks \
                 or (self.kv_wait[j] and not (from_wait or express)):
             self.kv_wait[j].append((req, decision))
+            if self.trace is not None:
+                self._kv_wait_since.setdefault(req.sid, t)
             return False
         self.kv_used[j] += need
         req.kv_server, req.kv_blocks = j, need
@@ -315,6 +318,8 @@ class _ReferenceEventRuntime(_SimRuntimeBase):
                                   from_wait=_from_kv_wait):
                 return                       # waiting on KV blocks
             prefix_saved = self._prefix_saved.pop(req.sid, 0)
+        if self.trace is not None and (kv_resumed or self._kv_wait_since):
+            self._trace_dispatch_kv(t, req, j, kv_resumed)
         alloc = decision.alloc
         tx_start = max(t, self.topo.path_free_at(j, self.link_free))
         # a sub-unit bandwidth share stretches the transfer by 1/share and
@@ -405,6 +410,11 @@ class _ReferenceEventRuntime(_SimRuntimeBase):
         st.tx_busy_time += end - start
         self.n_kv_migrations += 1
         self.kv_migrated_bytes += n_bytes
+        if self.trace is not None:
+            self.trace.append(KIND_MIGRATE, req.sid, t, end, j,
+                              req.class_id, 0,
+                              (end - t) * src_spec.tx_power, n_bytes,
+                              self.trace.intern(f"{src}->{j}"))
         self.loop.push(KvMigrate(end, request=req, decision=decision,
                                  context=(src, req.kv_blocks, j, need)))
         return True
@@ -478,12 +488,14 @@ class _ReferenceEventRuntime(_SimRuntimeBase):
         spec = self.specs[b.j]
         st = self.states[b.j]
         lanes[b.li] = b.lane_prev if t <= b.begin else t
+        e_waste = 0.0
         if t > b.begin:
             # wasted partial decode: the server burned real energy on it,
             # at the victim's allocated tier/share
             done = min(t, b.finish) - b.begin
-            st.e_infer += spec.infer_energy(done, tier=b.alloc.freq_tier,
-                                            lane_share=b.alloc.lane_share)
+            e_waste = spec.infer_energy(done, tier=b.alloc.freq_tier,
+                                        lane_share=b.alloc.lane_share)
+            st.e_infer += e_waste
             st.busy_time += done / spec.max_concurrency
             frac_left = max(b.finish - t, 0.0) / b.t_inf
             remaining = max(1, int(math.ceil(req.output_tokens * frac_left)))
@@ -513,6 +525,13 @@ class _ReferenceEventRuntime(_SimRuntimeBase):
         req.output_tokens = remaining
         req.preemptions += 1
         self.n_preempted += 1
+        if self.trace is not None:
+            # span covers the wasted decode window (a point at t when the
+            # victim had not yet begun); value = tokens left to requeue
+            self.trace.append(KIND_PREEMPT, req.sid,
+                              b.begin if t > b.begin else t, t, b.j,
+                              req.class_id, b.alloc.freq_tier, e_waste,
+                              float(remaining), b.li)
         self.loop.push(Arrival(t, requests=(req,)))
 
     def on_infer_done(self, ev: InferDone) -> None:
@@ -525,8 +544,9 @@ class _ReferenceEventRuntime(_SimRuntimeBase):
         st = self.states[b.j]
         finish = ev.time
         st.busy_time += b.t_inf / spec.max_concurrency
-        st.e_infer += spec.infer_energy(b.t_inf, tier=b.alloc.freq_tier,
-                                        lane_share=b.alloc.lane_share)
+        e_inf = spec.infer_energy(b.t_inf, tier=b.alloc.freq_tier,
+                                  lane_share=b.alloc.lane_share)
+        st.e_infer += e_inf
         st.tokens_out += req.output_tokens
         st.served += 1
         if spec.kv_blocks > 0 and req.kv_blocks > 0:
@@ -549,8 +569,11 @@ class _ReferenceEventRuntime(_SimRuntimeBase):
             queue_time=max(b.begin - b.ready, 0.0), infer_time=b.t_inf,
             finish=finish, processing_time=proc,
             success=proc <= req.deadline,
-            energy=b.tx_dur * spec.tx_power * b.alloc.bw_share
-            + spec.infer_energy(b.t_inf, tier=b.alloc.freq_tier,
-                                lane_share=b.alloc.lane_share))
+            energy=b.tx_dur * spec.tx_power * b.alloc.bw_share + e_inf)
         self.outcomes.append(out)
+        if self.trace is not None:
+            self._trace_complete(req, b.j, b.li, b.alloc.freq_tier,
+                                 b.ready, b.begin, finish,
+                                 b.tx_dur * spec.tx_power
+                                 * b.alloc.bw_share, e_inf, out.success)
         self.policy.feedback(req, out)

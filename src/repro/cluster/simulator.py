@@ -65,6 +65,11 @@ from repro.core.runtime import (
     Arrival, BandwidthChange, EventLoop, InferDone, KvMigrate, Preempt,
     Reject, Runtime, Scenario, TxDone, make_scenario,
 )
+from repro.obs.metrics import MetricsRegistry, counter_attr, with_aliases
+from repro.obs.trace import (
+    KIND_ARRIVAL, KIND_DECISION, KIND_KV_WAIT, KIND_MIGRATE,
+    KIND_PREEMPT, KIND_REJECT, KIND_RESUME,
+)
 
 
 @dataclasses.dataclass(slots=True)
@@ -105,6 +110,16 @@ class SimResult:
     n_kv_orphaned: int = 0               # cross-server requeues that abandoned pages
     n_kv_migrations: int = 0             # page transfers shipped between servers
     kv_migrated_bytes: float = 0.0       # bytes those transfers put on the links
+    # directly accumulated prompt+output tokens of served requests (the
+    # exact integer `throughput_tokens_per_s * makespan` reconstructs
+    # lossily); 0 only for empty runs and legacy-constructed results
+    served_tokens: int = 0
+
+    # `metrics` (a repro.obs.MetricsRegistry, attached by `_aggregate`)
+    # is a plain attribute, not a dataclass field: it carries the full
+    # labeled counter/gauge/histogram registry the scalar fields above
+    # are views of, without entering equality comparisons.
+    metrics = None
 
     @property
     def total_energy(self) -> float:
@@ -114,8 +129,27 @@ class SimResult:
     def energy_per_token(self) -> float:
         """Joules of total (tx + inference + idle) energy per served
         token — the benchmark gate's allocation-efficiency metric."""
-        tokens = self.throughput_tokens_per_s * self.makespan
+        tokens = self.served_tokens if self.served_tokens > 0 \
+            else self.throughput_tokens_per_s * self.makespan
         return self.total_energy / tokens if tokens > 0 else 0.0
+
+    def stats(self) -> Dict[str, object]:
+        """Canonical-key stats dict (shared naming with
+        `PerLLMServer.stats` / `ServingEngine.stats`), with the
+        deprecated old-name aliases included for one release."""
+        return with_aliases({
+            "n_served": sum(self.per_server_served),
+            "n_rejected": self.n_rejected,
+            "n_preempted": self.n_preempted,
+            "n_kv_migrations": self.n_kv_migrations,
+            "kv_migrated_bytes": self.kv_migrated_bytes,
+            "n_prefix_hits": self.n_prefix_hits,
+            "kv_prefill_tokens_saved": self.kv_prefill_tokens_saved,
+            "admitted_success_rate": self.admitted_success_rate,
+            "avg_processing_time": self.avg_processing_time,
+            "per_server_served": list(self.per_server_served),
+            "served_tokens": self.served_tokens,
+        })
 
     @classmethod
     def empty(cls, name: str, n_servers: int) -> "SimResult":
@@ -165,10 +199,27 @@ def rejected_outcome(req, decision: Decision, t: float) -> Outcome:
 class _SimRuntimeBase(Runtime, LinkStateMixin):
     """Shared state for both simulator modes: server bookkeeping, the lane
     ledger, and the link topology's mutable state (per-link backlog and
-    scenario scale overlays)."""
+    scenario scale overlays).
 
-    def __init__(self, sim: "Simulator", policy) -> None:
-        super().__init__(policy)
+    Run counters live in a `repro.obs.MetricsRegistry` (`self.metrics`):
+    the class-level `counter_attr` properties below keep every existing
+    ``self.n_rejected += 1`` call site working while `SimResult` /
+    exporters read straight out of the registry. The registry slot holds
+    the plain Python number assigned, so accumulation order — and
+    bit-identity with the pre-registry code — is unchanged.
+    """
+
+    n_rejected = counter_attr("n_rejected")
+    n_preempted = counter_attr("n_preempted")
+    n_kv_evictions = counter_attr("n_kv_evictions")
+    kv_prefill_tokens_saved = counter_attr("kv_prefill_tokens_saved")
+    n_prefix_hits = counter_attr("n_prefix_hits")
+    n_kv_orphaned = counter_attr("n_kv_orphaned")
+    n_kv_migrations = counter_attr("n_kv_migrations")
+    kv_migrated_bytes = counter_attr("kv_migrated_bytes")
+
+    def __init__(self, sim: "Simulator", policy, trace=None) -> None:
+        super().__init__(policy, trace=trace)
         self.sim = sim
         self.specs = sim.specs
         self.init_link_state(sim.topology)
@@ -176,6 +227,7 @@ class _SimRuntimeBase(Runtime, LinkStateMixin):
         self.states = [ServerState(spec=s) for s in self.specs]
         self.lane_free = [[0.0] * s.max_concurrency for s in self.specs]
         self.outcomes: List[Outcome] = []
+        self.metrics = MetricsRegistry()
         self.n_rejected = 0
         self.n_preempted = 0
         self.n_kv_evictions = 0
@@ -184,6 +236,9 @@ class _SimRuntimeBase(Runtime, LinkStateMixin):
         self.n_kv_orphaned = 0
         self.n_kv_migrations = 0
         self.kv_migrated_bytes = 0.0
+        # KV-wait span bookkeeping, written only when tracing is on:
+        # sid -> instant the request joined its server's kv_wait FIFO
+        self._kv_wait_since: Dict[int, float] = {}
 
     def on_bandwidth_change(self, ev: BandwidthChange) -> None:
         self.apply_bandwidth_scales(ev)
@@ -193,6 +248,17 @@ class _SimRuntimeBase(Runtime, LinkStateMixin):
         return self.topo.server_factor(j, self.specs[j].bandwidth,
                                        link_factors, self.link_scale)
 
+    def place(self, t: float, request, decision: Decision) -> None:
+        # every event-routed arrival (seeded or requeued) lands its
+        # ARRIVAL + DECISION rows here; the array core's direct-dispatch
+        # fast branch (`_cursor_arrival`) emits its own. The guard
+        # mirrors _trace_decision's only-requeues-and-sheds condition so
+        # the happy path pays one comparison, not a call.
+        if self.trace is not None and (request.preemptions
+                                       or not decision.admit):
+            self._trace_decision(t, request, decision)
+        super().place(t, request, decision)
+
     def on_reject(self, ev: Reject) -> None:
         """Admission control shed a request: emit the rejected Outcome."""
         req = ev.request
@@ -201,7 +267,57 @@ class _SimRuntimeBase(Runtime, LinkStateMixin):
         req.server = -1
         self.n_rejected += 1
         self.outcomes.append(out)
+        if self.trace is not None:
+            self.trace.append(KIND_REJECT, req.sid, ev.time, ev.time,
+                              ev.decision.server, req.class_id)
         self.policy.feedback(req, out)
+
+    # ---------------- trace emission helpers -----------------------------
+    # All no-ops unless a recorder is attached; emissions read only plain
+    # request/booking fields (no RNG, no lazy views, no ledger writes),
+    # which is what keeps traced runs bit-identical to untraced ones.
+    def _trace_decision(self, t: float, req, d: Decision) -> None:
+        """ARRIVAL/DECISION markers for the *non-implicit* placements:
+        requeues after preemption and admission sheds. Happy-path
+        decisions emit nothing here — their decision time is the TX
+        span's t0 and their server/tier ride on the completion spans —
+        which keeps the traced hot path within the CI overhead gate."""
+        if not req.preemptions and d.admit:
+            return
+        alloc = d.alloc
+        tier = alloc.freq_tier if alloc is not None else 0
+        sid, cls = req.sid, req.class_id
+        self.trace.append_rows((
+            (KIND_ARRIVAL, sid, t, t, -1, cls, 0, 0.0,
+             req.preemptions, -1),
+            (KIND_DECISION, sid, t, t, d.server, cls, tier, 0.0,
+             d.admit, -1),
+        ))
+
+    def _trace_complete(self, req, j: int, lane: int, tier: int,
+                        ready: float, begin: float, finish: float,
+                        e_tx: float, e_inf: float,
+                        success: bool) -> None:
+        """Emit one completed request's lifecycle as a single compressed
+        completion record (expanded to TX/QUEUE/INFER/DONE rows at
+        materialization). TX runs arrival→ready (uplink wait + transfer,
+        the Outcome's `tx_time` window), QUEUE ready→begin, INFER
+        begin→finish; the three spans telescope to exactly
+        `processing_time` (property-tested)."""
+        self.trace.complete(req.sid, req.arrival, ready, begin, finish,
+                            j, req.class_id, tier, lane, e_tx, e_inf,
+                            req.output_tokens, success)
+
+    def _trace_dispatch_kv(self, t: float, req, j: int,
+                           kv_resumed: bool) -> None:
+        """KV_WAIT span (if the request sat in the kv_wait FIFO) and the
+        RESUME marker (zero-re-prefill dispatch on preserved pages)."""
+        tr = self.trace
+        since = self._kv_wait_since.pop(req.sid, None)
+        if since is not None:
+            tr.append(KIND_KV_WAIT, req.sid, since, t, j, req.class_id)
+        if kv_resumed:
+            tr.append(KIND_RESUME, req.sid, t, t, j, req.class_id)
 
 
 @dataclasses.dataclass(eq=False, slots=True)
@@ -422,8 +538,8 @@ class _EventSimRuntime(_SimRuntimeBase):
     back.
     """
 
-    def __init__(self, sim: "Simulator", policy) -> None:
-        super().__init__(sim, policy)
+    def __init__(self, sim: "Simulator", policy, trace=None) -> None:
+        super().__init__(sim, policy, trace=trace)
         self.loop = _CountingLoop()
         self._link_factors: Dict[str, float] = \
             {n: 1.0 for n in self.topo.links}
@@ -723,6 +839,8 @@ class _EventSimRuntime(_SimRuntimeBase):
         if self.kv_used[j] + need > spec.kv_blocks \
                 or (self.kv_wait[j] and not (from_wait or express)):
             self.kv_wait[j].append((req, decision))
+            if self.trace is not None:
+                self._kv_wait_since.setdefault(req.sid, t)
             return False
         self.kv_used[j] += need
         req.kv_server, req.kv_blocks = j, need
@@ -771,6 +889,8 @@ class _EventSimRuntime(_SimRuntimeBase):
                                   from_wait=_from_kv_wait):
                 return                       # waiting on KV blocks
             prefix_saved = self._prefix_saved.pop(req.sid, 0)
+        if self.trace is not None and (kv_resumed or self._kv_wait_since):
+            self._trace_dispatch_kv(t, req, j, kv_resumed)
         alloc = decision.alloc
         free = self._uplink_vec[j]
         tx_start = t if t > free else free
@@ -876,6 +996,11 @@ class _EventSimRuntime(_SimRuntimeBase):
         st.tx_busy_time += end - start
         self.n_kv_migrations += 1
         self.kv_migrated_bytes += n_bytes
+        if self.trace is not None:
+            self.trace.append(KIND_MIGRATE, req.sid, t, end, j,
+                              req.class_id, 0,
+                              (end - t) * src_spec.tx_power, n_bytes,
+                              self.trace.intern(f"{src}->{j}"))
         self.loop.push(KvMigrate(end, request=req, decision=decision,
                                  context=(src, req.kv_blocks, j, need)))
         return True
@@ -951,12 +1076,14 @@ class _EventSimRuntime(_SimRuntimeBase):
         spec = self.specs[b.j]
         st = self.states[b.j]
         lanes[b.li] = b.lane_prev if t <= b.begin else t
+        e_waste = 0.0
         if t > b.begin:
             # wasted partial decode: the server burned real energy on it,
             # at the victim's allocated tier/share
             done = min(t, b.finish) - b.begin
-            st.e_infer += spec.infer_energy(done, tier=b.alloc.freq_tier,
-                                            lane_share=b.alloc.lane_share)
+            e_waste = spec.infer_energy(done, tier=b.alloc.freq_tier,
+                                        lane_share=b.alloc.lane_share)
+            st.e_infer += e_waste
             st.busy_time += done / spec.max_concurrency
             frac_left = max(b.finish - t, 0.0) / b.t_inf
             remaining = max(1, int(math.ceil(req.output_tokens * frac_left)))
@@ -986,6 +1113,13 @@ class _EventSimRuntime(_SimRuntimeBase):
         req.output_tokens = remaining
         req.preemptions += 1
         self.n_preempted += 1
+        if self.trace is not None:
+            # span covers the wasted decode window (a point at t when the
+            # victim had not yet begun); value = tokens left to requeue
+            self.trace.append(KIND_PREEMPT, req.sid,
+                              b.begin if t > b.begin else t, t, b.j,
+                              req.class_id, b.alloc.freq_tier, e_waste,
+                              float(remaining), b.li)
         self.loop.push(Arrival(t, requests=(req,)))
 
     def _infer_done(self, b: _Booking, finish: float) -> None:
@@ -1023,6 +1157,11 @@ class _EventSimRuntime(_SimRuntimeBase):
             success=proc <= req.deadline,
             energy=b.tx_dur * spec.tx_power * b.alloc.bw_share + e_inf)
         self.outcomes.append(out)
+        if self.trace is not None:
+            self._trace_complete(req, b.j, b.li, b.alloc.freq_tier,
+                                 b.ready, b.begin, finish,
+                                 b.tx_dur * spec.tx_power
+                                 * b.alloc.bw_share, e_inf, out.success)
         self.policy.feedback(req, out)
 
     def on_infer_done(self, ev: InferDone) -> None:
@@ -1047,6 +1186,8 @@ class _EventSimRuntime(_SimRuntimeBase):
         if d.admit:
             view.apply(req, d)
             if d.preempt_victim is None and d.defer_until <= t:
+                if self.trace is not None and req.preemptions:
+                    self._trace_decision(t, req, d)
                 self.dispatch(t, req, d)
                 return
         self.place(t, req, d)
@@ -1166,11 +1307,15 @@ class Simulator:
         self._noise_i = 0
 
     def run(self, services: List[ServiceRequest], scheduler,
-            scenario: Union[Scenario, str, None] = None) -> SimResult:
+            scenario: Union[Scenario, str, None] = None,
+            trace=None) -> SimResult:
         """Simulate `services` under `scheduler` (a `SchedulingPolicy`).
         `scenario` (instance or registered name) may inject extra
         bandwidth events; arrival shaping happens in the workload
-        generator."""
+        generator. `trace` (a `repro.obs.TraceRecorder`) records every
+        request's lifecycle spans; the default None keeps the hot path
+        untouched, and a traced run is result-bit-identical to an
+        untraced one (golden-tested)."""
         policy = ensure_policy(scheduler)
         if isinstance(scenario, str):
             scenario = make_scenario(scenario)
@@ -1190,11 +1335,12 @@ class Simulator:
 
         if self.core == "reference":
             from repro.cluster.reference_sim import _ReferenceEventRuntime
-            rt: _SimRuntimeBase = _ReferenceEventRuntime(self, policy)
+            rt: _SimRuntimeBase = _ReferenceEventRuntime(self, policy,
+                                                         trace=trace)
             for r in services:
                 rt.loop.push(Arrival(r.arrival, requests=(r,)))
         else:
-            rt = _EventSimRuntime(self, policy)
+            rt = _EventSimRuntime(self, policy, trace=trace)
             rt.seed_arrivals(services)
         if scenario is not None:
             horizon = services[-1].arrival
@@ -1218,6 +1364,7 @@ class Simulator:
             res.n_kv_orphaned = rt.n_kv_orphaned
             res.n_kv_migrations = rt.n_kv_migrations
             res.kv_migrated_bytes = rt.kv_migrated_bytes
+            res.metrics = self._finalize_metrics(res, rt, [])
             return res
         makespan = max(o.finish for o in completed)
         for st in states:
@@ -1230,7 +1377,7 @@ class Simulator:
         adm_succ = np.array([o.success for o in completed])
         tokens = sum(r.prompt_tokens + r.output_tokens for r in services
                      if r.finish >= 0)
-        return SimResult(
+        res = SimResult(
             name=name,
             n_services=len(services),
             success_rate=float(np.mean(succ)),
@@ -1251,7 +1398,38 @@ class Simulator:
             n_kv_orphaned=rt.n_kv_orphaned,
             n_kv_migrations=rt.n_kv_migrations,
             kv_migrated_bytes=rt.kv_migrated_bytes,
+            served_tokens=tokens,
         )
+        res.metrics = self._finalize_metrics(res, rt, times)
+        return res
+
+    @staticmethod
+    def _finalize_metrics(res: SimResult, rt: _SimRuntimeBase, times):
+        """Fold the run-level aggregates into the runtime's live
+        registry (the hot-path counters are already in it via
+        `counter_attr`), producing the registry `SimResult.metrics`
+        exposes. Labeled per-server counters and the processing-time
+        histogram are derived here, once per run, off the hot path."""
+        m = rt.metrics
+        m.put_scalar("n_served", sum(res.per_server_served))
+        m.put_scalar("served_tokens", res.served_tokens)
+        for j, served in enumerate(res.per_server_served):
+            m.inc("per_server_served", served, server=j)
+        m.set_gauge("success_rate", res.success_rate)
+        m.set_gauge("admitted_success_rate", res.admitted_success_rate)
+        m.set_gauge("avg_processing_time", res.avg_processing_time)
+        m.set_gauge("p95_processing_time", res.p95_processing_time)
+        m.set_gauge("throughput_tokens_per_s",
+                    res.throughput_tokens_per_s)
+        m.set_gauge("makespan", res.makespan)
+        m.set_gauge("e_tx", res.e_tx)
+        m.set_gauge("e_infer", res.e_infer)
+        m.set_gauge("e_idle", res.e_idle)
+        m.register_histogram("processing_time_s",
+                             (0.5, 1.0, 2.0, 4.0, 8.0, 16.0))
+        if len(times):
+            m.observe_many("processing_time_s", times)
+        return m
 
     # ------------------------------------------------------------------
     # Shared physics: both cores realize requests with exactly these

@@ -34,6 +34,8 @@ from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.obs.trace import KIND_ARM
+
 
 @dataclasses.dataclass
 class CSUCBParams:
@@ -71,6 +73,10 @@ class CSUCB:
         self.cum_reward = 0.0
         self.cum_best = 0.0
         self.regret_trace: List[float] = []
+        # optional repro.obs.TraceRecorder: every `update` (the single
+        # arm-pull point) lands one ARM row — pull index, arm coords,
+        # reward, violation — for the report CLI's bandit timeline
+        self.trace = None
 
     # ------------------------------------------------------------------
     def _grid_mask(self, feasible_mask: np.ndarray) -> np.ndarray:
@@ -157,6 +163,13 @@ class CSUCB:
         self.cum_best += self.p.alpha * self.p.beta * best
         self.cum_reward += reward
         self.regret_trace.append(self.cum_best - self.cum_reward)
+
+        if self.trace is not None:
+            # ARM row: sid = pull index (the bandit's clock), energy =
+            # reward, value = violation severity
+            self.trace.append(KIND_ARM, self.t, float(self.t),
+                              float(self.t), server, cls, tier,
+                              reward, violation_severity)
 
     # ------------------------------------------------------------------
     @property

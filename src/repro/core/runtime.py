@@ -231,10 +231,14 @@ class Runtime:
         on_tx_done / on_infer_start / on_infer_done / on_bandwidth_change
     """
 
-    def __init__(self, policy) -> None:
+    def __init__(self, policy, trace=None) -> None:
         self.policy = ensure_policy(policy)
         self.loop = EventLoop()
         self.clock = 0.0
+        # optional repro.obs.TraceRecorder; every emission site is
+        # guarded by `if self.trace is not None` so the hot path is
+        # untouched when tracing is off (docs/observability.md)
+        self.trace = trace
 
     # ---------------- physics hooks (subclass) ---------------------------
     def build_view(self, t: float) -> ClusterView:

@@ -124,9 +124,12 @@ class PerLLMScheduler(SchedulingPolicy):
         width = max(len(t) for t in table)
         if width != self.bandit.n_tiers:
             # first view revealed the real tier count: rebuild the (so far
-            # unpulled) bandit over the (class, server, tier) arm space
+            # unpulled) bandit over the (class, server, tier) arm space,
+            # carrying over any attached trace recorder
+            trace = self.bandit.trace
             self.bandit = CSUCB(N_CLASSES, self.n_servers, self._params,
                                 seed=self._seed, n_tiers=width)
+            self.bandit.trace = trace
         return table
 
     def _arm_table(self, view: ClusterView):

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.obs.metrics import with_aliases
 from repro.models.parallel import ParallelContext, cpu_context
 from repro.serving.kvcache import KVSnapshot, PagedKVCache, PageTable
 from repro.serving.sampling import sample_tokens
@@ -353,6 +354,24 @@ class ServingEngine:
             self.cur_tokens[slot] = next_tokens[slot]
             self._maybe_finish(slot)
         return len(active)
+
+    def stats(self) -> dict:
+        """Engine-local counters under the canonical key namespace shared
+        with ``PerLLMServer.stats`` / ``SimResult.stats()`` (old spellings
+        like ``prefills`` / ``prefix_tokens_reused`` ride along as
+        deprecated aliases for one release)."""
+        out = {
+            "n_prefills": self.n_prefills,
+            "n_prefix_hits": self.n_prefix_hits,
+            "kv_prefill_tokens_saved": self.prefix_tokens_reused,
+            "n_queued": len(self.queue),
+            "n_active": len(self.active_slots),
+            "n_served": len(self.completed),
+        }
+        if self.paged:
+            out["kv_free_blocks"] = self.kv.free_blocks
+            out["kv_total_blocks"] = self.kv.n_blocks
+        return with_aliases(out)
 
     def run_until_idle(self, max_steps: int = 10_000) -> List[Request]:
         """Step until queue and slots drain. Raises if `max_steps` runs out

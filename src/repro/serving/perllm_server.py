@@ -39,6 +39,11 @@ from repro.core.runtime import (
     Runtime, TxDone,
 )
 from repro.core.scheduler import PerLLMScheduler
+from repro.obs.metrics import MetricsRegistry, counter_attr, with_aliases
+from repro.obs.trace import (
+    KIND_ARRIVAL, KIND_DECISION, KIND_MIGRATE, KIND_PREEMPT,
+    KIND_REJECT, KIND_RESUME,
+)
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -72,14 +77,26 @@ class ServedRequest:
 
 
 class PerLLMServer(Runtime, LinkStateMixin):
+    # fleet counters live in the metrics registry (one canonical key
+    # namespace with SimResult.stats()); `+= 1` call sites are unchanged
+    n_preempted = counter_attr("n_preempted")
+    n_kv_migrations = counter_attr("n_kv_migrations")
+    kv_migrated_bytes = counter_attr("kv_migrated_bytes")
+
     def __init__(self, specs: Sequence[ServerSpec],
                  engines: Sequence[ServingEngine],
                  scheduler=None, slot: float = 0.5,
                  bandwidth: Optional[BandwidthModel] = None,
-                 topology: Optional[LinkTopology] = None):
+                 topology: Optional[LinkTopology] = None,
+                 trace=None):
         assert len(specs) == len(engines)
         self.scheduler = scheduler or PerLLMScheduler(len(specs))
-        super().__init__(self.scheduler)
+        super().__init__(self.scheduler, trace=trace)
+        self.metrics = MetricsRegistry()
+        if trace is not None \
+                and getattr(self.scheduler, "bandit", None) is not None:
+            # the bandit stamps ARM rows into the same recorder
+            self.scheduler.bandit.trace = trace
         self.specs = list(specs)
         self.engines = list(engines)
         self.bandwidth = bandwidth or BandwidthModel()
@@ -251,6 +268,18 @@ class PerLLMServer(Runtime, LinkStateMixin):
         sr.server = decision.server
         sr.decision = decision
         self._pending.remove(sr)
+        if self.trace is not None and (svc.preemptions
+                                       or not decision.admit):
+            # markers only for the non-implicit placements (requeues and
+            # sheds) — mirrors the sim cores' _trace_decision semantics
+            alloc = decision.alloc
+            tier = alloc.freq_tier if alloc is not None else 0
+            self.trace.append_rows((
+                (KIND_ARRIVAL, svc.sid, t, t, -1, svc.class_id, 0, 0.0,
+                 svc.preemptions, -1),
+                (KIND_DECISION, svc.sid, t, t, decision.server,
+                 svc.class_id, tier, 0.0, decision.admit, -1),
+            ))
         super().place(t, svc, decision)
 
     def defer(self, t: float, when: float, svc: ServiceRequest,
@@ -304,6 +333,11 @@ class PerLLMServer(Runtime, LinkStateMixin):
             self.engines[old_j].release(old_req)
         sr.server = -1
         sr.decision = ev.decision
+        if self.trace is not None:
+            self.trace.append(
+                KIND_REJECT, svc.sid, ev.time, ev.time,
+                ev.decision.server if ev.decision is not None else -1,
+                svc.class_id)
         self.policy.feedback(svc, rejected_outcome(svc, ev.decision,
                                                    ev.time))
         self.rejected.append(sr)
@@ -347,6 +381,15 @@ class PerLLMServer(Runtime, LinkStateMixin):
             svc.kv_blocks = len(r.pages.blocks)
         svc.output_tokens = remaining
         svc.preemptions += 1
+        if self.trace is not None:
+            # span covers the in-batch window burned so far (a point at
+            # ev.time if the victim never reached a lane); value = tokens
+            # left to requeue
+            t0 = sr.admit_clock if sr.admit_clock >= 0 else ev.time
+            self.trace.append(KIND_PREEMPT, svc.sid, t0, ev.time,
+                              sr.server, svc.class_id,
+                              self.engine_tier[sr.server], 0.0,
+                              float(remaining))
         sr.engine_req = None
         sr.server = -1
         sr.decision = None
@@ -412,6 +455,11 @@ class PerLLMServer(Runtime, LinkStateMixin):
             self.link_free[name] = end
         self.n_kv_migrations += 1
         self.kv_migrated_bytes += n_bytes
+        if self.trace is not None:
+            self.trace.append(KIND_MIGRATE, sr.service.sid, t, end, j,
+                              sr.service.class_id, 0,
+                              (end - t) * self.specs[old_j].tx_power,
+                              n_bytes, self.trace.intern(f"{old_j}->{j}"))
         self.loop.push(KvMigrate(end, request=sr.service,
                                  decision=sr.decision,
                                  context=(old_j, j, old_req)))
@@ -449,6 +497,9 @@ class PerLLMServer(Runtime, LinkStateMixin):
             src.release(old_req)
             sr.engine_req = dst.resubmit(new_req)
             svc.kv_server, svc.kv_blocks = j, len(table.blocks)
+            if self.trace is not None:
+                self.trace.append(KIND_RESUME, svc.sid, ev.time, ev.time,
+                                  j, svc.class_id)
         self._ensure_tick(j, ev.time)
 
     def on_tx_done(self, ev: TxDone) -> None:
@@ -462,6 +513,9 @@ class PerLLMServer(Runtime, LinkStateMixin):
             # KV-preserving requeue: reattach the evicted Request — its
             # page table and snapshot skip the prefill entirely
             sr.engine_req = eng.resubmit(resumable)
+            if self.trace is not None:
+                self.trace.append(KIND_RESUME, sr.service.sid, ev.time,
+                                  ev.time, j, sr.service.class_id)
         elif eng.paged and eng.kv.blocks_for(
                 len(sr._prompt) + sr.service.output_tokens) \
                 > eng.kv.n_blocks:
@@ -520,14 +574,20 @@ class PerLLMServer(Runtime, LinkStateMixin):
         admit = sr.admit_clock if sr.admit_clock >= 0 else sr.dispatch_clock
         queue_time = max(admit - sr.dispatch_clock, 0.0)
         infer_time = max(sr.done_clock - admit, 0.0)
-        energy = spec.infer_energy(infer_time,
-                                   tier=self.engine_tier[sr.server],
-                                   lane_share=alloc.lane_share) \
-            + spec.tx_power * sr.tx_dur * alloc.bw_share
+        tier = self.engine_tier[sr.server]
+        e_inf = spec.infer_energy(infer_time, tier=tier,
+                                  lane_share=alloc.lane_share)
+        e_tx = spec.tx_power * sr.tx_dur * alloc.bw_share
         out = Outcome(server=sr.server, tx_time=sr.tx_time,
                       queue_time=queue_time, infer_time=infer_time,
                       finish=sr.done_clock, processing_time=sr.latency,
-                      success=sr.met_deadline, energy=energy)
+                      success=sr.met_deadline, energy=e_inf + e_tx)
+        if self.trace is not None:
+            svc, trace = sr.service, self.trace
+            trace.complete(svc.sid, svc.arrival, sr.dispatch_clock,
+                           admit, sr.done_clock, sr.server,
+                           svc.class_id, tier, -1, e_tx, e_inf,
+                           svc.output_tokens, sr.met_deadline)
         self.policy.feedback(sr.service, out)
         self.completed.append(sr)
         del self.active[sr.service.sid]
@@ -560,23 +620,43 @@ class PerLLMServer(Runtime, LinkStateMixin):
     # ------------------------------------------------------------------
     @property
     def stats(self) -> dict:
+        """Canonical fleet stats (one key namespace with
+        ``SimResult.stats()``), plus the deprecated pre-unification
+        spellings via :func:`repro.obs.metrics.with_aliases` — old
+        readers of e.g. ``served`` / ``deadline_met`` keep working for
+        one release. The same values land in ``self.metrics``."""
         done = self.completed
+        m = self.metrics
+        m.put_scalar("n_served", len(done))
+        m.put_scalar("n_rejected", len(self.rejected))
         if not done:
-            return {"served": 0, "rejected": len(self.rejected),
-                    "preempted": self.n_preempted}
+            return with_aliases({"n_served": 0,
+                                 "n_rejected": len(self.rejected),
+                                 "n_preempted": self.n_preempted})
         lat = np.array([sr.latency for sr in done])
-        return {
-            "served": len(done),
-            "rejected": len(self.rejected),
-            "preempted": self.n_preempted,
-            "kv_migrations": self.n_kv_migrations,
+        per_server = np.bincount([sr.server for sr in done],
+                                 minlength=len(self.specs)).tolist()
+        stats = {
+            "n_served": len(done),
+            "n_rejected": len(self.rejected),
+            "n_preempted": self.n_preempted,
+            "n_kv_migrations": self.n_kv_migrations,
             "kv_migrated_bytes": self.kv_migrated_bytes,
-            "prefix_hits": sum(e.n_prefix_hits for e in self.engines),
-            "prefix_tokens_reused": sum(e.prefix_tokens_reused
-                                        for e in self.engines),
-            "deadline_met": float(np.mean([sr.met_deadline for sr in done])),
-            "mean_latency": float(lat.mean()),
-            "per_server": np.bincount(
-                [sr.server for sr in done],
-                minlength=len(self.specs)).tolist(),
+            "n_prefills": sum(e.n_prefills for e in self.engines),
+            "n_prefix_hits": sum(e.n_prefix_hits for e in self.engines),
+            "kv_prefill_tokens_saved": sum(e.prefix_tokens_reused
+                                           for e in self.engines),
+            "admitted_success_rate": float(np.mean([sr.met_deadline
+                                                    for sr in done])),
+            "avg_processing_time": float(lat.mean()),
+            "per_server_served": per_server,
         }
+        for key in ("n_prefills", "n_prefix_hits",
+                    "kv_prefill_tokens_saved"):
+            m.put_scalar(key, stats[key])
+        for j, n in enumerate(per_server):
+            m.put("per_server_served", n, server=j)
+        m.set_gauge("admitted_success_rate",
+                    stats["admitted_success_rate"])
+        m.set_gauge("avg_processing_time", stats["avg_processing_time"])
+        return with_aliases(stats)

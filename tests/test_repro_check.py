@@ -475,6 +475,110 @@ def test_r5_disable_comment_suppresses(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# R6 — trace-emission coverage
+# ---------------------------------------------------------------------------
+
+def r6_config(exemptions=None):
+    cfg = default_config()
+    cfg["r2"].update({"runtimes": ["MyRT"], "exemptions": {}})
+    cfg["r6"].update({"runtimes": ["MyRT"],
+                      "exemptions": exemptions or {}})
+    return cfg
+
+
+R6_EVENTS = """
+    class Event:
+        pass
+
+    class Ping(Event):
+        pass
+
+    class Runtime:
+        def on_ping(self, ev):
+            pass
+
+        _HANDLERS = {Ping: "on_ping"}
+"""
+
+
+def test_r6_flags_handler_without_emission(tmp_path):
+    files = {
+        "core/runtime.py": R6_EVENTS,
+        "cluster/simulator.py": """
+            class MyRT(Runtime):
+                def on_ping(self, ev):
+                    self.count += 1
+        """,
+    }
+    fs = run_on(tmp_path, files, ["R6"], config=r6_config())
+    assert len(fs) == 1 and fs[0].rule == "R6"
+    assert "on_ping" in fs[0].message and "trace" in fs[0].message
+
+
+def test_r6_direct_and_helper_emissions_are_clean(tmp_path):
+    files = {
+        "core/runtime.py": R6_EVENTS,
+        "cluster/simulator.py": """
+            class MyRT(Runtime):
+                def on_ping(self, ev):
+                    if self.trace is not None:
+                        self.trace.append(0, ev.sid, ev.time, ev.time)
+
+            class HelperRT(Runtime):
+                def on_ping(self, ev):
+                    self._handle(ev)
+
+                def _handle(self, ev):
+                    self._trace_mark(ev)
+        """,
+    }
+    cfg = r6_config()
+    assert run_on(tmp_path, files, ["R6"], config=cfg) == []
+    cfg["r6"]["runtimes"] = ["HelperRT"]
+    assert run_on(tmp_path, files, ["R6"], config=cfg) == []
+
+
+def test_r6_super_call_reaches_base_emission(tmp_path):
+    files = {
+        "core/runtime.py": R6_EVENTS,
+        "cluster/simulator.py": """
+            class Base(Runtime):
+                def on_ping(self, ev):
+                    self.trace.append(0, ev.sid, ev.time, ev.time)
+
+            class MyRT(Base):
+                def on_ping(self, ev):
+                    self.cleanup(ev)
+                    super().on_ping(ev)
+        """,
+    }
+    assert run_on(tmp_path, files, ["R6"], config=r6_config()) == []
+
+
+def test_r6_exemption_and_pass_stub_skipped(tmp_path):
+    files = {
+        "core/runtime.py": R6_EVENTS,
+        "cluster/simulator.py": """
+            class MyRT(Runtime):
+                def on_ping(self, ev):
+                    self.count += 1
+        """,
+    }
+    cfg = r6_config(exemptions={"MyRT": {"on_ping": "not a lifecycle "
+                                                    "event"}})
+    assert run_on(tmp_path, files, ["R6"], config=cfg) == []
+    # a pass-stub handler (R2's domain) is not an R6 finding
+    stub = {
+        "core/runtime.py": R6_EVENTS,
+        "cluster/simulator.py": """
+            class MyRT(Runtime):
+                pass
+        """,
+    }
+    assert run_on(tmp_path, stub, ["R6"], config=r6_config()) == []
+
+
+# ---------------------------------------------------------------------------
 # regression fixture (PR 6 bug shape) + repo self-check
 # ---------------------------------------------------------------------------
 

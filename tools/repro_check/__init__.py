@@ -11,6 +11,7 @@ Rules (see docs/invariants.md):
   R3  Decision/SimResult/ClusterView field coverage
   R4  determinism discipline (no wall clock / global RNG / set order)
   R5  unit-suffix arithmetic (no seconds + tokens)
+  R6  trace-emission coverage (every handled event leaves a trace row)
 """
 from __future__ import annotations
 

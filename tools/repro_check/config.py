@@ -152,6 +152,46 @@ DEFAULT_CONFIG = {
         "seeded_ctors": ["default_rng", "PCG64", "Philox"],
     },
     # ------------------------------------------------------------------
+    # R6 — trace-emission coverage (event base / dispatch table come
+    # from the r2 section; this section adds the audit set)
+    # ------------------------------------------------------------------
+    "r6": {
+        "runtimes": ["_EventSimRuntime", "_ReferenceEventRuntime",
+                     "PerLLMServer"],
+        # trace-recorder emit spellings and the helper-method prefix a
+        # handler may reach instead of calling the recorder directly
+        "emit_methods": ["append", "append_rows", "complete"],
+        "trace_prefix": "_trace",
+        "max_depth": 6,
+        # handler -> reason; a handled event with no reachable emission
+        # is fine only when the non-emission is deliberate
+        "exemptions": {
+            "_EventSimRuntime": {
+                "on_tx_done": "TX span is emitted at completion "
+                              "(_trace_complete) over the booking's "
+                              "realized arrival->ready window",
+                "on_bandwidth_change": "link repricing is cluster "
+                                       "state, not a request-lifecycle "
+                                       "event; no sid to attribute",
+            },
+            "_ReferenceEventRuntime": {
+                "on_tx_done": "mirrors the event sim: TX span lands at "
+                              "completion via _trace_complete",
+                "on_bandwidth_change": "link repricing is cluster "
+                                       "state, not a request-lifecycle "
+                                       "event; no sid to attribute",
+            },
+            "PerLLMServer": {
+                "on_deferred": "deferred dispatches were stamped "
+                               "ARRIVAL/DECISION at place(); their "
+                               "lifecycle spans land at _finish",
+                "on_bandwidth_change": "link repricing is cluster "
+                                       "state, not a request-lifecycle "
+                                       "event; no sid to attribute",
+            },
+        },
+    },
+    # ------------------------------------------------------------------
     # R5 — unit-suffix arithmetic
     # ------------------------------------------------------------------
     "r5": {

@@ -1,0 +1,138 @@
+"""R6 — trace-emission coverage.
+
+Every concrete ``Event`` subclass a runtime handles must leave a mark in
+the request-lifecycle trace: the MRO-resolved handler — or a method it
+reaches through ``self.X(...)`` / ``super().X(...)`` calls — must either
+call an emit method (``.append`` / ``.append_rows``) on a receiver chain
+containing ``trace``, or call a ``_trace*``-prefixed helper. Handlers
+whose resolved body is a ``pass``/``raise`` stub are R2's domain and are
+skipped here; deliberate non-emissions (e.g. ``BandwidthChange`` — not a
+request-lifecycle event) are listed in the config exemptions with a
+reason.
+
+The rule shares R2's dispatch-table discovery: the event base, dispatch
+class and ``_HANDLERS`` table come from the ``r2`` config section; the
+``r6`` section adds the runtimes to audit, the emit-call spellings and
+the exemption table.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from ..core import Finding, SourceFile
+from .r2_events import _ClassIndex, _dispatch_table
+
+RULE_ID = "R6"
+
+
+def _method_defs(files: List[SourceFile]) -> Dict[str, Dict[str, ast.AST]]:
+    """class name -> {method name: FunctionDef} over all files."""
+    out: Dict[str, Dict[str, ast.AST]] = {}
+    for sf in files:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            out[node.name] = {
+                st.name: st for st in node.body
+                if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    return out
+
+
+def _find_def(defs: Dict[str, Dict[str, ast.AST]], mro: List[str],
+              method: str) -> Optional[Tuple[str, ast.AST]]:
+    for c in mro:
+        fn = defs.get(c, {}).get(method)
+        if fn is not None:
+            return c, fn
+    return None
+
+
+def _receiver_is_trace(node: ast.expr) -> bool:
+    """True if the attribute/name chain mentions ``trace`` (e.g.
+    ``self.trace`` or a bare ``trace`` local)."""
+    while isinstance(node, ast.Attribute):
+        if node.attr == "trace":
+            return True
+        node = node.value
+    return isinstance(node, ast.Name) and node.id == "trace"
+
+
+def _emits(runtime: str, handler: str, index: _ClassIndex,
+           defs: Dict[str, Dict[str, ast.AST]], cfg: dict) -> bool:
+    """Does `handler` on `runtime` — or anything it reaches via
+    ``self.X()`` / ``super().X()`` — emit a trace row?"""
+    emit_methods = set(cfg["emit_methods"])
+    prefix = cfg["trace_prefix"]
+    max_depth = cfg.get("max_depth", 6)
+    rt_mro = index.mro(runtime)
+    seen = set()
+    queue: List[Tuple[List[str], str, int]] = [(rt_mro, handler, 0)]
+    while queue:
+        mro, method, depth = queue.pop(0)
+        found = _find_def(defs, mro, method)
+        if found is None:
+            continue
+        cls, fn = found
+        if (cls, method) in seen:
+            continue
+        seen.add((cls, method))
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call) or \
+                    not isinstance(node.func, ast.Attribute):
+                continue
+            f = node.func
+            if f.attr in emit_methods and _receiver_is_trace(f.value):
+                return True
+            if f.attr.startswith(prefix):
+                return True
+            if depth >= max_depth:
+                continue
+            if isinstance(f.value, ast.Name) and f.value.id == "self":
+                queue.append((rt_mro, f.attr, depth + 1))
+            elif isinstance(f.value, ast.Call) and \
+                    isinstance(f.value.func, ast.Name) and \
+                    f.value.func.id == "super":
+                # resolve past the defining class, like super() would
+                cmro = index.mro(cls)
+                queue.append((cmro[1:], f.attr, depth + 1))
+    return False
+
+
+def check(files: List[SourceFile], config: dict) -> List[Finding]:
+    cfg = config["r6"]
+    r2cfg = config["r2"]
+    findings: List[Finding] = []
+    ev_file = next((sf for sf in files
+                    if sf.relpath.endswith(r2cfg["events_file"])), None)
+    if ev_file is None:
+        return findings     # fixture trees without the events file
+    index = _ClassIndex(files)
+    defs = _method_defs(files)
+    table, _line = _dispatch_table(ev_file, r2cfg["dispatch_class"],
+                                   r2cfg["dispatch_table"])
+    if not table:
+        return findings     # R2 reports the missing table
+    for rt in cfg["runtimes"]:
+        if rt not in index.classes:
+            continue
+        _bases, _methods, rt_file, rt_line = index.classes[rt]
+        exempt = cfg["exemptions"].get(rt, {})
+        for ev_name, handler in sorted(table.items()):
+            resolved = index.resolve(rt, handler)
+            if resolved is None:
+                continue            # R2 reports the missing handler
+            _definer, kind = resolved
+            if kind in ("pass", "raise"):
+                continue            # stubs are R2's domain
+            if handler in exempt:
+                continue
+            if _emits(rt, handler, index, defs, cfg):
+                continue
+            findings.append(Finding(
+                rt_file, rt_line, RULE_ID,
+                f"{rt}: {ev_name} handler {handler} (and every method it "
+                f"reaches) never emits a trace row — requests passing "
+                f"through it are invisible to the lifecycle trace; "
+                f"instrument it or add an r6 exemption with a reason"))
+    return findings
