@@ -7,6 +7,7 @@ when `interpret=None` (auto) and the backend is CPU.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -18,10 +19,22 @@ from repro.kernels import paged_attention as _paged
 from repro.kernels import ref as _ref
 
 
+@functools.lru_cache(maxsize=None)
+def _backend_is_cpu() -> bool:
+    # the backend cannot change within a process; probing it resolves the
+    # whole JAX platform stack, so pay that once, not per kernel call
+    return jax.default_backend() == "cpu"
+
+
 def _auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is None:
-        return jax.default_backend() == "cpu"
-    return interpret
+        return _backend_is_cpu()
+    if not interpret and _backend_is_cpu():
+        raise RuntimeError(
+            "Pallas-TPU lowering is unavailable on the CPU backend but "
+            "interpret=False was forced; pass interpret=None (auto) or "
+            "interpret=True to run the kernel in interpret mode")
+    return bool(interpret)
 
 
 def flash_attention(q, k, v, *, mask=None, causal: bool = True,

@@ -138,10 +138,11 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, use_pallas: bool = False):
                                    (xr, dtr, Br, Cr))
     y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
     if use_pallas:
+        from repro.kernels.ops import _auto_interpret
         from repro.kernels.ssd_diag import ssd_diag
         y = y + ssd_diag(x.astype(f32), dt.astype(f32), A, Bm.astype(f32),
                          Cm.astype(f32), chunk=chunk,
-                         interpret=jax.default_backend() == "cpu")
+                         interpret=_auto_interpret(None))
     y = y[:, :s_orig]
     return y.astype(x.dtype), final_state
 

@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.obs.metrics import with_aliases
+from repro.obs.metrics import MetricsRegistry, counter_attr, with_aliases
 from repro.models.parallel import ParallelContext, cpu_context
 from repro.serving.kvcache import KVSnapshot, PagedKVCache, PageTable
 from repro.serving.sampling import sample_tokens
@@ -71,6 +71,12 @@ def _batch_axis_tree(cfg: ModelConfig, max_seq: int):
 
 
 class ServingEngine:
+    # registry-backed compile counters — the runtime complement to the
+    # R8 static rule: decode must stay at one compile per (batch, 1)
+    # token shape, prefill at one per pow-2 seq bucket
+    decode_compiles = counter_attr("engine.decode_compiles")
+    prefill_compiles = counter_attr("engine.prefill_compiles")
+
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
                  max_seq: int = 1024, ctx: Optional[ParallelContext] = None,
                  temperature: float = 0.0, seed: int = 0,
@@ -91,6 +97,8 @@ class ServingEngine:
         self._rid = itertools.count()
         self._key = jax.random.key(seed)
         self.completed: List[Request] = []
+        self.metrics = MetricsRegistry()
+        self._compiled_shapes: set = set()
         self.n_prefills = 0       # prompts actually prefilled (resumes skip)
         self.n_prefix_hits = 0        # admissions that reused a shared prefix
         self.prefix_tokens_reused = 0  # prompt tokens those hits skipped
@@ -187,6 +195,15 @@ class ServingEngine:
         return self.paged and self.prefix_sharing \
             and self.kv.supports_prefix
 
+    def _note_compile(self, kind: str, shape) -> None:
+        """Count first-seen operand shapes per jitted entry point. jit
+        caches on shape, so a fresh (kind, shape) key is exactly one new
+        XLA compile; the counters stay flat once the shape set is warm."""
+        key = (kind, tuple(shape))
+        if key not in self._compiled_shapes:
+            self._compiled_shapes.add(key)
+            self.metrics.inc(f"engine.{kind}_compiles")
+
     def _insert_slot(self, slot: int, single_cache):
         def ins(pool, one, ax):
             return jax.lax.dynamic_update_slice_in_dim(pool, one, slot, ax)
@@ -238,6 +255,7 @@ class ServingEngine:
                 # serves batch 1; `allocate` guarantees skip < plen)
                 one_cache = self.kv.load(req.pages, [])
                 logits = None
+                self._note_compile("decode", (1, 1))
                 for i in range(skip, plen):
                     tok = jnp.asarray([[req.prompt[i]]], jnp.int32)
                     logits, one_cache = self._decode(
@@ -257,7 +275,11 @@ class ServingEngine:
                     s = prompt.shape[1]
                     batch["positions"] = jnp.broadcast_to(
                         jnp.arange(s, dtype=jnp.int32), (3, 1, s))
-                last_logits, one_cache = self._prefill(
+                # deliberate shape polymorphism: the pow-2 bucketing above
+                # caps this at log2(max_seq) distinct prefill shapes, and
+                # `engine.prefill_compiles` counts them at runtime
+                self._note_compile("prefill", prompt.shape)
+                last_logits, one_cache = self._prefill(  # repro-check: disable=R8
                     self.params, batch, one_cache, jnp.int32(plen - 1))
             self.n_prefills += 1
             if self._sharing:
@@ -343,6 +365,7 @@ class ServingEngine:
             return 0
         tokens = jnp.asarray(self.cur_tokens, jnp.int32)[:, None]
         pos = jnp.asarray(self.positions, jnp.int32)
+        self._note_compile("decode", tokens.shape)
         logits, self.cache = self._decode(self.params, tokens, self.cache,
                                           pos)
         self._key, k = jax.random.split(self._key)

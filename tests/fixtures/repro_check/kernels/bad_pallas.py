@@ -1,0 +1,29 @@
+"""Seeded R9 violations: a pallas_call whose wiring disagrees with
+itself — wrong index-map arities, an out_shape of the wrong rank, an
+operand count that doesn't match in_specs, and no interpret guard.
+Every one of these traces fine in places Pallas doesn't validate until
+TPU lowering; R9 catches them at lint time.
+"""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _bad_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def double_blocks(x):
+    m, n = x.shape
+    grid = (m // 8,)
+    return pl.pallas_call(                              # R9: no interpret=
+        _bad_kernel,
+        grid=grid,
+        in_specs=[
+            # R9: 2-arg index map for a rank-1 grid
+            pl.BlockSpec((8, 128), lambda i, j: (i, 0)),
+        ],
+        # R9: 3-coordinate index map for a rank-2 block shape, and the
+        # block rank disagrees with the rank-3 out_shape below
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n, 1), x.dtype),
+    )(x, x)                                             # R9: 2 operands, 1 spec

@@ -1,0 +1,26 @@
+"""Seeded R7 violations: Python control flow and host sync on tracers.
+
+Pre-fix shapes of the tracing bugs R7 exists to catch. Each hazard line
+is a distinct finding; tests/test_repro_check.py pins them.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def traced_branch(x, threshold):
+    # Python `if` on a traced comparison: ConcretizationTypeError at
+    # trace time (or a silently baked branch under custom tracers)
+    if x > threshold:                                   # R7 finding
+        return x * 2.0
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def host_sync(x, block):
+    total = jnp.sum(x)
+    n = int(total)                                      # R7 finding
+    print("total", total)                               # R7 finding
+    return total.item() + n + block                     # R7 finding

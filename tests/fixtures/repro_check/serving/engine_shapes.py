@@ -1,0 +1,20 @@
+"""Seeded R8 violation: a per-request prompt length flowing straight
+into a jitted callee's operand shape — every distinct prompt length
+silently recompiles. This is the pre-fix shape of the engine's prefill
+path before pow-2 bucketing bounded the compile set.
+"""
+import jax
+import jax.numpy as jnp
+
+
+class MiniEngine:
+    def __init__(self, params):
+        self.params = params
+        self.queue = []
+        self._prefill = jax.jit(lambda p, t: t)
+
+    def step(self):
+        req = self.queue.pop(0)
+        # unpadded per-request length → one compile per prompt length
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        return self._prefill(self.params, tokens)       # R8 finding

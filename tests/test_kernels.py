@@ -298,3 +298,74 @@ def test_decode_with_pallas_matches_jnp():
                            cfg=cfg, ctx=ctx)
         outs.append(np.asarray(l, np.float32))
     np.testing.assert_allclose(outs[0], outs[1], rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# dtype/shape parity sweep: non-power-of-two head dims (Qwen-style d=80,
+# narrow d=48) through decode + paged decode vs the jnp oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("d", [48, 80])
+def test_decode_attention_parity_nonpow2_head_dim(dtype, tol, d):
+    b, hq, hkv, s = 2, 8, 2, 256
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32).astype(dtype)
+    for vl in (1, 100, s):
+        out = decode_attention(q, k, v, vl, scale=d ** -0.5, block_k=128,
+                               interpret=True)
+        ref = decode_attention_ref(q, k, v, vl, scale=d ** -0.5)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("d", [48, 80])
+def test_paged_attention_parity_nonpow2_head_dim(dtype, tol, d):
+    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.ref import paged_attention_ref
+
+    b, hq, hkv, page, n_pages = 2, 8, 2, 16, 8
+    n_pool = b * n_pages
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32).astype(dtype)
+    k_pages = jax.random.normal(
+        ks[1], (n_pool, hkv, page, d), jnp.float32).astype(dtype)
+    v_pages = jax.random.normal(
+        ks[2], (n_pool, hkv, page, d), jnp.float32).astype(dtype)
+    tables = jax.random.permutation(
+        ks[3], n_pool).reshape(b, n_pages).astype(jnp.int32)
+    vl = jnp.array([37, page * n_pages], jnp.int32)
+    out = paged_attention(q, k_pages, v_pages, tables, vl,
+                          scale=d ** -0.5, interpret=True)
+    ref = paged_attention_ref(q, k_pages, v_pages, tables, vl,
+                              scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_auto_interpret_memoized_and_forced_lowering_error():
+    """The backend probe resolves once per process (lru_cache), and
+    forcing interpret=False where Pallas cannot lower fails loudly
+    instead of dying inside Mosaic."""
+    from repro.kernels import ops
+
+    ops._backend_is_cpu.cache_clear()
+    first = ops._auto_interpret(None)
+    before = ops._backend_is_cpu.cache_info().misses
+    assert ops._auto_interpret(None) is first
+    info = ops._backend_is_cpu.cache_info()
+    assert info.misses == before and info.hits >= 1
+    assert ops._auto_interpret(True) is True
+    if ops._backend_is_cpu():
+        with pytest.raises(RuntimeError, match="interpret=False was forced"):
+            ops._auto_interpret(False)
+    else:
+        assert ops._auto_interpret(False) is False

@@ -609,3 +609,413 @@ def test_repo_tree_is_clean():
         [sys.executable, "-m", "tools.repro_check", "src"],
         cwd=REPO_ROOT, capture_output=True, text=True)
     assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# R7 — jit tracing-safety
+# ---------------------------------------------------------------------------
+
+R7_FLAGGING = """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def f(x, lim):
+        if x > lim:
+            return x
+        while x.sum() > 0:
+            x = x - 1
+        n = int(jnp.sum(x))
+        return x.item() + n
+"""
+
+R7_CLEAN = """
+    import functools
+    import jax
+    import jax.numpy as jnp
+
+    @functools.partial(jax.jit, static_argnames=("causal",))
+    def f(x, causal):
+        if causal:                       # static arg: legal Python branch
+            x = x * 2
+        if x.shape[0] > 4:               # shapes are static at trace time
+            x = x[:4]
+        for _ in range(x.ndim):          # static iteration count
+            x = x + 1
+        return jnp.where(x > 0, x, 0.0)
+"""
+
+R7_SUPPRESSED = """
+    import jax
+
+    @jax.jit
+    def f(x, lim):
+        if x > lim:                      # repro-check: disable=R7
+            return x
+        return x * 2
+"""
+
+
+def test_r7_flags_traced_control_flow_and_host_sync(tmp_path):
+    fs = run_on(tmp_path, {"kernels/hot.py": R7_FLAGGING}, ["R7"])
+    msgs = [f.message for f in fs]
+    assert len(fs) == 4
+    assert any("`if`" in m for m in msgs)
+    assert any("`while`" in m for m in msgs)
+    assert any("`int()`" in m for m in msgs)
+    assert any(".item()" in m for m in msgs)
+
+
+def test_r7_static_args_and_shape_reads_are_clean(tmp_path):
+    assert run_on(tmp_path, {"kernels/hot.py": R7_CLEAN}, ["R7"]) == []
+
+
+def test_r7_kernel_refs_are_traced_but_partial_kwargs_static(tmp_path):
+    code = """
+        import functools
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _k(x_ref, o_ref, *, flip):
+            if flip:                          # static: bound via partial
+                o_ref[...] = -x_ref[...]
+            if x_ref[0] > 0:                  # traced ref read: flagged
+                o_ref[...] = x_ref[...]
+
+        def run(x, flip):
+            return pl.pallas_call(
+                functools.partial(_k, flip=flip),
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=None,
+                interpret=True,
+            )(x)
+    """
+    fs = run_on(tmp_path, {"kernels/k.py": code}, ["R7"])
+    assert len(fs) == 1
+    assert "Pallas kernel" in fs[0].message and "pl.when" in fs[0].message
+
+
+def test_r7_nonhashable_static_default_flagged(tmp_path):
+    code = """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("opts",))
+        def f(x, opts=[1, 2]):
+            return x
+    """
+    fs = run_on(tmp_path, {"kernels/cfg.py": code}, ["R7"])
+    assert len(fs) == 1 and "non-hashable" in fs[0].message
+
+
+def test_r7_disable_comment_suppresses(tmp_path):
+    assert run_on(tmp_path, {"kernels/hot.py": R7_SUPPRESSED},
+                  ["R7"]) == []
+
+
+def test_r7_out_of_scope_file_ignored(tmp_path):
+    assert run_on(tmp_path, {"training/loop.py": R7_FLAGGING},
+                  ["R7"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R8 — recompilation hazards
+# ---------------------------------------------------------------------------
+
+R8_FLAGGING = """
+    import jax
+    import jax.numpy as jnp
+
+    class Engine:
+        def __init__(self):
+            self._fwd = jax.jit(lambda p, t: t)
+            self.queue = []
+
+        def step(self):
+            req = self.queue.pop(0)
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            return self._fwd(self.params, toks)
+"""
+
+R8_CLEAN = """
+    import jax
+    import jax.numpy as jnp
+
+    class Engine:
+        def __init__(self):
+            self._fwd = jax.jit(lambda p, t: t)
+            self.queue = []
+            self.cur_tokens = [0] * 8
+
+        def step(self):
+            req = self.queue.pop(0)
+            tok = jnp.asarray([[req.prompt[0]]], jnp.int32)  # literal shape
+            fixed = jnp.asarray(self.cur_tokens, jnp.int32)[:, None]
+            self._fwd(self.params, tok)
+            return self._fwd(self.params, fixed)
+"""
+
+R8_SUPPRESSED = """
+    import jax
+    import jax.numpy as jnp
+
+    class Engine:
+        def __init__(self):
+            self._fwd = jax.jit(lambda p, t: t)
+            self.queue = []
+
+        def step(self):
+            req = self.queue.pop(0)
+            toks = jnp.asarray(req.prompt, jnp.int32)
+            return self._fwd(self.params, toks)  # repro-check: disable=R8
+"""
+
+
+def test_r8_flags_per_request_shape_into_jit(tmp_path):
+    fs = run_on(tmp_path, {"serving/eng.py": R8_FLAGGING}, ["R8"])
+    assert len(fs) == 1
+    assert "self._fwd" in fs[0].message
+    assert "recompile" in fs[0].message
+
+
+def test_r8_literal_and_fixed_shapes_are_clean(tmp_path):
+    assert run_on(tmp_path, {"serving/eng.py": R8_CLEAN}, ["R8"]) == []
+
+
+def test_r8_bucketing_through_padding_still_flagged_then_suppressed(
+        tmp_path):
+    assert run_on(tmp_path, {"serving/eng.py": R8_SUPPRESSED},
+                  ["R8"]) == []
+
+
+def test_r8_kwargs_splat_into_jit_flagged(tmp_path):
+    code = """
+        import jax
+
+        class Engine:
+            def __init__(self):
+                self._fwd = jax.jit(lambda **kw: kw)
+
+            def step(self, batch):
+                return self._fwd(**batch)
+    """
+    fs = run_on(tmp_path, {"serving/eng.py": code}, ["R8"])
+    assert len(fs) == 1 and "splat" in fs[0].message
+
+
+def test_r8_jitted_lambda_closure_capture_flagged(tmp_path):
+    code = """
+        import jax
+        import jax.numpy as jnp
+
+        class Engine:
+            def __init__(self, n):
+                table = jnp.arange(n)
+                self._fwd = jax.jit(lambda t: t + table)
+
+            def step(self, t):
+                return self._fwd(t)
+    """
+    fs = run_on(tmp_path, {"serving/eng.py": code}, ["R8"])
+    assert len(fs) == 1 and "closes over array `table`" in fs[0].message
+
+
+def test_r8_unreached_private_method_not_walked(tmp_path):
+    code = """
+        import jax
+        import jax.numpy as jnp
+
+        class Engine:
+            def __init__(self):
+                self._fwd = jax.jit(lambda p, t: t)
+
+            def _debug_only(self, req):
+                return self._fwd(None, jnp.asarray(req.prompt))
+
+            def step(self):
+                return 0
+    """
+    assert run_on(tmp_path, {"serving/eng.py": code}, ["R8"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R9 — Pallas kernel consistency
+# ---------------------------------------------------------------------------
+
+R9_CLEAN = """
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _k(s_ref, x_ref, o_ref, acc, *, blk):
+        o_ref[...] = x_ref[...] * 2.0
+
+    def run(x, interpret):
+        m, n = x.shape
+        grid = (m // 8, n // 128)
+        kernel = functools.partial(_k, blk=8)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+                pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+            scratch_shapes=[pltpu.VMEM((8, 128), jnp.float32)],
+            interpret=interpret,
+        )(s, x)
+"""
+
+
+def test_r9_consistent_call_is_clean(tmp_path):
+    assert run_on(tmp_path, {"kernels/good.py": R9_CLEAN}, ["R9"]) == []
+
+
+def test_r9_flags_arity_rank_operand_and_interpret(tmp_path):
+    code = """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _k(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(x):
+            m, n = x.shape
+            return pl.pallas_call(
+                _k,
+                grid=(m // 8,),
+                in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, 0))],
+                out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0, 0)),
+                out_shape=jax.ShapeDtypeStruct((m, n, 1), x.dtype),
+            )(x, x)
+    """
+    fs = run_on(tmp_path, {"kernels/bad.py": code}, ["R9"])
+    msgs = [f.message for f in fs]
+    assert len(fs) == 5
+    assert any("interpret" in m for m in msgs)
+    assert any("takes 2 args" in m for m in msgs)
+    assert any("returns 3 coordinates" in m for m in msgs)
+    assert any("rank 2" in m and "rank 3" in m for m in msgs)
+    assert any("2 operands" in m for m in msgs)
+
+
+def test_r9_kernel_arity_vs_wired_refs(tmp_path):
+    code = """
+        import jax
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def _k(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(x, interpret):
+            m, n = x.shape
+            return pl.pallas_call(
+                _k,
+                grid=(m // 8,),
+                in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+                scratch_shapes=[pltpu.VMEM((8, 1), jnp.float32)],
+                interpret=interpret,
+            )(x)
+    """
+    fs = run_on(tmp_path, {"kernels/bad.py": code}, ["R9"])
+    assert len(fs) == 1
+    assert "takes 2 positional refs" in fs[0].message
+    assert "= 3" in fs[0].message
+
+
+def test_r9_prefetch_grid_spec_counts(tmp_path):
+    code = """
+        import jax
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def _k(tbl_ref, x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(tables, x, interpret):
+            m, n = x.shape
+            grid_spec = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(m // 8,),
+                in_specs=[pl.BlockSpec((8, 128), lambda i, tbl: (tbl[i], 0))],
+                out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            )
+            return pl.pallas_call(
+                _k,
+                grid_spec=grid_spec,
+                out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+                interpret=interpret,
+            )(tables, x)
+    """
+    fs = run_on(tmp_path, {"kernels/pf.py": code}, ["R9"])
+    # out map takes 1 arg but grid rank 1 + 1 prefetch = 2; the in map
+    # is correct — prefetch refs arrive as trailing index-map args
+    assert len(fs) == 1
+    assert "out_specs[0]" in fs[0].message and "expected 2" in fs[0].message
+
+
+def test_r9_disable_comment_suppresses(tmp_path):
+    code = """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _k(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(x):
+            m, _ = x.shape
+            return pl.pallas_call(   # repro-check: disable=R9
+                _k,
+                grid=(m // 8,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+            )(x)
+    """
+    assert run_on(tmp_path, {"kernels/bad.py": code}, ["R9"]) == []
+
+
+# ---------------------------------------------------------------------------
+# committed compute-layer fixtures: pinned findings + CLI rendering
+# ---------------------------------------------------------------------------
+
+
+def test_compute_layer_fixtures_are_caught():
+    """Each committed R7/R8/R9 fixture keeps producing its findings with
+    correct `file:line RULE-ID` rendering, and the CLI exits non-zero
+    per rule (the must-fail direction CI enforces)."""
+    fixture = REPO_ROOT / "tests" / "fixtures" / "repro_check"
+
+    r7 = run_paths([str(fixture)], rule_ids=["R7"], root=REPO_ROOT)
+    assert [f.line for f in r7] == [16, 24, 25, 26]
+    assert all(f.file == "tests/fixtures/repro_check/kernels/jit_tracing.py"
+               for f in r7)
+    assert r7[0].render().startswith(
+        "tests/fixtures/repro_check/kernels/jit_tracing.py:16 R7 ")
+
+    r8 = run_paths([str(fixture)], rule_ids=["R8"], root=REPO_ROOT)
+    assert len(r8) == 1 and r8[0].line == 20
+    assert r8[0].render().startswith(
+        "tests/fixtures/repro_check/serving/engine_shapes.py:20 R8 ")
+
+    r9 = run_paths([str(fixture)], rule_ids=["R9"], root=REPO_ROOT)
+    assert len(r9) == 5
+    assert all(f.file == "tests/fixtures/repro_check/kernels/bad_pallas.py"
+               for f in r9)
+
+    for rule in ("R7", "R8", "R9"):
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.repro_check", "--rules", rule,
+             "tests/fixtures/repro_check"],
+            cwd=REPO_ROOT, capture_output=True, text=True)
+        assert proc.returncode == 1, (rule, proc.stdout, proc.stderr)
+        assert rule in proc.stdout

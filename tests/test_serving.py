@@ -78,3 +78,47 @@ def test_sampling_modes():
     draws = {int(sample_tokens(jax.random.key(i), logits,
                                temperature=50.0)[0]) for i in range(40)}
     assert len(draws) > 1
+
+
+def test_engine_compile_counters():
+    """decode compiles exactly once per (batch, 1) token shape and
+    prefill once per pow-2 seq bucket — warm shapes never re-count."""
+    eng = ServingEngine(CFG, _params(), max_batch=2, max_seq=64)
+    assert eng.decode_compiles == 0 and eng.prefill_compiles == 0
+    eng.submit([1, 2, 3, 4, 5], max_new_tokens=3)        # bucket 8
+    eng.submit([9, 8, 7, 6, 5, 4, 3], max_new_tokens=3)  # bucket 8 too
+    eng.run_until_idle()
+    assert eng.prefill_compiles == 1
+    assert eng.decode_compiles == 1
+    eng.submit(list(range(1, 21)), max_new_tokens=3)     # bucket 32
+    eng.run_until_idle()
+    assert eng.prefill_compiles == 2
+    assert eng.decode_compiles == 1
+    eng.submit([2, 4, 6], max_new_tokens=3)              # bucket 4: new
+    eng.submit([3, 5, 7], max_new_tokens=3)              # bucket 4: warm
+    eng.run_until_idle()
+    assert eng.prefill_compiles == 3
+    assert eng.decode_compiles == 1
+    # the counters mirror jit's own shape-keyed cache when it exposes one
+    if hasattr(eng._decode, "_cache_size"):
+        assert eng._decode._cache_size() == eng.decode_compiles
+        assert eng._prefill._cache_size() == eng.prefill_compiles
+
+
+def test_prefix_hit_decode_compile_counted_once():
+    """The prefix-hit suffix prefill runs through the batch-1 decode jit:
+    one extra decode shape the first time, none after."""
+    eng = ServingEngine(CFG, _params(), max_batch=2, max_seq=128,
+                        paged=True, kv_block_tokens=16)
+    shared = list(range(100, 132))          # 32 tokens = 2 full blocks
+    eng.submit(shared + [7, 8, 9], max_new_tokens=3)
+    eng.run_until_idle()
+    d0 = eng.decode_compiles
+    eng.submit(shared + [10, 11, 12], max_new_tokens=3)
+    eng.run_until_idle()
+    assert eng.n_prefix_hits == 1
+    assert eng.decode_compiles == d0 + 1
+    eng.submit(shared + [13, 14], max_new_tokens=3)
+    eng.run_until_idle()
+    assert eng.n_prefix_hits == 2
+    assert eng.decode_compiles == d0 + 1

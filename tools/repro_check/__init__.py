@@ -12,6 +12,9 @@ Rules (see docs/invariants.md):
   R4  determinism discipline (no wall clock / global RNG / set order)
   R5  unit-suffix arithmetic (no seconds + tokens)
   R6  trace-emission coverage (every handled event leaves a trace row)
+  R7  jit tracing-safety (no Python control flow / host sync on tracers)
+  R8  recompilation hazards (per-request shapes reaching jitted callees)
+  R9  Pallas kernel consistency (grid / BlockSpec / kernel-arity wiring)
 """
 from __future__ import annotations
 

@@ -192,6 +192,30 @@ DEFAULT_CONFIG = {
         },
     },
     # ------------------------------------------------------------------
+    # R7 — jit tracing-safety (compute layer)
+    # ------------------------------------------------------------------
+    "r7": {
+        # path substrings selecting the compute layer; fixtures under
+        # tests/fixtures/repro_check/kernels/ match too
+        "scope": ["kernels/", "models/", "serving/"],
+    },
+    # ------------------------------------------------------------------
+    # R8 — recompilation hazards (jitted callees fed per-request shapes)
+    # ------------------------------------------------------------------
+    "r8": {
+        "scope": ["kernels/", "models/", "serving/"],
+        # override the entry-point set for the call-graph walk; empty
+        # means "every public (non-underscore) method" of each class
+        # that jits callables onto self
+        "entry_methods": [],
+    },
+    # ------------------------------------------------------------------
+    # R9 — Pallas pallas_call wiring consistency
+    # ------------------------------------------------------------------
+    "r9": {
+        "scope": ["kernels/"],
+    },
+    # ------------------------------------------------------------------
     # R5 — unit-suffix arithmetic
     # ------------------------------------------------------------------
     "r5": {

@@ -1,9 +1,9 @@
 """Rule registry. Each module exposes RULE_ID and check(files, config)."""
 from . import (r1_ledger, r2_events, r3_coverage, r4_determinism,
-               r5_units, r6_trace)
+               r5_units, r6_trace, r7_tracing, r8_recompile, r9_pallas)
 
 ALL_RULES = {
     m.RULE_ID: m
     for m in (r1_ledger, r2_events, r3_coverage, r4_determinism, r5_units,
-              r6_trace)
+              r6_trace, r7_tracing, r8_recompile, r9_pallas)
 }

@@ -1,0 +1,372 @@
+"""Shared AST plumbing for the compute-layer rules (R7/R8/R9).
+
+The compute layer spells jit three ways —
+
+    @jax.jit / @functools.partial(jax.jit, static_argnames=(...)) def f(...)
+    self._decode = jax.jit(lambda p, t, c, pos: ...)
+    self._prefill = jax.jit(_local_def)
+
+— and Pallas kernels one way: a function (possibly wrapped in a local
+``functools.partial``) passed as the first operand of ``pl.pallas_call``.
+This module finds all of them and resolves the local-name indirections
+the kernels actually use (``kernel = functools.partial(_kernel, ...)``,
+``grid = (b, h, n)``, ``grid_spec = pltpu.PrefetchScalarGridSpec(...)``).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Set, Union
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+
+# ---------------------------------------------------------------------------
+# name helpers
+# ---------------------------------------------------------------------------
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jax.jit' for Attribute chains, 'jit' for Names, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def is_jax_jit(node: ast.AST) -> bool:
+    d = dotted(node)
+    return d in ("jit", "jax.jit")
+
+
+def is_partial(node: ast.AST) -> bool:
+    d = dotted(node)
+    return d in ("partial", "functools.partial")
+
+
+def is_pallas_call(node: ast.AST) -> bool:
+    d = dotted(node)
+    return d is not None and d.split(".")[-1] == "pallas_call"
+
+
+def _static_from_kwargs(keywords: List[ast.keyword]) -> Set[str]:
+    """Parse static_argnames=('a', 'b') / 'a' from a jit call/decorator."""
+    out: Set[str] = set()
+    for kw in keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            out.add(v.value)
+        elif isinstance(v, (ast.Tuple, ast.List)):
+            for el in v.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    out.add(el.value)
+    return out
+
+
+def positional_params(fn: FuncNode) -> List[str]:
+    a = fn.args
+    return [p.arg for p in list(a.posonlyargs) + list(a.args)]
+
+
+def kwonly_params(fn: FuncNode) -> List[str]:
+    return [p.arg for p in fn.args.kwonlyargs]
+
+
+def param_defaults(fn: FuncNode) -> Dict[str, ast.AST]:
+    """positional-param name -> default expression (only those that have one)."""
+    a = fn.args
+    pos = list(a.posonlyargs) + list(a.args)
+    out: Dict[str, ast.AST] = {}
+    for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults,
+                    strict=True):
+        out[p.arg] = d
+    for p, d in zip(a.kwonlyargs, a.kw_defaults, strict=True):
+        if d is not None:
+            out[p.arg] = d
+    return out
+
+
+def nondefault_lambda_arity(fn: ast.Lambda) -> int:
+    """Lambda params that are *not* defaulted — the repo binds loop-closure
+    constants as trailing defaults (``lambda b_, h, ki, g=g: ...``)."""
+    a = fn.args
+    n_pos = len(a.posonlyargs) + len(a.args)
+    return n_pos - len(a.defaults)
+
+
+# ---------------------------------------------------------------------------
+# local-assignment resolution
+# ---------------------------------------------------------------------------
+
+def local_assignments(scope: ast.AST) -> Dict[str, ast.AST]:
+    """name -> last assigned expression, for simple ``name = expr``
+    statements in the (non-nested) statement list of a function/module."""
+    out: Dict[str, ast.AST] = {}
+    body = getattr(scope, "body", [])
+    stack = list(body)
+    while stack:
+        stmt = stack.pop(0)
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            out[stmt.targets[0].id] = stmt.value
+        elif isinstance(stmt, (ast.If, ast.For, ast.While, ast.With)):
+            stack.extend(stmt.body)
+            stack.extend(getattr(stmt, "orelse", []))
+    return out
+
+
+def resolve(expr: ast.AST, *scopes: ast.AST) -> ast.AST:
+    """Follow Name -> local assignment through the given scopes (innermost
+    first), a bounded number of hops."""
+    for _ in range(4):
+        if not isinstance(expr, ast.Name):
+            return expr
+        for scope in scopes:
+            assigns = local_assignments(scope)
+            if expr.id in assigns:
+                expr = assigns[expr.id]
+                break
+        else:
+            return expr
+    return expr
+
+
+def find_def(name: str, *scopes: ast.AST) -> Optional[ast.FunctionDef]:
+    """Find ``def name`` in the direct bodies of the given scopes."""
+    for scope in scopes:
+        for stmt in getattr(scope, "body", []):
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and stmt.name == name:
+                return stmt
+    return None
+
+
+# ---------------------------------------------------------------------------
+# jitted-function discovery
+# ---------------------------------------------------------------------------
+
+@dataclass
+class JittedFn:
+    fn: FuncNode                  # FunctionDef or Lambda
+    statics: Set[str]             # static_argnames
+    line: int
+    via: str                      # 'decorator' | 'call'
+
+
+def _jit_decorator_statics(dec: ast.AST) -> Optional[Set[str]]:
+    """None if `dec` is not a jit decorator, else its static names."""
+    if is_jax_jit(dec):
+        return set()
+    if isinstance(dec, ast.Call):
+        if is_jax_jit(dec.func):
+            return _static_from_kwargs(dec.keywords)
+        if is_partial(dec.func) and dec.args and is_jax_jit(dec.args[0]):
+            return _static_from_kwargs(dec.keywords)
+    return None
+
+
+def iter_jitted(tree: ast.Module) -> Iterator[JittedFn]:
+    """Every function the file jits at its definition or wrap site."""
+    seen: Set[int] = set()
+    # decorated defs
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                statics = _jit_decorator_statics(dec)
+                if statics is not None and id(node) not in seen:
+                    seen.add(id(node))
+                    yield JittedFn(node, statics, node.lineno, "decorator")
+    # jax.jit(<lambda>) / jax.jit(<local name>) call sites; track the
+    # enclosing function so local defs resolve
+    parents: List[ast.AST] = [tree]
+
+    def walk(node: ast.AST, scopes: List[ast.AST]):
+        if isinstance(node, ast.Call) and is_jax_jit(node.func) and node.args:
+            target = node.args[0]
+            statics = _static_from_kwargs(node.keywords)
+            if isinstance(target, ast.Lambda):
+                yield JittedFn(target, statics, node.lineno, "call")
+            elif isinstance(target, ast.Name):
+                fd = find_def(target.id, *scopes)
+                if fd is not None and id(fd) not in seen:
+                    seen.add(id(fd))
+                    yield JittedFn(fd, statics, node.lineno, "call")
+        inner = scopes
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            inner = [node] + scopes
+        for child in ast.iter_child_nodes(node):
+            yield from walk(child, inner)
+
+    yield from walk(tree, parents)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call discovery
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PallasCall:
+    node: ast.Call                        # the pl.pallas_call(...) call
+    outer: Optional[ast.Call]             # pl.pallas_call(...)(operands...)
+    kernel: Optional[ast.FunctionDef]     # resolved kernel def
+    kernel_bound_pos: int                 # positional args pre-bound by partial
+    grid_rank: Optional[int]
+    num_prefetch: int
+    in_specs: Optional[List[ast.AST]]     # BlockSpec exprs
+    out_specs: Optional[List[ast.AST]]
+    out_shapes: Optional[List[ast.AST]]   # ShapeDtypeStruct exprs
+    n_scratch: Optional[int]
+    has_interpret: bool = False
+    kwargs: Dict[str, ast.AST] = field(default_factory=dict)
+
+
+def _tuple_len(expr: ast.AST) -> Optional[int]:
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return len(expr.elts)
+    return None
+
+
+def _as_list(expr: Optional[ast.AST], *scopes) -> Optional[List[ast.AST]]:
+    if expr is None:
+        return None
+    expr = resolve(expr, *scopes)
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return list(expr.elts)
+    return [expr]
+
+
+def _scratch_len(expr: Optional[ast.AST], *scopes) -> Optional[int]:
+    if expr is None:
+        return 0
+    expr = resolve(expr, *scopes)
+    n = _tuple_len(expr)
+    if n is not None:
+        return n
+    # helper-call idiom: scratch_shapes=_scratch(...) returning a literal list
+    if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Name):
+        fd = find_def(expr.func.id, *scopes)
+        if fd is not None:
+            for stmt in ast.walk(fd):
+                if isinstance(stmt, ast.Return) and stmt.value is not None:
+                    return _tuple_len(stmt.value)
+    return None
+
+
+def _resolve_kernel(expr: ast.AST, *scopes):
+    """(FunctionDef | None, n positional args bound by functools.partial)."""
+    expr = resolve(expr, *scopes)
+    bound = 0
+    if isinstance(expr, ast.Call) and is_partial(expr.func) and expr.args:
+        bound = len(expr.args) - 1
+        expr = resolve(expr.args[0], *scopes)
+    if isinstance(expr, ast.Name):
+        fd = find_def(expr.id, *scopes)
+        return fd, bound
+    if isinstance(expr, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return expr, bound
+    return None, bound
+
+
+def iter_pallas_calls(tree: ast.Module) -> Iterator[PallasCall]:
+    # map each pallas_call node to its immediately-outer operand call
+    outer_of: Dict[int, ast.Call] = {}
+    enclosing: Dict[int, List[ast.AST]] = {}
+
+    def walk(node: ast.AST, scopes: List[ast.AST]):
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Call) and is_pallas_call(
+                    node.func.func):
+                outer_of[id(node.func)] = node
+            if is_pallas_call(node.func):
+                enclosing[id(node)] = list(scopes)
+        inner = scopes
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            inner = [node] + scopes
+        for child in ast.iter_child_nodes(node):
+            walk(child, inner)
+
+    walk(tree, [tree])
+
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and is_pallas_call(node.func)):
+            continue
+        scopes = enclosing.get(id(node), [tree])
+        kwargs = {kw.arg: kw.value for kw in node.keywords
+                  if kw.arg is not None}
+        kernel, bound = (None, 0)
+        if node.args:
+            kernel, bound = _resolve_kernel(node.args[0], *scopes)
+        elif "kernel" in kwargs:
+            kernel, bound = _resolve_kernel(kwargs["kernel"], *scopes)
+
+        grid_expr = kwargs.get("grid")
+        in_specs_expr = kwargs.get("in_specs")
+        out_specs_expr = kwargs.get("out_specs")
+        scratch_expr = kwargs.get("scratch_shapes")
+        num_prefetch = 0
+        gs = kwargs.get("grid_spec")
+        if gs is not None:
+            gs = resolve(gs, *scopes)
+            if isinstance(gs, ast.Call):
+                gskw = {kw.arg: kw.value for kw in gs.keywords
+                        if kw.arg is not None}
+                grid_expr = gskw.get("grid", grid_expr)
+                in_specs_expr = gskw.get("in_specs", in_specs_expr)
+                out_specs_expr = gskw.get("out_specs", out_specs_expr)
+                scratch_expr = gskw.get("scratch_shapes", scratch_expr)
+                np_expr = gskw.get("num_scalar_prefetch")
+                if isinstance(np_expr, ast.Constant) \
+                        and isinstance(np_expr.value, int):
+                    num_prefetch = np_expr.value
+
+        grid_rank = None
+        if grid_expr is not None:
+            grid_rank = _tuple_len(resolve(grid_expr, *scopes))
+
+        out_shape_expr = kwargs.get("out_shape")
+        out_shapes = None
+        if out_shape_expr is not None:
+            resolved = resolve(out_shape_expr, *scopes)
+            out_shapes = list(resolved.elts) \
+                if isinstance(resolved, (ast.Tuple, ast.List)) else [resolved]
+
+        yield PallasCall(
+            node=node,
+            outer=outer_of.get(id(node)),
+            kernel=kernel,
+            kernel_bound_pos=bound,
+            grid_rank=grid_rank,
+            num_prefetch=num_prefetch,
+            in_specs=_as_list(in_specs_expr, *scopes),
+            out_specs=_as_list(out_specs_expr, *scopes),
+            out_shapes=out_shapes,
+            n_scratch=_scratch_len(scratch_expr, *scopes),
+            has_interpret="interpret" in kwargs,
+            kwargs=kwargs,
+        )
+
+
+def blockspec_parts(spec: ast.AST):
+    """(block_shape_tuple | None, index_map_lambda | None, is_blockspec).
+
+    ``pl.BlockSpec(memory_space=...)`` yields (None, None, True) — a full
+    operand in one (SMEM/ANY) block, nothing to check.
+    """
+    if not (isinstance(spec, ast.Call) and dotted(spec.func) is not None
+            and dotted(spec.func).split(".")[-1] == "BlockSpec"):
+        return None, None, False
+    shape = spec.args[0] if spec.args else None
+    imap = spec.args[1] if len(spec.args) > 1 else None
+    for kw in spec.keywords:
+        if kw.arg == "block_shape":
+            shape = kw.value
+        elif kw.arg == "index_map":
+            imap = kw.value
+    if not isinstance(shape, (ast.Tuple, ast.List)):
+        shape = None
+    if not isinstance(imap, ast.Lambda):
+        imap = None
+    return shape, imap, True

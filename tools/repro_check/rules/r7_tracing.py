@@ -1,0 +1,316 @@
+"""R7 — jit tracing-safety.
+
+Inside a jitted function (``@jax.jit``, ``functools.partial(jax.jit,
+...)``, ``self.f = jax.jit(...)``) every non-static argument is a
+tracer: Python ``if``/``while``/``assert``/``for`` on a value derived
+from one either raises ``ConcretizationTypeError`` or — worse — bakes
+one branch in silently. The same applies inside a Pallas kernel body,
+where every positional ref (and ``pl.program_id``) is traced. This rule
+runs a per-function forward taint walk from the traced parameters and
+flags:
+
+- Python control flow (``if``/``while``/``assert``/ternary/``for``)
+  whose test or iterable is taint-reachable from a traced argument;
+- ``bool()``/``int()``/``float()`` and ``.item()``/``.tolist()`` on
+  traced values (host synchronization / concretization);
+- host side effects: bare ``print(...)`` (use ``jax.debug.print``),
+  ``global`` mutation, and ``np.``/``numpy.`` host ops applied to
+  traced values;
+- ``static_argnames`` entries whose default is a non-hashable literal
+  (list/dict/set) — jit's cache key would raise ``TypeError``.
+
+Attribute reads that are static at trace time (``.shape``, ``.ndim``,
+``.dtype``, ...) and ``len()``/``isinstance()``/``type()`` results
+un-taint, so shape-driven control flow stays legal. Keyword-only
+kernel parameters bound via ``functools.partial`` are compile-time
+constants and start untainted. Nested function definitions are not
+descended into (``pl.when``-style sub-kernels handle traced
+predicates by construction).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..core import Finding, SourceFile
+from . import jitutil
+
+RULE_ID = "R7"
+
+# attribute reads whose result is a static Python value at trace time
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "sharding",
+                "aval", "weak_type", "nbytes"}
+# builtins whose result on a tracer is a static Python value
+UNTAINT_CALLS = {"len", "isinstance", "type", "hash", "id"}
+CONCRETIZE_CALLS = {"bool", "int", "float"}
+HOST_METHODS = {"item", "tolist", "block_until_ready"}
+NONHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp)
+
+
+def _is_program_id(func: ast.AST) -> bool:
+    d = jitutil.dotted(func)
+    return d is not None and d.split(".")[-1] in ("program_id",
+                                                  "num_programs")
+
+
+def _tainted(expr: ast.AST, env: Set[str]) -> bool:
+    if isinstance(expr, ast.Name):
+        return expr.id in env
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in STATIC_ATTRS:
+            return False
+        return _tainted(expr.value, env)
+    if isinstance(expr, ast.Subscript):
+        return _tainted(expr.value, env)
+    if isinstance(expr, ast.Call):
+        if _is_program_id(expr.func):
+            return True
+        if isinstance(expr.func, ast.Name) and expr.func.id in UNTAINT_CALLS:
+            return False
+        if isinstance(expr.func, ast.Attribute) \
+                and _tainted(expr.func.value, env):
+            return True
+        return any(_tainted(a, env) for a in expr.args) or \
+            any(_tainted(kw.value, env) for kw in expr.keywords)
+    if isinstance(expr, ast.BinOp):
+        return _tainted(expr.left, env) or _tainted(expr.right, env)
+    if isinstance(expr, ast.BoolOp):
+        return any(_tainted(v, env) for v in expr.values)
+    if isinstance(expr, ast.UnaryOp):
+        return _tainted(expr.operand, env)
+    if isinstance(expr, ast.Compare):
+        return _tainted(expr.left, env) or \
+            any(_tainted(c, env) for c in expr.comparators)
+    if isinstance(expr, ast.IfExp):
+        return _tainted(expr.test, env) or _tainted(expr.body, env) or \
+            _tainted(expr.orelse, env)
+    if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+        return any(_tainted(e, env) for e in expr.elts)
+    if isinstance(expr, ast.Dict):
+        return any(v is not None and _tainted(v, env) for v in expr.values)
+    if isinstance(expr, ast.Starred):
+        return _tainted(expr.value, env)
+    if isinstance(expr, (ast.JoinedStr, ast.FormattedValue)):
+        vals = expr.values if isinstance(expr, ast.JoinedStr) \
+            else [expr.value]
+        return any(_tainted(v, env) for v in vals)
+    if isinstance(expr, ast.Slice):
+        return any(p is not None and _tainted(p, env)
+                   for p in (expr.lower, expr.upper, expr.step))
+    return False
+
+
+class _FnReport:
+    """Findings for one jitted function / kernel body."""
+
+    def __init__(self, sf: SourceFile, params: Set[str], statics: Set[str],
+                 kind: str):
+        self.sf = sf
+        self.params = params           # traced parameter names
+        self.statics = statics
+        self.kind = kind               # 'jitted function' | 'Pallas kernel'
+        self.findings: List[Finding] = []
+
+    def flag(self, line: int, msg: str) -> None:
+        self.findings.append(Finding(self.sf.relpath, line, RULE_ID, msg))
+
+    # -- expression-level hazards (concretization / host effects) --------
+
+    def scan_expr(self, node: ast.AST, env: Set[str]) -> None:
+        """Walk an expression (or simple statement), skipping nested
+        function bodies, flagging concretization and host effects."""
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs (pl.when bodies, scan carriers) are traced by
+            # the combinator that consumes them — out of scope here
+            for dec in node.decorator_list:
+                self.scan_expr(dec, env)
+            return
+        if isinstance(node, ast.Lambda):
+            return
+        if isinstance(node, ast.Call):
+            fd = jitutil.dotted(node.func)
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in CONCRETIZE_CALLS \
+                    and any(_tainted(a, env) for a in node.args):
+                self.flag(node.lineno,
+                          f"`{node.func.id}()` concretizes a traced value "
+                          f"inside a {self.kind} — forces host sync or "
+                          f"raises ConcretizationTypeError")
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in HOST_METHODS \
+                    and _tainted(node.func.value, env):
+                self.flag(node.lineno,
+                          f"`.{node.func.attr}()` on a traced value inside "
+                          f"a {self.kind} — host synchronization defeats "
+                          f"async dispatch and fails under trace")
+            elif isinstance(node.func, ast.Name) and node.func.id == "print":
+                self.flag(node.lineno,
+                          f"host `print(...)` inside a {self.kind} runs at "
+                          f"trace time only — use jax.debug.print")
+            elif fd is not None \
+                    and (fd.startswith("np.") or fd.startswith("numpy.")) \
+                    and (any(_tainted(a, env) for a in node.args) or
+                         any(_tainted(kw.value, env)
+                             for kw in node.keywords)):
+                self.flag(node.lineno,
+                          f"`{fd}(...)` applies a host numpy op to a traced "
+                          f"value inside a {self.kind} — use jnp/jax.lax")
+        if isinstance(node, ast.IfExp) and _tainted(node.test, env):
+            self.flag(node.lineno,
+                      self._branch_msg("conditional expression", node.test))
+        for child in ast.iter_child_nodes(node):
+            self.scan_expr(child, env)
+
+    # -- control-flow hazards --------------------------------------------
+
+    def _branch_msg(self, what: str, test: ast.AST) -> str:
+        msg = (f"Python {what} on a value data-dependent on traced "
+               f"arguments of a {self.kind} — use jnp.where/lax.cond"
+               + ("/pl.when" if self.kind == "Pallas kernel" else ""))
+        bare = sorted({n.id for n in ast.walk(test)
+                       if isinstance(n, ast.Name) and n.id in self.params})
+        if bare and self.kind == "jitted function":
+            msg += (f"; if `{'`/`'.join(bare)}` is a compile-time "
+                    f"constant, add it to static_argnames")
+        return msg
+
+    def walk_block(self, stmts: List[ast.stmt], env: Set[str]) -> Set[str]:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                for dec in getattr(stmt, "decorator_list", []):
+                    self.scan_expr(dec, env)
+                continue
+            if isinstance(stmt, ast.Global):
+                self.flag(stmt.lineno,
+                          f"`global` mutation inside a {self.kind} is a "
+                          f"trace-time side effect — it runs once per "
+                          f"compile, not per call")
+                continue
+            if isinstance(stmt, ast.If):
+                self.scan_expr(stmt.test, env)
+                if _tainted(stmt.test, env):
+                    self.flag(stmt.lineno,
+                              self._branch_msg("`if`", stmt.test))
+                a = self.walk_block(stmt.body, set(env))
+                b = self.walk_block(stmt.orelse, set(env))
+                env.clear()
+                env.update(a | b)
+            elif isinstance(stmt, ast.While):
+                self.scan_expr(stmt.test, env)
+                if _tainted(stmt.test, env):
+                    self.flag(stmt.lineno,
+                              self._branch_msg("`while`", stmt.test))
+                for _ in range(2):
+                    env.update(self.walk_block(stmt.body, set(env)))
+            elif isinstance(stmt, ast.For):
+                self.scan_expr(stmt.iter, env)
+                if _tainted(stmt.iter, env):
+                    self.flag(stmt.lineno,
+                              f"Python `for` over a traced iterable inside "
+                              f"a {self.kind} — use lax.fori_loop/lax.scan")
+                    for n in ast.walk(stmt.target):
+                        if isinstance(n, ast.Name):
+                            env.add(n.id)
+                for _ in range(2):
+                    env.update(self.walk_block(stmt.body, set(env)))
+                env.update(self.walk_block(stmt.orelse, set(env)))
+            elif isinstance(stmt, ast.Assert):
+                self.scan_expr(stmt.test, env)
+                if _tainted(stmt.test, env):
+                    self.flag(stmt.lineno,
+                              self._branch_msg("`assert`", stmt.test))
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    self.scan_expr(item.context_expr, env)
+                env.update(self.walk_block(stmt.body, set(env)))
+            elif isinstance(stmt, ast.Try):
+                env.update(self.walk_block(stmt.body, set(env)))
+                for h in stmt.handlers:
+                    env.update(self.walk_block(h.body, set(env)))
+                env.update(self.walk_block(stmt.orelse, set(env)))
+                env.update(self.walk_block(stmt.finalbody, set(env)))
+            elif isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                self.scan_expr(stmt, env)
+                value = stmt.value
+                if value is None:
+                    continue
+                is_tainted = _tainted(value, env)
+                targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                    else [stmt.target]
+                for tgt in targets:
+                    names = [n.id for n in ast.walk(tgt)
+                             if isinstance(n, ast.Name)
+                             and isinstance(n.ctx, ast.Store)]
+                    if isinstance(stmt, ast.AugAssign):
+                        if is_tainted:
+                            env.update(names)
+                    elif is_tainted:
+                        env.update(names)
+                    else:
+                        env.difference_update(names)
+            else:
+                self.scan_expr(stmt, env)
+        return env
+
+
+def _analyze(sf: SourceFile, fn, traced: Set[str], statics: Set[str],
+             kind: str) -> List[Finding]:
+    rep = _FnReport(sf, traced, statics, kind)
+    if isinstance(fn, ast.Lambda):
+        env = set(traced)
+        rep.scan_expr(fn.body, env)
+        if isinstance(fn.body, ast.IfExp) and _tainted(fn.body.test, env):
+            pass  # already flagged by scan_expr
+    else:
+        rep.walk_block(fn.body, set(traced))
+    return rep.findings
+
+
+def _static_default_findings(sf: SourceFile, jf) -> List[Finding]:
+    out: List[Finding] = []
+    if isinstance(jf.fn, ast.Lambda):
+        return out
+    defaults = jitutil.param_defaults(jf.fn)
+    for name in sorted(jf.statics):
+        d = defaults.get(name)
+        if d is not None and isinstance(d, NONHASHABLE):
+            out.append(Finding(
+                sf.relpath, d.lineno, RULE_ID,
+                f"static_argnames entry `{name}` has a non-hashable "
+                f"default — jit's cache key requires hashable statics"))
+    return out
+
+
+def check(files: List[SourceFile], config: dict) -> List[Finding]:
+    cfg = config.get("r7", {})
+    scope = cfg.get("scope", [])
+    findings: List[Finding] = []
+    for sf in files:
+        if scope and not any(s in sf.relpath for s in scope):
+            continue
+        seen: Set[int] = set()
+        for jf in jitutil.iter_jitted(sf.tree):
+            if id(jf.fn) in seen:
+                continue
+            seen.add(id(jf.fn))
+            params = set(jitutil.positional_params(jf.fn)) \
+                | set(jitutil.kwonly_params(jf.fn))
+            traced = {p for p in params
+                      if p not in jf.statics and p != "self"}
+            findings.extend(
+                _analyze(sf, jf.fn, traced, jf.statics, "jitted function"))
+            findings.extend(_static_default_findings(sf, jf))
+        for pc in jitutil.iter_pallas_calls(sf.tree):
+            k = pc.kernel
+            if k is None or id(k) in seen:
+                continue
+            seen.add(id(k))
+            pos = jitutil.positional_params(k)[pc.kernel_bound_pos:]
+            # kw-only params come from functools.partial at build time:
+            # compile-time constants, untainted
+            findings.extend(
+                _analyze(sf, k, set(pos), set(jitutil.kwonly_params(k)),
+                         "Pallas kernel"))
+    return findings

@@ -1,0 +1,363 @@
+"""R8 — recompilation hazards.
+
+``jax.jit`` specializes on argument *shapes*: a call site whose operand
+shapes derive from per-request Python values recompiles silently for
+every distinct shape — the classic 100× first-token stall. This rule
+finds every class that jits callables onto ``self`` (``self._decode =
+jax.jit(...)``), walks the call graph from its public entry points
+(``step``/``submit``/...), and runs a two-level taint analysis per
+reachable method:
+
+- **value-taint**: per-request Python values — method parameters,
+  element reads from ``self`` containers (``self.queue[0]``),
+  ``.pop(...)`` results, attributes (``req.prompt``) and ``len()`` of
+  tainted values;
+- **shape-taint**: arrays whose *shape* depends on a value-tainted
+  quantity — ``[0] * n``, list concatenation with such a list, and
+  array constructors (``jnp.asarray``/``zeros``/``arange``/...) fed a
+  tainted non-literal argument. A *literal* list fed to a data
+  constructor keeps a static shape even when its elements are tainted
+  (``jnp.asarray([[tok]])`` is fine).
+
+Flagged: passing a shape-tainted operand to a jitted callee (pad or
+bucket to a fixed shape set instead), ``**``-splatting kwargs into a
+jitted callee (dict key order enters the cache key), and jitted
+lambdas that close over a locally-constructed array (it is baked into
+the compiled graph as a constant).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..core import Finding, SourceFile
+from . import jitutil
+
+RULE_ID = "R8"
+
+NONE, VAL, SHAPE = 0, 1, 2
+
+# constructors whose output shape follows a *shape/size argument*: any
+# tainted argument (even inside a literal tuple) makes the shape dynamic
+SHAPE_CTORS = {"zeros", "ones", "full", "empty", "arange", "linspace",
+               "broadcast_to", "reshape", "tile", "repeat", "pad",
+               "zeros_like_shape"}
+# constructors whose output shape follows the *data argument*: a literal
+# list pins the shape; a tainted non-literal argument does not
+DATA_CTORS = {"asarray", "array", "stack", "concatenate", "hstack",
+              "vstack"}
+
+
+def _ctor_kind(func: ast.AST) -> Optional[str]:
+    d = jitutil.dotted(func)
+    if d is None:
+        return None
+    last = d.split(".")[-1]
+    if last in SHAPE_CTORS:
+        return "shape"
+    if last in DATA_CTORS:
+        return "data"
+    return None
+
+
+def _is_self_attr(node: ast.AST) -> bool:
+    return isinstance(node, ast.Attribute) \
+        and isinstance(node.value, ast.Name) and node.value.id == "self"
+
+
+class _Taint:
+    def __init__(self, env: Dict[str, int]):
+        self.env = env
+
+    def level(self, expr: ast.AST) -> int:
+        env = self.env
+        if isinstance(expr, ast.Name):
+            return env.get(expr.id, NONE)
+        if isinstance(expr, ast.Attribute):
+            # req.prompt: attribute of a tainted object is per-request
+            return VAL if self.level(expr.value) > NONE else NONE
+        if isinstance(expr, ast.Subscript):
+            base = self.level(expr.value)
+            if base == SHAPE:
+                return SHAPE              # slicing a dynamic-shape array
+            if base == VAL:
+                return VAL
+            # element read from a self container: per-request state
+            return VAL if _is_self_attr(expr.value) else NONE
+        if isinstance(expr, ast.Call):
+            return self._call_level(expr)
+        if isinstance(expr, ast.BinOp):
+            l, r = self.level(expr.left), self.level(expr.right)
+            if isinstance(expr.op, ast.Mult):
+                # [pad] * n with n per-request → dynamic-length list
+                sides = ((expr.left, r), (expr.right, l))
+                for lit, other in sides:
+                    if isinstance(lit, (ast.List, ast.Tuple,
+                                        ast.Constant)) and other >= VAL:
+                        return SHAPE
+            return max(l, r)
+        if isinstance(expr, ast.BoolOp):
+            return max((self.level(v) for v in expr.values), default=NONE)
+        if isinstance(expr, ast.UnaryOp):
+            return self.level(expr.operand)
+        if isinstance(expr, ast.Compare):
+            lv = max((self.level(c) for c in expr.comparators),
+                     default=NONE)
+            return min(max(self.level(expr.left), lv), VAL)
+        if isinstance(expr, ast.IfExp):
+            return max(self.level(expr.test), self.level(expr.body),
+                       self.level(expr.orelse))
+        if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+            # literal container: static length; tainted elements stay VAL
+            lv = max((self.level(e) for e in expr.elts), default=NONE)
+            return min(lv, VAL) if not any(
+                isinstance(e, ast.Starred) for e in expr.elts) else lv
+        if isinstance(expr, ast.Dict):
+            return max((self.level(v) for v in expr.values
+                        if v is not None), default=NONE)
+        if isinstance(expr, ast.Starred):
+            return self.level(expr.value)
+        return NONE
+
+    def _call_level(self, call: ast.Call) -> int:
+        kind = _ctor_kind(call.func)
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        if kind == "shape":
+            # any tainted arg — including inside a literal shape tuple
+            def deep(a):
+                if isinstance(a, (ast.Tuple, ast.List)):
+                    return max((deep(e) for e in a.elts), default=NONE)
+                return self.level(a)
+            if max((deep(a) for a in args), default=NONE) >= VAL:
+                return SHAPE
+            return NONE
+        if kind == "data":
+            lv = NONE
+            for a in args:
+                la = self.level(a)
+                if la >= VAL and not isinstance(a, (ast.List, ast.Tuple,
+                                                   ast.Constant)):
+                    return SHAPE
+                lv = max(lv, min(la, VAL))
+            return lv
+        if isinstance(call.func, ast.Attribute) and call.func.attr == "pop":
+            return VAL                    # queue.pop(...) hands out a request
+        recv = self.level(call.func.value) \
+            if isinstance(call.func, ast.Attribute) else NONE
+        lv = max((self.level(a) for a in args), default=NONE)
+        return min(max(recv, lv), VAL)    # unknown callees cap at value
+
+
+def _module_jitted_names(tree: ast.Module) -> Set[str]:
+    names: Set[str] = set()
+    for jf in jitutil.iter_jitted(tree):
+        if isinstance(jf.fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(jf.fn.name)
+    return names
+
+
+def _jit_attrs(cls: ast.ClassDef) -> Dict[str, ast.Call]:
+    """attr name -> the jax.jit(...) call assigned to self.<attr>."""
+    out: Dict[str, ast.Call] = {}
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and _is_self_attr(node.targets[0]) \
+                and isinstance(node.value, ast.Call) \
+                and jitutil.is_jax_jit(node.value.func):
+            out[node.targets[0].attr] = node.value
+    return out
+
+
+def _methods(cls: ast.ClassDef) -> Dict[str, ast.FunctionDef]:
+    return {s.name: s for s in cls.body
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _reachable(cls: ast.ClassDef, entries: List[str]) -> List[str]:
+    methods = _methods(cls)
+    seen: List[str] = []
+    queue = [e for e in entries if e in methods]
+    while queue:
+        name = queue.pop(0)
+        if name in seen:
+            continue
+        seen.append(name)
+        for node in ast.walk(methods[name]):
+            if isinstance(node, ast.Call) and _is_self_attr(node.func) \
+                    and node.func.attr in methods:
+                queue.append(node.func.attr)
+    return seen
+
+
+class _MethodScan:
+    def __init__(self, sf: SourceFile, jit_names: Set[str],
+                 module_jitted: Set[str]):
+        self.sf = sf
+        self.jit_names = jit_names
+        self.module_jitted = module_jitted
+        self.findings: List[Finding] = []
+        self._flagged: Set[Tuple[int, str]] = set()
+
+    def flag(self, line: int, name: str, msg: str) -> None:
+        if (line, name) in self._flagged:
+            return
+        self._flagged.add((line, name))
+        self.findings.append(Finding(self.sf.relpath, line, RULE_ID, msg))
+
+    def _jitted_callee(self, func: ast.AST) -> Optional[str]:
+        if _is_self_attr(func) and func.attr in self.jit_names:
+            return f"self.{func.attr}"
+        if isinstance(func, ast.Name) and func.id in self.module_jitted:
+            return func.id
+        return None
+
+    def scan_expr(self, node: ast.AST, taint: _Taint) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return
+        if isinstance(node, ast.Call):
+            callee = self._jitted_callee(node.func)
+            if callee is not None:
+                for kw in node.keywords:
+                    if kw.arg is None:
+                        self.flag(node.lineno, callee,
+                                  f"`**` kwargs splat into jitted "
+                                  f"`{callee}` — dict keys and order "
+                                  f"enter the jit cache key; pass "
+                                  f"explicit keywords")
+                shaped = [a for a in list(node.args)
+                          + [kw.value for kw in node.keywords
+                             if kw.arg is not None]
+                          if taint.level(a) == SHAPE]
+                if shaped:
+                    self.flag(node.lineno, callee,
+                              f"operand shape at this `{callee}` call "
+                              f"derives from per-request Python values — "
+                              f"every distinct shape silently recompiles; "
+                              f"pad or bucket to a fixed shape set")
+        for child in ast.iter_child_nodes(node):
+            self.scan_expr(child, taint)
+
+    def walk_block(self, stmts: List[ast.stmt],
+                   env: Dict[str, int]) -> Dict[str, int]:
+        taint = _Taint(env)
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, ast.If):
+                self.scan_expr(stmt.test, taint)
+                a = self.walk_block(stmt.body, dict(env))
+                b = self.walk_block(stmt.orelse, dict(env))
+                for k in set(a) | set(b):
+                    env[k] = max(a.get(k, NONE), b.get(k, NONE))
+            elif isinstance(stmt, (ast.While, ast.For)):
+                if isinstance(stmt, ast.For):
+                    self.scan_expr(stmt.iter, taint)
+                    lv = min(taint.level(stmt.iter), VAL)
+                    if lv:
+                        for n in ast.walk(stmt.target):
+                            if isinstance(n, ast.Name):
+                                env[n.id] = lv
+                else:
+                    self.scan_expr(stmt.test, taint)
+                for _ in range(2):
+                    env.update(self.walk_block(stmt.body, dict(env)))
+                env.update(self.walk_block(stmt.orelse, dict(env)))
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    self.scan_expr(item.context_expr, taint)
+                env.update(self.walk_block(stmt.body, dict(env)))
+            elif isinstance(stmt, ast.Try):
+                env.update(self.walk_block(stmt.body, dict(env)))
+                for h in stmt.handlers:
+                    env.update(self.walk_block(h.body, dict(env)))
+                env.update(self.walk_block(stmt.orelse, dict(env)))
+                env.update(self.walk_block(stmt.finalbody, dict(env)))
+            elif isinstance(stmt, (ast.Assign, ast.AnnAssign,
+                                   ast.AugAssign)):
+                self.scan_expr(stmt, taint)
+                if stmt.value is None:
+                    continue
+                lv = taint.level(stmt.value)
+                targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                    else [stmt.target]
+                for tgt in targets:
+                    if isinstance(tgt, ast.Name):
+                        if isinstance(stmt, ast.AugAssign):
+                            env[tgt.id] = max(env.get(tgt.id, NONE), lv)
+                        else:
+                            env[tgt.id] = lv
+                    elif isinstance(tgt, ast.Subscript) \
+                            and isinstance(tgt.value, ast.Name):
+                        env[tgt.value.id] = max(
+                            env.get(tgt.value.id, NONE), lv)
+                    elif isinstance(tgt, ast.Tuple):
+                        for n in tgt.elts:
+                            if isinstance(n, ast.Name):
+                                env[n.id] = lv
+            else:
+                self.scan_expr(stmt, taint)
+        return env
+
+
+def _closure_capture_findings(sf: SourceFile,
+                              cls: ast.ClassDef) -> List[Finding]:
+    """jax.jit(lambda ...) whose body reads a local bound to an array
+    constructor — the array is baked into the jitted graph."""
+    out: List[Finding] = []
+    for meth in _methods(cls).values():
+        assigns = jitutil.local_assignments(meth)
+        for node in ast.walk(meth):
+            if not (isinstance(node, ast.Call)
+                    and jitutil.is_jax_jit(node.func) and node.args
+                    and isinstance(node.args[0], ast.Lambda)):
+                continue
+            lam = node.args[0]
+            params = set(jitutil.positional_params(lam)) \
+                | set(jitutil.kwonly_params(lam))
+            for name_node in ast.walk(lam.body):
+                if not (isinstance(name_node, ast.Name)
+                        and isinstance(name_node.ctx, ast.Load)
+                        and name_node.id not in params):
+                    continue
+                bound = assigns.get(name_node.id)
+                if isinstance(bound, ast.Call) \
+                        and _ctor_kind(bound.func) is not None:
+                    out.append(Finding(
+                        sf.relpath, node.lineno, RULE_ID,
+                        f"jitted lambda closes over array "
+                        f"`{name_node.id}` — it is baked into the "
+                        f"compiled graph as a constant; pass it as an "
+                        f"argument instead"))
+    return out
+
+
+def check(files: List[SourceFile], config: dict) -> List[Finding]:
+    cfg = config.get("r8", {})
+    scope = cfg.get("scope", [])
+    entry_override = cfg.get("entry_methods", [])
+    findings: List[Finding] = []
+    for sf in files:
+        if scope and not any(s in sf.relpath for s in scope):
+            continue
+        module_jitted = _module_jitted_names(sf.tree)
+        for cls in ast.walk(sf.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            jit_names = set(_jit_attrs(cls))
+            if not jit_names:
+                continue
+            findings.extend(_closure_capture_findings(sf, cls))
+            methods = _methods(cls)
+            entries = entry_override or sorted(
+                m for m in methods if not m.startswith("_"))
+            scan = _MethodScan(sf, jit_names, module_jitted)
+            for name in _reachable(cls, entries):
+                meth = methods[name]
+                env = {p: VAL
+                       for p in jitutil.positional_params(meth)
+                       + jitutil.kwonly_params(meth) if p != "self"}
+                scan.walk_block(meth.body, env)
+            findings.extend(scan.findings)
+    return findings

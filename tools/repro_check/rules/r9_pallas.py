@@ -1,0 +1,158 @@
+"""R9 — Pallas kernel consistency.
+
+A ``pl.pallas_call`` wires together five things that must agree but
+that Pallas only validates at trace time (and, for some mismatches,
+only on real TPU hardware — interpret mode happily runs index maps of
+the wrong arity): the grid, the Block Specs, the kernel signature, the
+out_shape, and the operand list. This rule statically cross-checks
+every ``pl.pallas_call`` in scope:
+
+- **index-map arity**: each BlockSpec index map must take exactly
+  ``grid rank + num_scalar_prefetch`` arguments (scalar-prefetch refs
+  arrive as trailing index-map args; loop-closure constants bound as
+  trailing defaults, ``lambda ..., g=g:``, are excluded);
+- **index-map result**: the returned tuple must have one coordinate
+  per block-shape dimension;
+- **out_specs vs out_shape**: one spec per ShapeDtypeStruct, with
+  matching rank;
+- **operand count**: outer-call operands must equal
+  ``num_scalar_prefetch + len(in_specs)``;
+- **kernel arity**: the kernel's positional parameters must equal
+  prefetch refs + input refs + output refs + scratch refs
+  (``functools.partial``-bound keywords are compile-time constants and
+  don't count);
+- **interpret guard**: every ``pallas_call`` must pass ``interpret=``
+  explicitly (the repo routes it through ``ops._auto_interpret`` so
+  kernels run everywhere; a call without it is TPU-only by accident).
+
+``pl.BlockSpec(memory_space=...)`` (whole-operand SMEM/ANY blocks)
+counts as an operand but has no block shape or index map to check.
+Pieces the resolver cannot see through (computed spec lists, starred
+operands) are skipped, not guessed at.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from ..core import Finding, SourceFile
+from . import jitutil
+
+RULE_ID = "R9"
+
+
+def _sds_rank(expr: ast.AST) -> Optional[int]:
+    """Rank of a jax.ShapeDtypeStruct((...), dtype) literal."""
+    if not isinstance(expr, ast.Call):
+        return None
+    d = jitutil.dotted(expr.func)
+    if d is None or d.split(".")[-1] != "ShapeDtypeStruct":
+        return None
+    shape = expr.args[0] if expr.args else None
+    for kw in expr.keywords:
+        if kw.arg == "shape":
+            shape = kw.value
+    if isinstance(shape, (ast.Tuple, ast.List)):
+        return len(shape.elts)
+    return None
+
+
+def _map_result_len(imap: ast.Lambda) -> Optional[int]:
+    if isinstance(imap.body, ast.Tuple):
+        return len(imap.body.elts)
+    return None
+
+
+def check(files: List[SourceFile], config: dict) -> List[Finding]:
+    cfg = config.get("r9", {})
+    scope = cfg.get("scope", ["kernels/"])
+    findings: List[Finding] = []
+    for sf in files:
+        if scope and not any(s in sf.relpath for s in scope):
+            continue
+        for pc in jitutil.iter_pallas_calls(sf.tree):
+            line = pc.node.lineno
+
+            def flag(ln: int, msg: str) -> None:
+                findings.append(Finding(sf.relpath, ln, RULE_ID, msg))
+
+            if not pc.has_interpret:
+                flag(line,
+                     "pallas_call without an explicit `interpret=` — "
+                     "route it through ops._auto_interpret so the kernel "
+                     "runs off-TPU (interpret mode) and fails loudly when "
+                     "lowering is unavailable")
+
+            expected_arity = None
+            if pc.grid_rank is not None:
+                expected_arity = pc.grid_rank + pc.num_prefetch
+
+            labeled = []
+            for i, spec in enumerate(pc.in_specs or []):
+                labeled.append((f"in_specs[{i}]", spec, None))
+            out_ranks = [(_sds_rank(s), s) for s in (pc.out_shapes or [])]
+            for i, spec in enumerate(pc.out_specs or []):
+                rank = out_ranks[i][0] if i < len(out_ranks) else None
+                labeled.append((f"out_specs[{i}]", spec, rank))
+
+            for label, spec, sds_rank in labeled:
+                shape, imap, is_bs = jitutil.blockspec_parts(spec)
+                if not is_bs:
+                    continue
+                if imap is not None and expected_arity is not None:
+                    arity = jitutil.nondefault_lambda_arity(imap)
+                    if arity != expected_arity:
+                        flag(imap.lineno,
+                             f"{label} index map takes {arity} args but "
+                             f"the grid has rank {pc.grid_rank}"
+                             + (f" + {pc.num_prefetch} scalar-prefetch "
+                                f"refs" if pc.num_prefetch else "")
+                             + f" — expected {expected_arity}")
+                if imap is not None and shape is not None:
+                    n = _map_result_len(imap)
+                    if n is not None and n != len(shape.elts):
+                        flag(imap.lineno,
+                             f"{label} index map returns {n} coordinates "
+                             f"for a rank-{len(shape.elts)} block shape")
+                if shape is not None and sds_rank is not None \
+                        and len(shape.elts) != sds_rank:
+                    flag(spec.lineno,
+                         f"{label} block shape is rank {len(shape.elts)} "
+                         f"but the matching out_shape entry is rank "
+                         f"{sds_rank}")
+
+            if pc.out_specs is not None and pc.out_shapes is not None \
+                    and len(pc.out_specs) != len(pc.out_shapes):
+                flag(line,
+                     f"{len(pc.out_specs)} out_specs for "
+                     f"{len(pc.out_shapes)} out_shape entries")
+
+            if pc.outer is not None and pc.in_specs is not None \
+                    and not any(isinstance(a, ast.Starred)
+                                for a in pc.outer.args) \
+                    and not pc.outer.keywords:
+                n_ops = len(pc.outer.args)
+                want = pc.num_prefetch + len(pc.in_specs)
+                if n_ops != want:
+                    flag(pc.outer.lineno,
+                         f"pallas_call receives {n_ops} operands but "
+                         f"declares {len(pc.in_specs)} in_specs"
+                         + (f" + {pc.num_prefetch} scalar-prefetch"
+                            if pc.num_prefetch else "")
+                         + f" — expected {want}")
+
+            if pc.kernel is not None and pc.in_specs is not None \
+                    and pc.out_specs is not None and pc.n_scratch is not None:
+                n_kernel = len(jitutil.positional_params(pc.kernel)) \
+                    - pc.kernel_bound_pos
+                want = pc.num_prefetch + len(pc.in_specs) \
+                    + len(pc.out_specs) + pc.n_scratch
+                if n_kernel != want:
+                    flag(pc.kernel.lineno,
+                         f"kernel `{pc.kernel.name}` takes {n_kernel} "
+                         f"positional refs but the call wires "
+                         f"{pc.num_prefetch} prefetch + "
+                         f"{len(pc.in_specs)} inputs + "
+                         f"{len(pc.out_specs)} outputs + "
+                         f"{pc.n_scratch} scratch = {want}")
+    return findings
